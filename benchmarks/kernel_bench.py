@@ -1,0 +1,57 @@
+"""Micro-benchmarks of the aggregation hot spots.
+
+Interpret-mode Pallas timings are NOT TPU timings — the meaningful
+numbers are the pure-jnp path (what a CPU host would run) and the
+derived column (ops per call, compare counts), which feed the roofline
+sanity checks.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import coalesce as co
+from repro.core.exchange import sort_with
+from repro.core.requests import make_requests
+
+
+def _timeit(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def sort_coalesce_pack():
+    rows = []
+    rng = np.random.default_rng(0)
+    for n in (1024, 8192, 32768):
+        gaps = rng.integers(1, 9, size=n)
+        lens = rng.integers(1, 6, size=n).astype(np.int32)
+        offs = (np.cumsum(gaps) + np.concatenate(
+            [[0], np.cumsum(lens)[:-1]])).astype(np.int32)
+        r = make_requests(offs, lens, capacity=n)
+        starts = co.request_starts(r)
+        perm = rng.permutation(n)
+        from repro.core.requests import RequestList
+        shuffled = RequestList(r.offsets[perm], r.lengths[perm], r.count)
+
+        f_sort = jax.jit(lambda rr, ss: sort_with(rr, ss)[0].offsets)
+        rows.append((f"kernel/sort_jnp/n{n}",
+                     _timeit(f_sort, shuffled, starts), n))
+        f_coal = jax.jit(lambda rr: co.coalesce_sorted(rr).count)
+        rows.append((f"kernel/coalesce_jnp/n{n}",
+                     _timeit(f_coal, r), n))
+        total = int(lens.sum())
+        data = jnp.arange(total, dtype=jnp.int32)
+        out_len = int(offs[-1] + lens[-1])
+        f_pack = jax.jit(lambda rr, ss, dd: co.pack_data(
+            rr, ss, dd, out_len))
+        rows.append((f"kernel/pack_jnp/n{n}",
+                     _timeit(f_pack, r, starts, data), total))
+    return rows

@@ -1,0 +1,123 @@
+"""Benchmarks reproducing the paper's tables/figures.
+
+Each function returns a list of (name, us_per_call, derived) rows.
+Two layers of evidence per figure:
+  * measured: the host-level collective I/O actually executed on scaled
+    patterns (real byte movement, exact message/request counts);
+  * modeled: the calibrated alpha-beta congestion model at the paper's
+    full scale (P = 16384, 256 nodes, 56 OSTs).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.checkpoint.host_io import HostCollectiveIO
+from repro.core import cost_model as cm
+from repro.io_patterns import (btio_pattern, e3sm_f_pattern,
+                               e3sm_g_pattern, s3d_pattern)
+
+PATTERNS = {
+    "e3sm_g": (e3sm_g_pattern, cm.e3sm_g),
+    "e3sm_f": (e3sm_f_pattern, cm.e3sm_f),
+    "btio": (lambda P: btio_pattern(P, n=64), cm.btio),
+    "s3d": (lambda P: s3d_pattern(P, n=32), cm.s3d),
+}
+
+
+def fig3_bandwidth():
+    """Fig. 3: write bandwidth, TAM vs two-phase, strong scaling.
+
+    Measured at laptop scale (16..64 ranks) + modeled at paper scale.
+    derived = TAM/two-phase bandwidth ratio (speedup).
+    """
+    rows = []
+    for pname, (gen, wl) in sorted(PATTERNS.items()):
+        for P in (16, 64):
+            reqs = gen(P)
+            io = HostCollectiveIO(n_ranks=P, n_nodes=max(P // 8, 2),
+                                  stripe_size=4096, stripe_count=4)
+            t0 = time.perf_counter()
+            t_tam = io.write(reqs, f"/tmp/bench_{pname}", method="tam",
+                             local_aggregators=max(P // 4, 4))
+            wall_tam = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            t_2ph = io.write(reqs, f"/tmp/bench_{pname}",
+                             method="twophase")
+            wall_2ph = time.perf_counter() - t0
+            rows.append((f"fig3/{pname}/P{P}/measured_tam",
+                         wall_tam * 1e6,
+                         round(t_2ph.total / max(t_tam.total, 1e-12), 2)))
+        # paper scale (modeled)
+        for P, nodes in ((4096, 64), (16384, 256)):
+            w = wl(P, nodes)
+            s = cm.speedup(w, 256)
+            bw = w.total_bytes / cm.tam_cost(w, 256).total / 2**30
+            rows.append((f"fig3/{pname}/P{P}/modeled",
+                         cm.tam_cost(w, 256).total * 1e6,
+                         round(s, 2)))
+            rows.append((f"fig3/{pname}/P{P}/tam_GiBps", bw * 0 + bw,
+                         round(bw, 2)))
+    return rows
+
+
+def fig4_7_breakdown():
+    """Figs. 4-7: timing breakdown vs P_L (intra falls, inter grows).
+
+    derived = fraction of end-to-end time in communication.
+    """
+    rows = []
+    P = 64
+    for pname, (gen, wl) in sorted(PATTERNS.items()):
+        reqs = gen(P)
+        io = HostCollectiveIO(n_ranks=P, n_nodes=8, stripe_size=4096,
+                              stripe_count=4)
+        for pl in (8, 16, 32, 64):
+            t = io.write(reqs, f"/tmp/bench_bd_{pname}", method="tam",
+                         local_aggregators=pl)
+            rows.append((f"fig4_7/{pname}/PL{pl}/intra",
+                         (t.intra_comm + t.intra_sort + t.intra_memcpy)
+                         * 1e6, round(t.coalesce_ratio, 4)))
+            rows.append((f"fig4_7/{pname}/PL{pl}/inter",
+                         (t.inter_comm + t.inter_sort) * 1e6,
+                         t.messages_at_ga))
+    return rows
+
+
+def fig2_congestion():
+    """Fig. 2: receives at the hottest global aggregator vs P."""
+    rows = []
+    for P in (1024, 4096, 16384):
+        w = cm.e3sm_f(P, max(P // 64, 1))
+        rows.append((f"fig2/receives_per_ga/2ph/P{P}", 0.0,
+                     cm.receives_per_global_aggregator(w, None)))
+        rows.append((f"fig2/receives_per_ga/tam/P{P}", 0.0,
+                     cm.receives_per_global_aggregator(w, 256)))
+    return rows
+
+
+def table1_coalesce():
+    """Table I + SV-B: request counts and coalesce ratios (measured)."""
+    rows = []
+    P = 64
+    io = HostCollectiveIO(n_ranks=P, n_nodes=8, stripe_size=1 << 16,
+                          stripe_count=2)
+    for pname, (gen, _) in sorted(PATTERNS.items()):
+        t = io.write(gen(P), f"/tmp/bench_t1_{pname}", method="tam",
+                     local_aggregators=16)
+        rows.append((f"table1/{pname}/requests_before", 0.0,
+                     t.requests_before))
+        rows.append((f"table1/{pname}/coalesce_ratio", 0.0,
+                     round(t.coalesce_ratio, 4)))
+    return rows
+
+
+def optimal_pl_sweep():
+    """SV-A: the P_L balance point (paper: 256 on Theta)."""
+    rows = []
+    for pname, (_, wl) in sorted(PATTERNS.items()):
+        w = wl(16384, 256)
+        best, cost = cm.optimal_PL(w)
+        rows.append((f"optimal_pl/{pname}", cost.total * 1e6, best))
+    return rows

@@ -1,0 +1,42 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig3]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from benchmarks import kernel_bench, paper_figures, spmd_bytes  # noqa: E402
+
+SUITES = {
+    "fig2": paper_figures.fig2_congestion,
+    "fig3": paper_figures.fig3_bandwidth,
+    "fig4_7": paper_figures.fig4_7_breakdown,
+    "table1": paper_figures.table1_coalesce,
+    "optimal_pl": paper_figures.optimal_pl_sweep,
+    "kernels": kernel_bench.sort_coalesce_pack,
+    "spmd_bytes": spmd_bytes.collective_bytes,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, fn in SUITES.items():
+        if args.only and args.only != name:
+            continue
+        for row in fn():
+            n, us, derived = row
+            print(f"{n},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

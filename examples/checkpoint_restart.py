@@ -1,0 +1,99 @@
+"""Fault tolerance demo: kill-and-recover with elastic re-mesh.
+
+1. Train a small model, checkpointing through TAM every 20 steps.
+2. Inject a host failure at step 47 (heartbeat monitor fires).
+3. Restore the latest checkpoint (step 40) and finish the run —
+   demonstrating that the checkpoint byte-space is mesh-agnostic and
+   the deterministic data pipeline replays the exact batch stream.
+4. Verify the recovered run converges to the same loss as an
+   uninterrupted control run.
+
+Run:  PYTHONPATH=src python examples/checkpoint_restart.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import CheckpointManager, HostCollectiveIO
+from repro.data import DataConfig, SyntheticTokenPipeline
+from repro.models import transformer as T
+from repro.models.config import reduced
+from repro.optim import adamw
+from repro.runtime import (HeartbeatMonitor, TrainLoop, TrainLoopConfig,
+                           plan_remesh)
+
+CKPT_DIR = "/tmp/repro_restart_demo"
+shutil.rmtree(CKPT_DIR, ignore_errors=True)
+
+cfg = reduced(configs.get("glm4_9b"))
+opt = adamw(weight_decay=0.0)
+data = SyntheticTokenPipeline(DataConfig(vocab=cfg.vocab, seq=32,
+                                         global_batch=4))
+
+
+def train_step(params, opt_state, batch):
+    loss, grads = jax.value_and_grad(T.loss_fn)(params, cfg, batch)
+    params, opt_state = opt.update(grads, opt_state, params, 1e-3)
+    return params, opt_state, loss
+
+
+train_step = jax.jit(train_step)
+io = HostCollectiveIO(n_ranks=8, n_nodes=2, stripe_size=1 << 16,
+                      stripe_count=4)
+
+params = T.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+opt_state = opt.init(params)
+
+# ---- control: uninterrupted 80 steps --------------------------------
+ctrl_p, ctrl_o = params, opt_state
+for step in range(80):
+    ctrl_p, ctrl_o, ctrl_loss = train_step(ctrl_p, ctrl_o,
+                                           jax.tree.map(jnp.asarray,
+                                                        data.batch_at(step)))
+print(f"control final loss: {float(ctrl_loss):.5f}")
+
+# ---- faulty run ------------------------------------------------------
+mon = HeartbeatMonitor(n_hosts=4, timeout_s=1e9)
+ckpt = CheckpointManager(CKPT_DIR, io, method="tam", local_aggregators=4)
+loop = TrainLoop(TrainLoopConfig(total_steps=80, checkpoint_every=20),
+                 train_step, data, ckpt, monitor=mon)
+
+
+def inject(step, loss):
+    if step == 47:
+        mon.inject_failure(2)
+
+
+try:
+    loop.run(params, opt_state, on_step=inject)
+    raise AssertionError("failure was not detected")
+except RuntimeError as e:
+    print(f"detected: {e} at latest checkpoint step {ckpt.latest_step()}")
+
+# ---- recovery: re-mesh for 3 surviving hosts and resume --------------
+plan = plan_remesh(total_devices=3 * 4, model_parallel=4,
+                   old_data_parallel=4)
+print(f"elastic plan: mesh {plan.mesh_shape}, grad_accum x{plan.grad_accum}")
+mon.revive(2)
+
+state, step0 = ckpt.restore({"params": params, "opt": opt_state})
+params2, opt2 = state["params"], state["opt"]
+loop2 = TrainLoop(TrainLoopConfig(total_steps=80, checkpoint_every=20),
+                  train_step, data, ckpt, monitor=mon)
+params2, opt2, _ = loop2.run(params2, opt2, start_step=step0)
+
+final = float(T.loss_fn(params2, cfg, jax.tree.map(
+    jnp.asarray, data.batch_at(80))))
+ctrl_final = float(T.loss_fn(ctrl_p, cfg, jax.tree.map(
+    jnp.asarray, data.batch_at(80))))
+print(f"recovered loss {final:.5f} vs control {ctrl_final:.5f}")
+assert abs(final - ctrl_final) < 0.05, "recovery diverged"
+print("OK: kill-and-recover run matches uninterrupted control")

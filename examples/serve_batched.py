@@ -1,0 +1,16 @@
+"""Serving example: prefill + batched greedy decode on a reduced gemma2
+(local/global attention + softcaps exercised on the serving path).
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "gemma2_9b", "--batch", "4",
+                "--prompt-len", "24", "--gen", "12"]
+    main()

@@ -1,0 +1,53 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (IOConfig, contiguous_layout, make_requests,
+                        make_tam_write, make_twophase_write)
+from repro.core.twophase import write_reference
+
+mesh = jax.make_mesh((2, 2, 2), ("node", "lagg", "lmem"))
+P_ranks = 8
+REQ_CAP, DATA_CAP = 8, 64
+FILE_LEN = 256
+layout = contiguous_layout(FILE_LEN, 2)
+
+rng = np.random.default_rng(0)
+# build non-overlapping random requests: partition file into P*REQ_CAP slots
+all_off, all_len, all_cnt, all_data = [], [], [], []
+slots = rng.permutation(FILE_LEN // 8)  # 32 slots of 8 elems
+slots_per_rank = len(slots) // P_ranks
+for p in range(P_ranks):
+    mine = np.sort(slots[p * slots_per_rank:(p + 1) * slots_per_rank])
+    offs = (mine * 8).astype(np.int32)
+    lens = rng.integers(1, 9, size=len(mine)).astype(np.int32)
+    n = len(offs)
+    o = np.full(REQ_CAP, 2**31 - 1, np.int32); o[:n] = offs
+    l = np.zeros(REQ_CAP, np.int32); l[:n] = lens
+    d = np.zeros(DATA_CAP, np.int32)
+    total = lens.sum()
+    d[:total] = rng.integers(1, 1000, size=total)
+    all_off.append(o); all_len.append(l); all_cnt.append(n); all_data.append(d)
+
+offsets = jnp.asarray(np.stack(all_off))
+lengths = jnp.asarray(np.stack(all_len))
+counts = jnp.asarray(np.array(all_cnt, np.int32))
+data = jnp.asarray(np.stack(all_data))
+
+ref = write_reference(layout, offsets, lengths, counts, data)
+
+cfg = IOConfig(req_cap=32, data_cap=DATA_CAP, coalesce_cap=32)
+tp = jax.jit(make_twophase_write(mesh, layout, cfg))
+file_tp, stats_tp = tp(offsets, lengths, counts, data)
+file_tp = np.asarray(file_tp).reshape(-1)
+print("two-phase match:", np.array_equal(file_tp, ref), dict(jax.tree.map(np.asarray, stats_tp)))
+
+tam = jax.jit(make_tam_write(mesh, layout, cfg, use_kernels=True))
+file_tam, stats_tam = tam(offsets, lengths, counts, data)
+file_tam = np.asarray(file_tam).reshape(-1)
+print("tam match:", np.array_equal(file_tam, ref), dict(jax.tree.map(np.asarray, stats_tam)))
+if not np.array_equal(file_tam, ref):
+    bad = np.nonzero(file_tam != ref)[0]
+    print("mismatch idx:", bad[:20], file_tam[bad[:10]], ref[bad[:10]])

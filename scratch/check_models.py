@@ -1,0 +1,36 @@
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models.config import reduced
+from repro.models import transformer as T
+
+B, S = 2, 16
+rng = jax.random.PRNGKey(0)
+
+for arch in configs.ARCHS:
+    cfg = reduced(configs.get(arch))
+    params = T.init_params(rng, cfg, dtype=jnp.float32)
+    batch = {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab),
+             "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab)}
+    if cfg.frontend == "vision":
+        batch["prefix_embeds"] = jnp.ones((B, cfg.num_prefix_embeds, cfg.d_model), jnp.float32) * 0.01
+        batch["labels"] = jax.random.randint(rng, (B, S + cfg.num_prefix_embeds - cfg.num_prefix_embeds), 0, cfg.vocab)
+    if cfg.enc_dec:
+        batch["frames"] = jnp.ones((B, cfg.enc_seq, cfg.d_model), jnp.float32) * 0.01
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p: T.loss_fn(p, cfg, batch)))(params)
+    gn = jax.tree.reduce(lambda a, b: a + b,
+                         jax.tree.map(lambda g: jnp.sum(jnp.abs(g)), grads))
+    assert np.isfinite(float(loss)), arch
+    assert np.isfinite(float(gn)) and float(gn) > 0, arch
+
+    # prefill + decode
+    logits_p, state = jax.jit(lambda p, b: T.prefill(p, cfg, b))(params, batch)
+    logits_d, state2 = jax.jit(lambda p, s, t: T.decode_step(p, cfg, s, t))(
+        params, state, batch["tokens"][:, 0])
+    assert logits_d.shape == (B, cfg.vocab), (arch, logits_d.shape)
+    assert np.isfinite(np.asarray(logits_d, np.float32)).all(), arch
+    print(f"{arch:20s} loss={float(loss):.3f} decode_ok pos={int(state2.pos)}")
+print("ALL MODELS OK")

@@ -1,0 +1,83 @@
+"""Inject the final roofline tables + perf summary into EXPERIMENTS.md."""
+import json
+from pathlib import Path
+
+ARCH_ORDER = ["yi_34b", "gemma2_9b", "qwen15_32b", "glm4_9b",
+              "whisper_tiny", "jamba_15_large", "llama4_maverick",
+              "kimi_k2", "mamba2_27b", "llava_next_34b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(d):
+    out = {}
+    p = Path(d)
+    if not p.exists():
+        return out
+    for f in p.glob("*.json"):
+        r = json.loads(f.read_text())
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def table(rf, title):
+    lines = [f"**{title}**", "",
+             "| arch | shape | mesh | compute s | memory s | coll s "
+             "| dominant | useful | frac |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            for m in ("single", "multi"):
+                r = rf.get((a, s, m))
+                if not r or r.get("status") != "ok":
+                    continue
+                lines.append(
+                    f"| {a} | {s} | {m} | {r['t_compute_s']:.2e} "
+                    f"| {r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} "
+                    f"| {r['dominant']} | {r['useful_ratio']:.2f} "
+                    f"| {r['roofline_fraction']:.4f} |")
+    return "\n".join(lines)
+
+
+def perf_summary(base, opt):
+    lines = ["### Optimized vs baseline, all cells", "",
+             "| cell | frac base | frac opt | gain | dominant (opt) | what moved |",
+             "|---|---|---|---|---|---|"]
+    gains = []
+    for key, rb in sorted(base.items()):
+        ro = opt.get(key)
+        if not ro or rb.get("status") != "ok" or ro.get("status") != "ok":
+            continue
+        fb, fo = rb["roofline_fraction"], ro["roofline_fraction"]
+        gain = fo / max(fb, 1e-30)
+        gains.append(gain)
+        what = []
+        if ro["coll_bytes_per_dev"] < 0.7 * rb["coll_bytes_per_dev"]:
+            what.append(f"coll /{rb['coll_bytes_per_dev']/max(ro['coll_bytes_per_dev'],1):.1f}")
+        if ro["hlo_bytes_per_dev"] < 0.7 * rb["hlo_bytes_per_dev"]:
+            what.append(f"mem /{rb['hlo_bytes_per_dev']/max(ro['hlo_bytes_per_dev'],1):.1f}")
+        lines.append(f"| {key[0]}/{key[1]}/{key[2]} | {fb:.4f} | {fo:.4f} "
+                     f"| {gain:.1f}x | {ro['dominant']} | {', '.join(what) or '—'} |")
+    if gains:
+        import statistics
+        lines.append("")
+        lines.append(f"Geo-mean roofline-fraction gain across "
+                     f"{len(gains)} cells: "
+                     f"**{statistics.geometric_mean(gains):.2f}x**; "
+                     f"max {max(gains):.1f}x.")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    base = load("results/roofline_baseline")
+    opt = load("results/roofline_opt")
+    doc = Path("EXPERIMENTS.md").read_text()
+    tables = (table(base, "Paper-faithful baseline sharding "
+                    "(activation-TP, rolled decode, f32 flash)")
+              + "\n\n" + table(opt, "Beyond-paper optimized "
+                               "(Ulysses seq-sharding, chunk-4096 bf16 "
+                               "flash, unrolled decode)"))
+    doc = doc.replace("<!-- ROOFLINE_TABLES -->", tables)
+    doc = doc.replace("<!-- PERF_SUMMARY -->", perf_summary(base, opt))
+    Path("EXPERIMENTS.md").write_text(doc)
+    print("tables injected:", len(base), "baseline cells,", len(opt),
+          "optimized cells")

@@ -1,0 +1,77 @@
+"""Render EXPERIMENTS.md tables from results/dryrun + results/roofline."""
+import json
+import sys
+from pathlib import Path
+
+ARCH_ORDER = ["yi_34b", "gemma2_9b", "qwen15_32b", "glm4_9b",
+              "whisper_tiny", "jamba_15_large", "llama4_maverick",
+              "kimi_k2", "mamba2_27b", "llava_next_34b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(d):
+    out = {}
+    for f in Path(d).glob("*.json"):
+        r = json.loads(f.read_text())
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def dryrun_table(dr):
+    lines = ["| arch | shape | mesh | devices | params | HLO GFLOPs/dev (raw) | arg GiB/dev | temp GiB/dev | compile s |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            for m in ("single", "multi"):
+                r = dr.get((a, s, m))
+                if not r:
+                    continue
+                if r["status"] == "skipped":
+                    if m == "single":
+                        lines.append(f"| {a} | {s} | both | — | — | SKIPPED (full attention; DESIGN.md §5) | | | |")
+                    continue
+                n = r["devices"]
+                mem = r["memory"]
+                lines.append(
+                    f"| {a} | {s} | {m} | {n} | {r['params']/1e9:.1f}B "
+                    f"| {r['flops']/1e9:.0f} "
+                    f"| {mem['argument_bytes']/n/2**30:.2f} "
+                    f"| {mem['temp_bytes']/n/2**30:.2f} "
+                    f"| {r['compile_s']} |")
+    return "\n".join(lines)
+
+
+def roofline_table(rf):
+    lines = ["| arch | shape | mesh | compute s | memory s | coll s | dominant | useful | roofline frac |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    worst = []
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            for m in ("single", "multi"):
+                r = rf.get((a, s, m))
+                if not r or r.get("status") != "ok":
+                    continue
+                lines.append(
+                    f"| {a} | {s} | {m} | {r['t_compute_s']:.2e} "
+                    f"| {r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} "
+                    f"| {r['dominant']} | {r['useful_ratio']:.2f} "
+                    f"| {r['roofline_fraction']:.4f} |")
+                worst.append((r["roofline_fraction"], a, s, m,
+                              r["dominant"]))
+    worst.sort()
+    return "\n".join(lines), worst
+
+
+if __name__ == "__main__":
+    dr = load("results/dryrun")
+    rf = load("results/roofline")
+    print("## Dry-run table\n")
+    print(dryrun_table(dr))
+    print("\n## Roofline table\n")
+    t, worst = roofline_table(rf)
+    print(t)
+    print("\nworst fractions:", worst[:6])
+    coll = [(r["t_collective_s"] / max(r["t_compute_s"] + r["t_memory_s"], 1e-30), k)
+            for k, r in rf.items() if r.get("status") == "ok"]
+    coll.sort(reverse=True)
+    print("most collective-bound:", coll[:6])

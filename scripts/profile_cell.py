@@ -1,0 +1,40 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import input_specs, plan_for_cell
+from repro.launch import shapes as shp
+from repro.launch.hlo_analysis import HloCostModel, top_collectives
+
+arch, shape, mesh_kind = sys.argv[1], sys.argv[2], sys.argv[3]
+mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+cell = shp.shape(shape)
+plan = plan_for_cell(mesh, cell)
+fn, arg_shapes, arg_specs, out_specs = input_specs(arch, cell, plan)
+def sh(t):
+    f, td = jax.tree.flatten(t, is_leaf=lambda x: isinstance(x, PartitionSpec))
+    return td.unflatten([NamedSharding(mesh, s) for s in f])
+compiled = jax.jit(fn, in_shardings=sh(arg_specs), out_shardings=sh(out_specs)).lower(*arg_shapes).compile()
+hcm = HloCostModel(compiled.as_text())
+t = hcm.total()
+print(f"flops/dev {t.flops:.3e}  bytes/dev {t.bytes:.3e}  coll/dev {sum(t.coll_bytes.values()):.3e}")
+print("counts:", t.coll_count)
+print("top collectives (kind, shape, group, GiB):")
+for (kind, shape_, n), wire in top_collectives(t, 14):
+    print(f"  {kind:20s} {shape_:28s} g={n:3d}  {wire/2**30:9.3f} GiB")
+
+print("top result-bytes (op, shape, GiB):")
+for (op, shape_), v in sorted(t.bytes_detail.items(), key=lambda kv: -kv[1])[:14]:
+    print(f"  {op:16s} {shape_:32s} {v/2**30:10.2f} GiB")
+
+from collections import Counter
+cnt = Counter()
+tot = {}
+for kind, shape_, n, wire in t.coll_detail:
+    cnt[(kind, shape_, n)] += 1
+    tot[(kind, shape_, n)] = tot.get((kind, shape_, n), 0) + wire
+print("counts for top keys:")
+for k, w in sorted(tot.items(), key=lambda kv: -kv[1])[:6]:
+    print("  ", k, "n_records:", cnt[k], f"{w/2**30:.1f} GiB")

@@ -1,0 +1,167 @@
+"""Checkpoint save/restore through TAM collective I/O.
+
+Layout: the train state pytree is serialized into one contiguous byte
+space ("the file"): leaves in deterministic tree order, each leaf padded
+to 256-B alignment. A manifest (JSON) records leaf paths, dtypes,
+shapes, offsets. Each simulated host contributes its shards of every
+leaf as (offset, length, payload) requests — exactly an MPI collective
+write with an MPI file view — and ``HostCollectiveIO`` executes it with
+the TAM or two-phase schedule.
+
+Restore reads the striped segments back, reassembles the byte space,
+and device_puts each leaf with the target sharding — which may belong
+to a DIFFERENT mesh (elastic restart; see runtime.elastic).
+"""
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.checkpoint.host_io import HostCollectiveIO, IOTimings
+
+ALIGN = 256
+
+
+def _leaf_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
+
+
+def build_manifest(tree, step: int = 0) -> dict:
+    entries = []
+    offset = 0
+    for path, leaf in _leaf_paths(tree):
+        nbytes = int(np.prod(leaf.shape)) * leaf.dtype.itemsize \
+            if leaf.shape else leaf.dtype.itemsize
+        entries.append({"path": path, "shape": list(leaf.shape),
+                        "dtype": str(leaf.dtype), "offset": offset,
+                        "nbytes": int(nbytes)})
+        offset += -(-nbytes // ALIGN) * ALIGN
+    return {"step": step, "file_len": offset, "leaves": entries}
+
+
+def _rank_requests(tree, manifest, n_ranks: int):
+    """Shard every leaf round-robin by rows across ranks -> per-rank
+    (offsets, lengths, payload) request lists, offset-sorted."""
+    reqs = [([], [], []) for _ in range(n_ranks)]
+    for entry, (path, leaf) in zip(manifest["leaves"], _leaf_paths(tree)):
+        arr = np.asarray(leaf)
+        flat = arr.reshape(-1).view(np.uint8)
+        chunk = max(len(flat) // n_ranks, 1)
+        # each rank owns a contiguous span of the leaf's bytes
+        for r in range(n_ranks):
+            lo = min(r * chunk, len(flat))
+            hi = len(flat) if r == n_ranks - 1 else min((r + 1) * chunk,
+                                                        len(flat))
+            if hi <= lo:
+                continue
+            reqs[r][0].append(entry["offset"] + lo)
+            reqs[r][1].append(hi - lo)
+            reqs[r][2].append(flat[lo:hi])
+    out = []
+    for o, l, d in reqs:
+        if o:
+            oo = np.asarray(o, np.int64)
+            ll = np.asarray(l, np.int64)
+            dd = np.concatenate(d)
+            order = np.argsort(oo, kind="stable")
+            starts = np.concatenate([[0], np.cumsum(ll)[:-1]])
+            dd = np.concatenate([dd[starts[i]:starts[i] + ll[i]]
+                                 for i in order])
+            out.append((oo[order], ll[order], dd))
+        else:
+            out.append((np.zeros(0, np.int64), np.zeros(0, np.int64),
+                        np.zeros(0, np.uint8)))
+    return out
+
+
+def save_checkpoint(tree, path: str | Path, *, step: int = 0,
+                    io: HostCollectiveIO | None = None,
+                    method: str = "tam",
+                    local_aggregators: int | None = None
+                    ) -> tuple[dict, IOTimings]:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    io = io or HostCollectiveIO(n_ranks=8, n_nodes=2, stripe_size=1 << 20,
+                                stripe_count=4)
+    manifest = build_manifest(tree, step)
+    reqs = _rank_requests(tree, manifest, io.n_ranks)
+    timings = io.write(reqs, str(path), method=method,
+                       local_aggregators=local_aggregators)
+    manifest["stripe_size"] = io.stripe_size
+    manifest["stripe_count"] = io.stripe_count
+    (path.parent / (path.name + ".manifest.json")).write_text(
+        json.dumps(manifest))
+    return manifest, timings
+
+
+def restore_checkpoint(path: str | Path, like_tree,
+                       shardings=None):
+    """Rebuild the pytree (optionally device_put with ``shardings`` —
+    which may target a different mesh than the one that saved it)."""
+    path = Path(path)
+    manifest = json.loads(
+        (path.parent / (path.name + ".manifest.json")).read_text())
+    io = HostCollectiveIO(n_ranks=1, n_nodes=1,
+                          stripe_size=manifest["stripe_size"],
+                          stripe_count=manifest["stripe_count"])
+    blob = io.read_file(str(path), manifest["file_len"])
+    flat, treedef = jax.tree_util.tree_flatten(like_tree)
+    leaves = []
+    for entry, like in zip(manifest["leaves"], flat):
+        raw = blob[entry["offset"]:entry["offset"] + entry["nbytes"]]
+        arr = raw.view(np.dtype(entry["dtype"])).reshape(entry["shape"])
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), tree, shardings)
+    return tree, manifest["step"]
+
+
+@dataclass
+class CheckpointManager:
+    """Rolling checkpoints + restart discovery."""
+
+    directory: str | Path
+    io: HostCollectiveIO
+    method: str = "tam"
+    local_aggregators: int | None = None
+    keep: int = 3
+
+    def save(self, tree, step: int) -> IOTimings:
+        d = Path(self.directory)
+        d.mkdir(parents=True, exist_ok=True)
+        _, t = save_checkpoint(
+            tree, d / f"ckpt_{step:08d}", step=step, io=self.io,
+            method=self.method, local_aggregators=self.local_aggregators)
+        self._gc()
+        return t
+
+    def latest_step(self) -> int | None:
+        d = Path(self.directory)
+        steps = sorted(int(p.name[5:13]) for p in
+                       d.glob("ckpt_*.manifest.json"))
+        return steps[-1] if steps else None
+
+    def restore(self, like_tree, step: int | None = None, shardings=None):
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        return restore_checkpoint(
+            Path(self.directory) / f"ckpt_{step:08d}", like_tree,
+            shardings)
+
+    def _gc(self):
+        d = Path(self.directory)
+        manifests = sorted(d.glob("ckpt_*.manifest.json"))
+        for old in manifests[:-self.keep]:
+            stem = old.name.replace(".manifest.json", "")
+            for seg in d.glob(stem + ".seg*"):
+                seg.unlink()
+            old.unlink()

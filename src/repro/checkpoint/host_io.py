@@ -1,0 +1,254 @@
+"""Host-level collective I/O: the literal TAM reproduction.
+
+On a real TPU fleet, checkpoint bytes leave through the hosts. This
+module implements BOTH collective-write schedules over a set of
+simulated "ranks" placed on "nodes":
+
+* two-phase: every rank's (offset, length, payload) requests go straight
+  to the global aggregator owning the stripe (all-to-many);
+* TAM: ranks aggregate to P_L local aggregators inside their node
+  (merge-sort + coalesce, numpy), then only local aggregators talk to
+  the global aggregators.
+
+Data movement is real (numpy), producing byte-identical files for both
+schedules; *time* is modeled with the alpha-beta congestion machine from
+``core.cost_model`` applied to the actual per-phase message sizes and
+counts — receivers serialize incoming messages, which is exactly the
+contention TAM removes (paper Fig. 2). This gives the Fig. 3-7
+reproductions their x-axes without a 16k-core Cray.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.cost_model import Machine
+
+
+@dataclass
+class IOTimings:
+    intra_comm: float = 0.0
+    intra_sort: float = 0.0
+    intra_memcpy: float = 0.0
+    inter_comm: float = 0.0
+    inter_sort: float = 0.0
+    io: float = 0.0
+    messages_at_ga: int = 0        # max receives at one global aggregator
+    requests_before: int = 0
+    requests_after: int = 0
+
+    @property
+    def comm(self) -> float:
+        return self.intra_comm + self.inter_comm
+
+    @property
+    def total(self) -> float:
+        return (self.intra_comm + self.intra_sort + self.intra_memcpy
+                + self.inter_comm + self.inter_sort + self.io)
+
+    @property
+    def coalesce_ratio(self) -> float:
+        return self.requests_after / max(self.requests_before, 1)
+
+
+PAIR_BYTES = 8  # offset + length metadata per request
+
+
+def _merge_coalesce(reqs: list[tuple[np.ndarray, np.ndarray, np.ndarray]]):
+    """Merge per-sender (offsets, lengths, payload), sort, coalesce.
+
+    Returns (offsets, lengths, payload) with payload packed in sorted
+    offset order (contiguous per coalesced run). Comparisons counted for
+    the sort-time model.
+    """
+    offs = np.concatenate([r[0] for r in reqs]) if reqs else np.zeros(0, np.int64)
+    lens = np.concatenate([r[1] for r in reqs]) if reqs else np.zeros(0, np.int64)
+    data = np.concatenate([r[2] for r in reqs]) if reqs else np.zeros(0, np.uint8)
+    if offs.size == 0:
+        return offs, lens, data, 0
+    order = np.argsort(offs, kind="stable")
+    offs, lens = offs[order], lens[order]
+    starts = np.concatenate([[0], np.cumsum(
+        np.concatenate([r[1] for r in reqs]))[:-1]])
+    packed = np.concatenate([
+        data[starts[i]:starts[i] + lens_orig]
+        for i, lens_orig in zip(order, lens)]) if data.size else data
+    # coalesce adjacent contiguous runs
+    boundary = np.ones(offs.size, bool)
+    boundary[1:] = offs[1:] != offs[:-1] + lens[:-1]
+    run = np.cumsum(boundary) - 1
+    out_offs = offs[boundary]
+    out_lens = np.bincount(run, weights=lens).astype(np.int64)
+    n_cmp = int(offs.size * max(np.log2(max(len(reqs), 2)), 1))
+    return out_offs, out_lens, packed, n_cmp
+
+
+class HostCollectiveIO:
+    """Collective write/read over simulated ranks -> striped file segments.
+
+    ranks are grouped into ``n_nodes`` nodes; ``stripe_count`` global
+    aggregators each own stripes ``s % stripe_count`` and write one file
+    segment (``<path>.seg<g>``); a manifest maps stripes back.
+    """
+
+    def __init__(self, n_ranks: int, n_nodes: int, stripe_size: int,
+                 stripe_count: int, machine: Machine | None = None):
+        assert n_ranks % n_nodes == 0
+        self.n_ranks, self.n_nodes = n_ranks, n_nodes
+        self.stripe_size, self.stripe_count = stripe_size, stripe_count
+        self.machine = machine or Machine()
+
+    # ------------------------------------------------------------------
+    def _split_stripes(self, offs, lens, data):
+        """Split requests at stripe boundaries (ROMIO file-domain split)."""
+        out_o, out_l = [], []
+        for o, l in zip(offs, lens):
+            while l > 0:
+                within = o % self.stripe_size
+                take = min(l, self.stripe_size - within)
+                out_o.append(o)
+                out_l.append(take)
+                o += take
+                l -= take
+        return (np.asarray(out_o, np.int64), np.asarray(out_l, np.int64),
+                data)
+
+    def _owner(self, offs):
+        return (offs // self.stripe_size) % self.stripe_count
+
+    # ------------------------------------------------------------------
+    def write(self, rank_requests, path: str, method: str = "tam",
+              local_aggregators: int | None = None,
+              failed_aggregators: set[int] | None = None) -> IOTimings:
+        """rank_requests: list of (offsets[int64], lengths[int64],
+        payload[uint8]) per rank, offsets element=byte units here.
+        method: "tam" | "twophase". Returns IOTimings; writes
+        ``<path>.seg<g>`` files.
+
+        failed_aggregators: ranks that must not serve as local
+        aggregators (straggler/failure mitigation): each group falls
+        back to its next healthy member — output is unchanged, the
+        reassignment only costs one extra intra-node hop in the model.
+        """
+        failed_aggregators = failed_aggregators or set()
+        m = self.machine
+        t = IOTimings()
+        P, nodes = self.n_ranks, self.n_nodes
+        q = P // nodes
+        split = [self._split_stripes(*r) for r in rank_requests]
+        t.requests_before = sum(s[0].size for s in split)
+
+        if method == "twophase":
+            per_la = split                      # every rank speaks for itself
+            la_of_rank = list(range(P))
+            P_L = P
+        else:
+            P_L = local_aggregators or nodes * 4
+            assert P_L % nodes == 0
+            c = P_L // nodes                    # local aggs per node
+            per_la = []
+            for node in range(nodes):
+                node_ranks = range(node * q, (node + 1) * q)
+                groups = np.array_split(np.array(list(node_ranks)), c)
+                for g in groups:
+                    # backup-aggregator selection: default LA = first
+                    # rank of the group (paper's policy); skip failed
+                    la = next((r for r in g
+                               if r not in failed_aggregators), None)
+                    if la is None and len(g):
+                        raise RuntimeError(
+                            f"no healthy aggregator in group {list(g)}")
+                    reassigned = bool(len(g)) and \
+                        int(g[0]) in failed_aggregators
+                    merged = _merge_coalesce([split[r] for r in g])
+                    offs, lens, packed, n_cmp = merged
+                    # coalescing may fuse runs ACROSS stripe boundaries;
+                    # re-split so each request has exactly one owner
+                    # (ROMIO splits at file-domain boundaries the same way)
+                    offs, lens, packed = self._split_stripes(
+                        offs, lens, packed)
+                    per_la.append((offs, lens, packed))
+                    # intra-node timing: many-to-one receives + sort + copy
+                    bytes_in = sum(int(split[r][1].sum()) +
+                                   split[r][0].size * PAIR_BYTES for r in g)
+                    reassign_penalty = m.alpha_intra if reassigned else 0.0
+                    t.intra_comm = max(
+                        t.intra_comm,
+                        m.alpha_intra * len(g) + m.beta_intra * bytes_in
+                        + reassign_penalty)
+                    t.intra_sort = max(t.intra_sort, m.sort_per_cmp * n_cmp)
+                    t.intra_memcpy = max(t.intra_memcpy,
+                                         bytes_in / m.memcpy_bw)
+        t.requests_after = sum(la[0].size for la in per_la)
+
+        # ---- inter-node: local aggregators -> global aggregators -------
+        ga_inbox: list[list] = [[] for _ in range(self.stripe_count)]
+        ga_msgs = np.zeros(self.stripe_count, np.int64)
+        ga_bytes = np.zeros(self.stripe_count, np.int64)
+        for offs, lens, packed in per_la:
+            if offs.size == 0:
+                continue
+            owner = self._owner(offs)
+            starts = np.concatenate([[0], np.cumsum(lens)[:-1]])
+            for g in range(self.stripe_count):
+                sel = owner == g
+                if not sel.any():
+                    continue
+                po = offs[sel]
+                pl = lens[sel]
+                pd = np.concatenate([packed[s:s + l] for s, l in
+                                     zip(starts[sel], pl)])
+                ga_inbox[g].append((po, pl, pd))
+                ga_msgs[g] += 1
+                ga_bytes[g] += int(pl.sum()) + po.size * PAIR_BYTES
+        t.messages_at_ga = int(ga_msgs.max(initial=0))
+        t.inter_comm = float(
+            (m.alpha_inter * ga_msgs + m.beta_inter * ga_bytes).max(initial=0))
+
+        # ---- I/O step: sort + write segments ---------------------------
+        total_bytes = 0
+        for g in range(self.stripe_count):
+            offs, lens, packed, n_cmp = _merge_coalesce(ga_inbox[g])
+            t.inter_sort = max(t.inter_sort, m.sort_per_cmp * n_cmp)
+            seg = _domain_image(offs, lens, packed, g, self.stripe_size,
+                                self.stripe_count)
+            with open(f"{path}.seg{g}", "wb") as f:
+                f.write(seg.tobytes())
+            total_bytes += seg.size
+        t.io = total_bytes / m.io_bw
+        return t
+
+    # ------------------------------------------------------------------
+    def read_file(self, path: str, file_len: int) -> np.ndarray:
+        """Reassemble the full byte-space from the striped segments."""
+        out = np.zeros(file_len, np.uint8)
+        for g in range(self.stripe_count):
+            with open(f"{path}.seg{g}", "rb") as f:
+                seg = np.frombuffer(f.read(), np.uint8)
+            # segment g holds stripes g, g+SC, g+2SC, ... concatenated
+            n_str = seg.size // self.stripe_size
+            for r in range(n_str):
+                fo = (r * self.stripe_count + g) * self.stripe_size
+                if fo >= file_len:
+                    break
+                take = min(self.stripe_size, file_len - fo)
+                out[fo:fo + take] = seg[r * self.stripe_size:
+                                        r * self.stripe_size + take]
+        return out
+
+
+def _domain_image(offs, lens, packed, g, stripe_size, stripe_count):
+    """Dense image of aggregator g's file domain (its stripes, in round
+    order), mirroring core.domains.to_domain_local."""
+    if offs.size == 0:
+        return np.zeros(0, np.uint8)
+    rounds = (offs // stripe_size) // stripe_count
+    n_rounds = int(rounds.max()) + 1
+    img = np.zeros(n_rounds * stripe_size, np.uint8)
+    starts = np.concatenate([[0], np.cumsum(lens)[:-1]])
+    for o, l, s in zip(offs, lens, starts):
+        local = (o // stripe_size) // stripe_count * stripe_size + \
+            o % stripe_size
+        img[local:local + l] = packed[s:s + l]
+    return img

@@ -1,0 +1,17 @@
+"""TAM core: two-layer request aggregation for collective I/O in JAX."""
+from repro.core.requests import (  # noqa: F401
+    ELEM_BYTES, PAD_OFFSET, RequestList, empty_requests, make_requests,
+    split_at_stripes,
+)
+from repro.core.domains import FileLayout, contiguous_layout  # noqa: F401
+from repro.core.coalesce import (  # noqa: F401
+    aggregate, coalesce_sorted, merge_sorted, sort_requests,
+)
+from repro.core.twophase import IOConfig, make_twophase_write  # noqa: F401
+from repro.core.tam import make_tam_write  # noqa: F401
+from repro.core.cost_model import (  # noqa: F401
+    Machine, Workload, optimal_PL, tam_cost, twophase_cost,
+)
+from repro.core.hierarchical import (  # noqa: F401
+    compressed_psum, two_layer_all_to_all, two_layer_psum,
+)

@@ -1,0 +1,125 @@
+"""Request model for collective I/O.
+
+An I/O request list is the JAX analogue of ROMIO's flattened MPI file
+view: a list of (file offset, length) pairs, sorted in monotonically
+nondecreasing offset order per rank (required by MPI_File_write_all and
+relied upon by the paper's heap merge-sort).
+
+XLA requires static shapes, so request lists are fixed-capacity arrays
+with a ``count`` scalar; unused slots are padded with ``PAD_OFFSET``
+(which sorts to the end) and zero length.
+
+Units: offsets and lengths are in ELEMENTS (4-byte words), not bytes.
+TPU Pallas has no native int64, so offsets are int32 — one "file" (a
+serialized checkpoint byte-space) addresses up to 2^31 elements = 8 GiB.
+Larger paper-scale patterns (up to 200 GiB) are handled by the analytical
+cost model plus scaled empirical runs (see DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ELEM_BYTES = 4  # element = one 4-byte word
+PAD_OFFSET = np.int32(2**31 - 1)
+
+
+class RequestList(NamedTuple):
+    """Fixed-capacity list of (offset, length) pairs, offset-sorted.
+
+    offsets: int32[cap] — element offsets into the file; PAD_OFFSET pad.
+    lengths: int32[cap] — element counts; 0 for padding slots.
+    count:   int32 scalar — number of valid leading entries.
+    """
+
+    offsets: jax.Array
+    lengths: jax.Array
+    count: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        return self.offsets.shape[-1]
+
+    def valid_mask(self) -> jax.Array:
+        return jnp.arange(self.capacity, dtype=jnp.int32) < self.count
+
+    def total_elems(self) -> jax.Array:
+        return jnp.sum(self.lengths, dtype=jnp.int32)
+
+
+def make_requests(offsets, lengths, capacity: int | None = None) -> RequestList:
+    """Build a RequestList from (possibly shorter) offset/length arrays."""
+    offsets = jnp.asarray(offsets, dtype=jnp.int32)
+    lengths = jnp.asarray(lengths, dtype=jnp.int32)
+    n = offsets.shape[0]
+    cap = capacity if capacity is not None else n
+    if cap < n:
+        raise ValueError(f"capacity {cap} < number of requests {n}")
+    off = jnp.full((cap,), PAD_OFFSET, dtype=jnp.int32).at[:n].set(offsets)
+    ln = jnp.zeros((cap,), dtype=jnp.int32).at[:n].set(lengths)
+    return RequestList(off, ln, jnp.int32(n))
+
+
+def empty_requests(capacity: int) -> RequestList:
+    return RequestList(
+        jnp.full((capacity,), PAD_OFFSET, dtype=jnp.int32),
+        jnp.zeros((capacity,), dtype=jnp.int32),
+        jnp.int32(0),
+    )
+
+
+def is_sorted(r: RequestList) -> jax.Array:
+    """True if valid entries are in nondecreasing offset order."""
+    off = jnp.where(r.valid_mask(), r.offsets, PAD_OFFSET)
+    return jnp.all(off[:-1] <= off[1:])
+
+
+def mask_invalid(r: RequestList) -> RequestList:
+    """Force padding convention on all slots >= count."""
+    m = r.valid_mask()
+    return RequestList(
+        jnp.where(m, r.offsets, PAD_OFFSET),
+        jnp.where(m, r.lengths, 0),
+        r.count,
+    )
+
+
+def split_at_stripes(r: RequestList, stripe_size: int, max_spans: int) -> RequestList:
+    """Split every request at stripe boundaries.
+
+    After splitting, each request lies entirely within one stripe, which
+    is what lets a request be routed to exactly one global aggregator
+    (ROMIO splits requests across file-domain boundaries the same way).
+    Each input request may span at most ``max_spans`` stripes; output
+    capacity is cap * max_spans.
+    """
+    cap = r.capacity
+    o = r.offsets.astype(jnp.int32)
+    l = r.lengths
+    # span j of request i covers [max(o, (s0+j)*S), min(o+l, (s0+j+1)*S))
+    s0 = o // stripe_size
+    j = jnp.arange(max_spans, dtype=jnp.int32)[None, :]
+    lo = jnp.maximum(o[:, None], (s0[:, None] + j) * stripe_size)
+    hi = jnp.minimum((o + l)[:, None], (s0[:, None] + j + 1) * stripe_size)
+    ln = jnp.maximum(hi - lo, 0)
+    valid = (ln > 0) & r.valid_mask()[:, None]
+    off_flat = jnp.where(valid, lo, PAD_OFFSET).reshape(-1)
+    len_flat = jnp.where(valid, ln, 0).reshape(-1)
+    # compact: stable sort by (invalid, original order) keeps offset order,
+    # since spans are generated in nondecreasing offset order already.
+    key = jnp.where(len_flat > 0, 0, 1).astype(jnp.int32)
+    order = jnp.argsort(key, stable=True)
+    return RequestList(
+        off_flat[order],
+        len_flat[order],
+        jnp.sum(valid, dtype=jnp.int32),
+    )
+
+
+def to_numpy(r: RequestList) -> tuple[np.ndarray, np.ndarray]:
+    """Return the valid (offsets, lengths) as host numpy arrays."""
+    n = int(r.count)
+    return np.asarray(r.offsets[:n]), np.asarray(r.lengths[:n])

@@ -1,0 +1,183 @@
+"""TAM — the two-layer aggregation method (the paper's contribution).
+
+Collective write in three steps:
+
+1. **Intra-node aggregation** (fast axis ``lmem``): ranks within each
+   local-aggregator group ship requests + payload to the group's local
+   aggregator; the aggregator merge-sorts the offset-length pairs,
+   coalesces contiguous runs, and repacks payloads so each coalesced run
+   is one contiguous span. All node groups run concurrently; nothing
+   crosses the slow axis.
+2. **Inter-node aggregation** (slow axis ``node``): only local
+   aggregators participate. Coalesced metadata (capacity ``coalesce_cap``
+   << lmem * req_cap for patterns that coalesce) + repacked payload are
+   routed to the owning global aggregator via all_to_all; ``P_L/P_G``
+   incoming buckets per aggregator instead of ``P/P_G``.
+3. **I/O step**: identical to two-phase — the global aggregator
+   merge-sorts and packs its contiguous file domain.
+
+Two-phase I/O is the degenerate configuration lmem == 1 and
+coalesce_cap == req_cap (P_L == P): stage 1 becomes the identity.
+
+SPMD note: every ``lmem`` slot redundantly executes stage 2 on replicated
+aggregates (SPMD has no "idle rank"); the HLO slow-axis collective is
+still the coalesced size, which is what the roofline reads. The
+host-level path models the true per-endpoint congestion.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import coalesce as co
+from repro.core.domains import FileLayout
+from repro.core.exchange import bucket_by_dest, flatten_buckets, repack_sorted, sort_with
+from repro.core.requests import RequestList, mask_invalid
+from repro.core.twophase import IOConfig
+
+shard_map = jax.shard_map
+
+
+def _intra_node_aggregate(cfg: IOConfig, r: RequestList, data: jax.Array,
+                          use_kernels: bool = False):
+    """Stage 1: gather over ``lmem``, merge-sort, coalesce, repack.
+
+    Returns (coalesced requests [coalesce_cap], repacked payload
+    [lmem * data_cap], pre/post request counts for stats).
+    """
+    _, _, lmem = cfg.axis_names
+    g = partial(lax.all_gather, axis_name=lmem, axis=0, tiled=False)
+    all_off, all_len, all_cnt, all_data = (g(r.offsets), g(r.lengths),
+                                           g(r.count), g(data))
+    m = all_off.shape[0]
+    merged, starts_m, data_flat = flatten_buckets(
+        all_off, all_len, all_cnt, all_data)
+    if use_kernels:
+        from repro.kernels import ops as kops
+        sorted_r, starts_s = kops.sort_requests_with(merged, starts_m)
+        packed = repack_sorted(sorted_r, starts_s, data_flat,
+                               m * cfg.data_cap)
+        coalesced = kops.coalesce(sorted_r)
+    else:
+        sorted_r, starts_s = sort_with(merged, starts_m)
+        packed = repack_sorted(sorted_r, starts_s, data_flat,
+                               m * cfg.data_cap)
+        coalesced = co.coalesce_sorted(sorted_r)
+    cap = cfg.coalesce_cap or coalesced.capacity
+    out = RequestList(coalesced.offsets[:cap], coalesced.lengths[:cap],
+                      jnp.minimum(coalesced.count, cap))
+    dropped = jnp.maximum(coalesced.count - cap, 0)
+    return out, packed, merged.count, out.count, dropped
+
+
+def _tam_write_shard_fn(layout: FileLayout, cfg: IOConfig, n_nodes: int,
+                        use_kernels: bool,
+                        offsets, lengths, count, data):
+    node, lagg, lmem = cfg.axis_names
+    r = mask_invalid(RequestList(offsets.reshape(-1), lengths.reshape(-1),
+                                 count.reshape(())))
+    data = data.reshape(-1)
+
+    # ---- stage 1: intra-node ----------------------------------------
+    agg_r, packed, n_before, n_after, drop_coal = _intra_node_aggregate(
+        cfg, r, data, use_kernels)
+    agg_starts = co.request_starts(agg_r)
+
+    # ---- stage 2: inter-node (local aggregators only) ----------------
+    domain_len = layout.file_len // n_nodes
+    dest = agg_r.offsets // domain_len
+    inter_data_cap = packed.shape[0]
+    buckets = bucket_by_dest(agg_r, agg_starts, packed, dest, n_nodes,
+                             agg_r.capacity, inter_data_cap)
+    a2a = partial(lax.all_to_all, axis_name=node, split_axis=0,
+                  concat_axis=0, tiled=True)
+    rx_off, rx_len, rx_data = (a2a(buckets.offsets), a2a(buckets.lengths),
+                               a2a(buckets.data))
+    rx_cnt = a2a(buckets.counts)
+
+    # global aggregator also hears the node's other local aggregators
+    g = partial(lax.all_gather, axis_name=lagg, axis=0, tiled=False)
+    all_off, all_len, all_cnt, all_data = (g(rx_off), g(rx_len), g(rx_cnt),
+                                           g(rx_data))
+
+    # ---- I/O step: identical to two-phase ----------------------------
+    merged, starts_m, data_flat = flatten_buckets(all_off, all_len,
+                                                  all_cnt, all_data)
+    sorted_r, starts_s = sort_with(merged, starts_m)
+    my_node = lax.axis_index(node)
+    shard = co.pack_data(sorted_r, starts_s, data_flat, domain_len,
+                         base=my_node * domain_len)
+    stats = {
+        "dropped_requests": lax.psum(
+            buckets.dropped_requests + drop_coal, (node, lagg, lmem)),
+        "dropped_elems": lax.psum(buckets.dropped_elems, (node, lagg, lmem)),
+        "requests_before_coalesce": lax.psum(n_before, (node, lagg)) //
+            jax.lax.axis_size(lmem),
+        "requests_after_coalesce": lax.psum(n_after, (node, lagg)) //
+            jax.lax.axis_size(lmem),
+        "requests_at_ga": sorted_r.count[None],
+    }
+    return shard[None], stats
+
+
+def make_tam_write(mesh: jax.sharding.Mesh, layout: FileLayout,
+                   cfg: IOConfig, use_kernels: bool = False):
+    """Build the jit-able TAM collective write.
+
+    Same signature as :func:`repro.core.twophase.make_twophase_write`;
+    P_L = mesh.shape[node] * mesh.shape[lagg] local aggregators.
+    """
+    node, lagg, lmem = cfg.axis_names
+    n_nodes = mesh.shape[node]
+    if layout.file_len % n_nodes:
+        raise ValueError("file_len must divide evenly among aggregators")
+    rank_spec = P((node, lagg, lmem))
+    fn = partial(_tam_write_shard_fn, layout, cfg, n_nodes, use_kernels)
+    return shard_map(
+        fn, mesh=mesh, check_vma=False,
+        in_specs=(rank_spec, rank_spec, rank_spec, rank_spec),
+        out_specs=(P(node), {"dropped_requests": P(),
+                             "dropped_elems": P(),
+                             "requests_before_coalesce": P(),
+                             "requests_after_coalesce": P(),
+                             "requests_at_ga": P(node)}),
+    )
+
+
+def make_tam_read(mesh: jax.sharding.Mesh, layout: FileLayout,
+                  cfg: IOConfig):
+    """TAM collective read: reverse order.
+
+    Global aggregators slice their domains per destination node
+    (all_to_all over ``node``), local aggregators reassemble the node's
+    span, ranks gather their own requests from the node-local image.
+    For simplicity the node-local image is the union span of the node's
+    requests bounded by per-node domain windows.
+    """
+    node, lagg, lmem = cfg.axis_names
+    n_nodes = mesh.shape[node]
+    domain_len = layout.file_len // n_nodes
+    rank_spec = P((node, lagg, lmem))
+
+    def fn(offsets, lengths, count, file_shard):
+        r = mask_invalid(RequestList(offsets.reshape(-1),
+                                     lengths.reshape(-1), count.reshape(())))
+        # stage 2 reversed: every node obtains the full file image only of
+        # the domains it needs; here we conservatively gather the file over
+        # the slow axis once per node (one receive per GA pair, P_L/P_G
+        # slow-axis messages as in TAM-read).
+        whole = lax.all_gather(file_shard.reshape(-1), node, axis=0,
+                               tiled=True)
+        # stage 1 reversed: node-local distribution from the local image.
+        starts = co.request_starts(r)
+        return co.unpack_data(r, starts, whole, cfg.data_cap)[None]
+
+    return shard_map(
+        fn, mesh=mesh, check_vma=False,
+        in_specs=(rank_spec, rank_spec, rank_spec, P(node)),
+        out_specs=rank_spec,
+    )

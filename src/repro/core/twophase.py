@@ -1,0 +1,173 @@
+"""Baseline two-phase collective I/O (ROMIO-style) under SPMD.
+
+This is the paper's comparison baseline: every rank routes its requests
+directly to the global aggregator owning the destination file domain
+(all-to-many), aggregators merge-sort the received offset-length pairs
+and place payloads into their file-domain buffers.
+
+Mesh layout for collective I/O (see DESIGN.md §4): a 3-D view
+``(node, lagg, lmem)`` of the device mesh —
+
+* ``node`` — the slow boundary (across compute nodes / pods). One global
+  aggregator per node (ROMIO's default), file domains are contiguous
+  per-node slices.
+* ``lagg`` × ``lmem`` — ranks within a node; ``lagg`` indexes local-
+  aggregator slots (used by TAM; the baseline ignores the distinction).
+
+SPMD note (DESIGN.md §7): MPI point-to-point congestion has no literal
+XLA analogue; the all-to-many here is an ``all_to_all`` over the slow
+axis plus intra-node gathers. Congestion itself is reproduced by the
+host-level path (``repro.checkpoint.host_io``) and the analytical model
+(``repro.core.cost_model``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import coalesce as co
+from repro.core.domains import FileLayout
+from repro.core.exchange import Buckets, bucket_by_dest, flatten_buckets, sort_with
+from repro.core.requests import RequestList, mask_invalid
+
+shard_map = jax.shard_map
+
+
+@dataclass(frozen=True)
+class IOConfig:
+    """Static capacities for the SPMD collective-I/O paths.
+
+    req_cap:       per-rank request-list capacity.
+    data_cap:      per-rank payload capacity (elements).
+    coalesce_cap:  post-coalesce metadata capacity forwarded by a local
+                   aggregator (TAM stage 2). Patterns that coalesce well
+                   (BTIO/S3D-like) allow coalesce_cap << lmem * req_cap —
+                   that is TAM's inter-node metadata saving.
+    axis_names:    (node, lagg, lmem) mesh-axis names.
+    """
+
+    req_cap: int
+    data_cap: int
+    coalesce_cap: int | None = None
+    axis_names: tuple[str, str, str] = ("node", "lagg", "lmem")
+
+
+def _gather_axes(cfg: IOConfig) -> tuple[str, str]:
+    return cfg.axis_names[1], cfg.axis_names[2]
+
+
+def _squeeze(r: RequestList) -> RequestList:
+    return RequestList(r.offsets.reshape(-1), r.lengths.reshape(-1),
+                       r.count.reshape(()))
+
+
+def _twophase_shard_fn(layout: FileLayout, cfg: IOConfig, n_nodes: int,
+                       offsets, lengths, count, data):
+    node, lagg, lmem = cfg.axis_names
+    r = mask_invalid(RequestList(offsets.reshape(-1), lengths.reshape(-1),
+                                 count.reshape(())))
+    data = data.reshape(-1)
+    starts = co.request_starts(r)
+
+    # route directly to the owning global aggregator (= node id)
+    domain_len = layout.file_len // n_nodes
+    dest = r.offsets // domain_len
+    buckets = bucket_by_dest(r, starts, data, dest, n_nodes,
+                             cfg.req_cap, cfg.data_cap)
+
+    a2a = partial(lax.all_to_all, axis_name=node, split_axis=0,
+                  concat_axis=0, tiled=True)
+    rx_off, rx_len, rx_data = (a2a(buckets.offsets), a2a(buckets.lengths),
+                               a2a(buckets.data))
+    rx_cnt = a2a(buckets.counts)
+
+    # complete the all-to-many: aggregator sees every intra-node rank's
+    # bucket as well.
+    g = partial(lax.all_gather, axis_name=_gather_axes(cfg), axis=0,
+                tiled=False)
+    all_off, all_len, all_cnt, all_data = (g(rx_off), g(rx_len), g(rx_cnt),
+                                           g(rx_data))
+
+    merged, starts_m, data_flat = flatten_buckets(all_off, all_len, all_cnt,
+                                                  all_data)
+    sorted_r, starts_s = sort_with(merged, starts_m)
+    my_node = lax.axis_index(node)
+    shard = co.pack_data(sorted_r, starts_s, data_flat, domain_len,
+                         base=my_node * domain_len)
+    stats = {
+        "dropped_requests": lax.psum(buckets.dropped_requests,
+                                     (node, lagg, lmem)),
+        "dropped_elems": lax.psum(buckets.dropped_elems, (node, lagg, lmem)),
+        "requests_at_ga": sorted_r.count[None],
+    }
+    return shard[None], stats
+
+
+def make_twophase_write(mesh: jax.sharding.Mesh, layout: FileLayout,
+                        cfg: IOConfig):
+    """Build the jit-able baseline collective write.
+
+    Inputs (global shapes, sharded over all three axes on dim 0):
+      offsets/lengths [P, req_cap], count [P], data [P, data_cap]
+    Output: file [n_nodes, domain_len] sharded over ``node``; stats.
+    """
+    node, lagg, lmem = cfg.axis_names
+    n_nodes = mesh.shape[node]
+    if layout.file_len % n_nodes:
+        raise ValueError("file_len must divide evenly among aggregators")
+    rank_spec = P((node, lagg, lmem))
+    fn = partial(_twophase_shard_fn, layout, cfg, n_nodes)
+    return shard_map(
+        fn, mesh=mesh, check_vma=False,
+        in_specs=(rank_spec, rank_spec, rank_spec, rank_spec),
+        out_specs=(P(node), {"dropped_requests": P(), "dropped_elems": P(),
+                             "requests_at_ga": P(node, )}),
+    )
+
+
+def make_twophase_read(mesh: jax.sharding.Mesh, layout: FileLayout,
+                       cfg: IOConfig):
+    """Baseline collective read: aggregators broadcast their file domains
+    (all_gather over the slow axis), every rank gathers its own requests.
+    """
+    node, lagg, lmem = cfg.axis_names
+    n_nodes = mesh.shape[node]
+    domain_len = layout.file_len // n_nodes
+    rank_spec = P((node, lagg, lmem))
+
+    def fn(offsets, lengths, count, file_shard):
+        r = mask_invalid(RequestList(offsets.reshape(-1),
+                                     lengths.reshape(-1), count.reshape(())))
+        whole = lax.all_gather(file_shard.reshape(-1), node, axis=0,
+                               tiled=True)
+        starts = co.request_starts(r)
+        out = co.unpack_data(r, starts, whole, cfg.data_cap)
+        return out[None]
+
+    return shard_map(
+        fn, mesh=mesh, check_vma=False,
+        in_specs=(rank_spec, rank_spec, rank_spec, P(node)),
+        out_specs=rank_spec,
+    )
+
+
+def write_reference(layout: FileLayout, offsets, lengths, counts, data):
+    """Host-side oracle: scatter every rank's payload into a dense file."""
+    import numpy as np
+
+    file = np.zeros((layout.file_len,), dtype=np.asarray(data).dtype)
+    offsets, lengths = np.asarray(offsets), np.asarray(lengths)
+    counts, data = np.asarray(counts), np.asarray(data)
+    for p in range(offsets.shape[0]):
+        pos = 0
+        for i in range(counts[p]):
+            o, l = int(offsets[p, i]), int(lengths[p, i])
+            file[o:o + l] = data[p, pos:pos + l]
+            pos += l
+    return file

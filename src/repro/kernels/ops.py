@@ -1,0 +1,122 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles: padding to power-of-two block sizes, RequestList integration,
+large-list chunking (chunk-sort + merge), and interpret-mode dispatch
+(interpret=True on CPU — per the build rules kernels target TPU but are
+validated on the CPU interpreter).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.requests import PAD_OFFSET, RequestList
+from repro.kernels import coalesce_kernel, pack as pack_mod, sort as sort_mod
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 1).bit_length()
+
+
+def _pad_block(x: jax.Array, n: int, fill) -> jax.Array:
+    pad = n - x.shape[-1]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def sort_requests_with(r: RequestList, starts: jax.Array,
+                       interpret: bool | None = None):
+    """Kernel-backed equivalent of ``exchange.sort_with(r, starts)``.
+
+    Lists longer than one VMEM block are chunk-sorted by the kernel and
+    k-way merged with a final jnp argsort of block-sorted runs (the merge
+    is cheap relative to the in-block network; on TPU it would be a
+    bitonic inter-block merge, see kernels/sort.py docstring).
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    cap = r.capacity
+    n = _next_pow2(cap)
+    if n <= sort_mod.MAX_BLOCK:
+        off = _pad_block(r.offsets[None], n, PAD_OFFSET)
+        ln = _pad_block(r.lengths[None], n, 0)
+        st = _pad_block(starts[None], n, 0)
+        so, sl, ss = sort_mod.bitonic_sort(off, ln, st, interpret=interpret)
+        return (RequestList(so[0, :cap], sl[0, :cap], r.count), ss[0, :cap])
+    # chunked path: sort blocks with the kernel, merge with argsort
+    nb = -(-cap // sort_mod.MAX_BLOCK)
+    padded = nb * sort_mod.MAX_BLOCK
+    off = _pad_block(r.offsets, padded, PAD_OFFSET).reshape(nb, -1)
+    ln = _pad_block(r.lengths, padded, 0).reshape(nb, -1)
+    st = _pad_block(starts, padded, 0).reshape(nb, -1)
+    so, sl, ss = sort_mod.bitonic_sort(off, ln, st, interpret=interpret)
+    flat_o, flat_l, flat_s = so.reshape(-1), sl.reshape(-1), ss.reshape(-1)
+    order = jnp.argsort(flat_o, stable=True)
+    return (RequestList(flat_o[order][:cap], flat_l[order][:cap], r.count),
+            flat_s[order][:cap])
+
+
+def coalesce(r: RequestList, interpret: bool | None = None) -> RequestList:
+    """Kernel-backed equivalent of ``coalesce.coalesce_sorted``."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    cap = r.capacity
+    n = min(_next_pow2(cap), max(_next_pow2(cap), 8))
+    off = _pad_block(r.offsets[None], n, PAD_OFFSET)
+    ln = _pad_block(r.lengths[None], n, 0)
+    co, cl, cnt = coalesce_kernel.coalesce(off, ln, interpret=interpret)
+    return RequestList(co[0, :cap], cl[0, :cap], cnt[0])
+
+
+def pack(r: RequestList, starts: jax.Array, data: jax.Array, base,
+         out_len: int, interpret: bool | None = None) -> jax.Array:
+    """Kernel-backed equivalent of ``coalesce.pack_data``.
+
+    Requires offset-sorted, non-overlapping requests (the condition the
+    gather formulation exploits). out_len is padded to the tile size
+    internally; the caller receives exactly [out_len].
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    cap = _next_pow2(r.capacity)
+    off = _pad_block(r.offsets, cap, PAD_OFFSET)
+    ln = _pad_block(r.lengths, cap, 0)
+    st = _pad_block(starts, cap, 0)
+    padded_out = -(-out_len // pack_mod.TILE) * pack_mod.TILE
+    out = pack_mod.pack(off, ln, st, data, base, padded_out,
+                        interpret=interpret)
+    return out[:out_len]
+
+
+def fused_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None,
+                    logit_cap: float | None = None, q_offset: int = 0,
+                    interpret: bool | None = None):
+    """Padding wrapper over kernels.flash.flash_attention_fused:
+    accepts arbitrary Sq/Skv, pads to block sizes, bounds real keys with
+    kv_len (padded keys never enter the softmax), slices back.
+    """
+    from repro.kernels import flash
+
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    b, sq, hq, hd = q.shape
+    skv = k.shape[1]
+    bq = min(flash.BLOCK_Q, max(64, 1 << (sq - 1).bit_length()))
+    bkv = min(flash.BLOCK_KV, max(64, 1 << (skv - 1).bit_length()))
+    pq = -(-sq // bq) * bq - sq
+    pk = -(-skv // bkv) * bkv - skv
+    window_eff = window
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    # padded keys sit at positions >= skv: mask them with causality when
+    # causal (q_offset + sq <= skv pad positions) — for causal callers
+    # with q_offset+sq == skv this is automatic.
+    out = flash.flash_attention_fused(
+        qp, kp, vp, causal=causal, window=window_eff,
+        logit_cap=logit_cap, q_offset=q_offset, kv_len=skv,
+        interpret=interpret, block_q=bq, block_kv=bkv)
+    return out[:, :sq]

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels (ground truth in tests).
+
+These are thin adapters over ``repro.core.coalesce`` — the portable
+algorithm module — exposed in the array-in/array-out signatures of the
+kernels so the allclose sweeps compare like with like.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.requests import PAD_OFFSET
+
+
+def sort_ref(offsets: jax.Array, lengths: jax.Array, carry: jax.Array):
+    """Batched sort-by-offset oracle for kernels.sort.bitonic_sort."""
+    order = jnp.argsort(offsets, axis=-1, stable=True)
+    return (jnp.take_along_axis(offsets, order, -1),
+            jnp.take_along_axis(lengths, order, -1),
+            jnp.take_along_axis(carry, order, -1))
+
+
+def coalesce_ref(offsets: jax.Array, lengths: jax.Array):
+    """Batched coalesce oracle (numpy, trivially correct)."""
+    offsets, lengths = np.asarray(offsets), np.asarray(lengths)
+    b, n = offsets.shape
+    out_o = np.full((b, n), PAD_OFFSET, np.int32)
+    out_l = np.zeros((b, n), np.int32)
+    counts = np.zeros((b,), np.int32)
+    for i in range(b):
+        runs = []
+        for o, l in zip(offsets[i], lengths[i]):
+            if o == PAD_OFFSET or l == 0:
+                continue
+            if runs and runs[-1][0] + runs[-1][1] == o:
+                runs[-1][1] += int(l)
+            else:
+                runs.append([int(o), int(l)])
+        counts[i] = len(runs)
+        for j, (o, l) in enumerate(runs):
+            out_o[i, j], out_l[i, j] = o, l
+    return jnp.asarray(out_o), jnp.asarray(out_l), jnp.asarray(counts)
+
+
+def pack_ref(offsets, lengths, starts, data, base, out_len: int):
+    """Scatter oracle for kernels.pack.pack."""
+    offsets, lengths = np.asarray(offsets), np.asarray(lengths)
+    starts, data = np.asarray(starts), np.asarray(data)
+    out = np.zeros((out_len,), data.dtype)
+    for o, l, s in zip(offsets, lengths, starts):
+        if o == PAD_OFFSET or l == 0:
+            continue
+        dst = int(o) - int(base)
+        for e in range(int(l)):
+            if 0 <= dst + e < out_len:
+                out[dst + e] = data[s + e]
+    return jnp.asarray(out)

@@ -1,0 +1,212 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: GSPMD must
+partition every step function onto the production meshes, the compiled
+memory analysis reports per-device bytes, cost analysis feeds the
+roofline (EXPERIMENTS.md). Collective bytes are parsed from the
+optimized HLO text (all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute operand sizes).
+
+Usage:
+  python -m repro.launch.dryrun --arch yi_34b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--out results/dryrun]
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+               "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+               "f64": 8, "c64": 8, "c128": 16}
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*(\w[\w:]*)\[?[^=]*?\s(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)(?:-start|-done)?\(")
+
+SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of collective ops in optimized HLO, by kind."""
+    out: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = re.search(r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)(?:-start)?\(", line)
+        if not m or "-done" in line.split("=")[-1][:40]:
+            continue
+        kind = m.group(1)
+        # result shape(s) left of '='; use the result shape as proxy for
+        # moved bytes (operand tuple shapes appear after the op name too)
+        lhs = line.split("=")[0]
+        total = 0
+        for dt, dims in SHAPE_RE.findall(lhs):
+            if dt not in DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * DTYPE_BYTES[dt]
+        out[kind] = out.get(kind, 0) + total
+        counts[kind] = counts.get(kind, 0) + 1
+    out["_counts"] = counts
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: Path | None = None) -> dict:
+    from repro.launch import shapes as shp
+    from repro.launch.mesh import make_plan, make_production_mesh
+    from repro.launch.steps import input_specs
+    from repro import configs
+
+    cell = shp.shape(shape_name)
+    cfg = configs.get(arch)
+    if not shp.applicable(cfg, cell):
+        result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                  "status": "skipped",
+                  "reason": "full-attention arch; long_500k needs "
+                            "sub-quadratic attention (DESIGN.md S5)"}
+        if out_dir:
+            out_dir.mkdir(parents=True, exist_ok=True)
+            (out_dir / f"{arch}__{shape_name}__{mesh_kind}.json").write_text(
+                json.dumps(result, indent=2))
+        return result
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    from repro.launch.steps import plan_for_cell
+    plan = plan_for_cell(mesh, cell)
+    t0 = time.time()
+    fn, arg_shapes, arg_specs, out_specs = input_specs(arch, cell, plan)
+
+    def shardings(tree_specs, tree_shapes):
+        flat_sp, treedef = jax.tree.flatten(
+            tree_specs, is_leaf=lambda x: isinstance(x, PartitionSpec))
+        return treedef.unflatten(
+            [NamedSharding(mesh, sp) for sp in flat_sp])
+
+    in_sh = shardings(arg_specs, arg_shapes)
+    out_sh = shardings(out_specs, None)
+    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+    lowered = jitted.lower(*arg_shapes)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = parse_collective_bytes(hlo)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "status": "ok", "devices": n_dev,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "generated_code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "collectives": coll,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "seq": cell.seq, "global_batch": cell.global_batch,
+        "kind": cell.kind,
+    }
+    if out_dir:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        name = f"{arch}__{shape_name}__{mesh_kind}"
+        (out_dir / f"{name}.json").write_text(json.dumps(result, indent=2))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    from repro.launch import shapes as shp
+
+    out_dir = Path(args.out)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, c.name) for a, c in shp.all_cells()]
+    else:
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    multi_cell = len(cells) * len(meshes) > 1
+    for arch, shape_name in cells:
+        for mesh_kind in meshes:
+            name = f"{arch}__{shape_name}__{mesh_kind}"
+            path = out_dir / f"{name}.json"
+            if args.skip_existing and path.exists():
+                prev = json.loads(path.read_text())
+                if prev.get("status") in ("ok", "skipped"):
+                    print(f"[skip] {name}", flush=True)
+                    continue
+            if multi_cell:
+                # one subprocess per cell: XLA compile caches/constants
+                # accumulate across compiles and OOM a single process
+                import subprocess
+                rc = subprocess.run(
+                    [sys.executable, "-m", "repro.launch.dryrun",
+                     "--arch", arch, "--shape", shape_name,
+                     "--mesh", mesh_kind, "--out", str(out_dir)],
+                    capture_output=True, text=True)
+                tail = [ln for ln in rc.stdout.splitlines()
+                        if ln.startswith("[")]
+                err1 = (rc.stderr.strip().splitlines()[-1]
+                        if rc.stderr.strip() else "")
+                print("\n".join(tail) if tail else
+                      f"[FAIL] {name}: rc={rc.returncode} {err1}",
+                      flush=True)
+                failures += rc.returncode != 0
+                continue
+            try:
+                r = run_cell(arch, shape_name, mesh_kind, out_dir)
+                if r.get("status") == "skipped":
+                    print(f"[skipped] {name}: {r['reason']}", flush=True)
+                    continue
+                mem_gib = r.get("memory", {}).get("temp_bytes", 0) / 2**30
+                print(f"[ok]   {name}: compile={r.get('compile_s')}s "
+                      f"flops={r.get('flops', 0):.3e} temp={mem_gib:.2f}GiB",
+                      flush=True)
+            except Exception as e:
+                failures += 1
+                print(f"[FAIL] {name}: {e}", flush=True)
+                traceback.print_exc()
+                if out_dir:
+                    out_dir.mkdir(parents=True, exist_ok=True)
+                    path.write_text(json.dumps(
+                        {"arch": arch, "shape": shape_name,
+                         "mesh": mesh_kind, "status": "fail",
+                         "error": str(e)}, indent=2))
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

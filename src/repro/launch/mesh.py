@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Functions (not module constants) so importing never touches jax device
+state. TPU v5e targets: 256 chips/pod (16x16), 2 pods = 512 chips.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.models.sharding import ShardingPlan
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_plan(mesh, shard_seq: bool = True) -> ShardingPlan:
+    axes = mesh.axis_names
+    data_axes = ("pod", "data") if "pod" in axes else ("data",)
+    return ShardingPlan(mesh=mesh, data_axes=data_axes, model_axis="model",
+                        shard_seq=shard_seq)
+
+
+def make_io_mesh(n_nodes: int, lagg: int, lmem: int):
+    """3-D collective-I/O mesh view (node, lagg, lmem) — see core.tam."""
+    return jax.make_mesh((n_nodes, lagg, lmem), ("node", "lagg", "lmem"))
+
+
+# Hardware constants (TPU v5e) used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link

@@ -1,0 +1,229 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+DOC = """Roofline analysis per (arch x shape x mesh) cell.
+
+Derives the three roofline terms from the compiled dry-run artifact:
+
+  compute    = HLO_FLOPs / (chips x 197 TFLOP/s bf16)
+  memory     = HLO_bytes / (chips x 819 GB/s HBM)
+  collective = collective wire bytes / (chips x 50 GB/s ICI)
+
+HLO_FLOPs / bytes / collective bytes come from the loop-aware HLO parser
+(hlo_analysis.py) — XLA's cost_analysis counts while bodies once, which
+underreports scanned-layer models by ~n_layers.
+
+Also reports MODEL_FLOPS (analytic 6*N_active*D + attention terms) and
+the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+
+Usage:
+  python -m repro.launch.roofline --arch yi_34b --shape train_4k --mesh single
+  python -m repro.launch.roofline --all [--out results/roofline]
+  python -m repro.launch.roofline --table  # render markdown from results
+"""
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+
+def model_flops(cfg, cell) -> float:
+    """Analytic MODEL_FLOPS for the cell (global, per step).
+
+    train:   6 * N_active * tokens  + 12 * attn(S) (fwd+bwd, causal)
+    prefill: 2 * N_active * tokens  + 4 * attn(S) / 2
+    decode:  2 * N_active * batch   + 4 * B * S_ctx * Hq * hd per layer
+    SSD state updates are O(S * d_state * d_inner) — folded into the
+    linear-projection 6ND term's margin (documented).
+    """
+    n_act = cfg.active_param_count()
+    gb, s = cell.global_batch, cell.seq
+    hq, hd = cfg.n_heads, cfg.head_dim or 0
+    n_attn = sum(cfg.is_attn_layer(i) for i in range(cfg.n_layers))
+
+    def attn_fwd(seq):
+        total = 0.0
+        for i in range(cfg.n_layers):
+            if not cfg.is_attn_layer(i):
+                continue
+            if cfg.is_local_layer(i) and cfg.window:
+                eff = min(cfg.window, seq)
+                total += 4 * gb * seq * eff * hq * hd / 2
+            else:
+                total += 4 * gb * seq * seq * hq * hd / 2
+        return total
+
+    if cell.kind == "train":
+        return 6 * n_act * gb * s + 3 * attn_fwd(s)
+    if cell.kind == "prefill":
+        return 2 * n_act * gb * s + attn_fwd(s)
+    # decode: one token against an S-long cache
+    per_layer = 4 * gb * s * hq * hd
+    return 2 * n_act * gb + n_attn * per_layer
+
+
+def analyze_cell(arch: str, shape_name: str, mesh_kind: str,
+                 out_dir: Path | None) -> dict:
+    import jax
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    from repro import configs
+    from repro.launch import shapes as shp
+    from repro.launch.hlo_analysis import HloCostModel
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import input_specs, plan_for_cell
+
+    cell = shp.shape(shape_name)
+    cfg = configs.get(arch)
+    if not shp.applicable(cfg, cell):
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped"}
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    plan = plan_for_cell(mesh, cell)
+    fn, arg_shapes, arg_specs, out_specs = input_specs(arch, cell, plan)
+
+    def sh(t):
+        f, td = jax.tree.flatten(
+            t, is_leaf=lambda x: isinstance(x, PartitionSpec))
+        return td.unflatten([NamedSharding(mesh, s) for s in f])
+
+    t0 = time.time()
+    compiled = jax.jit(fn, in_shardings=sh(arg_specs),
+                       out_shardings=sh(out_specs)).lower(
+                           *arg_shapes).compile()
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    hcm = HloCostModel(compiled.as_text())
+    tot = hcm.total()
+    mem = compiled.memory_analysis()
+    # pod-crossing traffic (multi mesh): replica groups wider than one
+    # pod's 16x16 ride the DCI (~25 GB/s effective per device)
+    dci_bytes = sum(w for _, _, n, w in tot.coll_detail if n > 256) \
+        + sum(w for _, _, n, w in tot.coll_detail if 16 < n <= 32
+              and mesh_kind == "multi")
+
+    # per-device HLO numbers (the parsed HLO is the per-device program)
+    flops_dev = tot.flops
+    bytes_dev = tot.bytes
+    coll_dev = sum(tot.coll_bytes.values())
+    mf = model_flops(cfg, cell)
+
+    t_compute = flops_dev / PEAK
+    t_memory = bytes_dev / HBM
+    t_collective = coll_dev / ICI
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_collective}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "status": "ok", "devices": n_dev,
+        "hlo_flops_per_dev": flops_dev,
+        "hlo_bytes_per_dev": bytes_dev,
+        "coll_bytes_per_dev": coll_dev,
+        "dci_bytes_per_dev": dci_bytes,
+        "t_dci_s": dci_bytes / 25e9,
+        "coll_breakdown": tot.coll_bytes,
+        "coll_counts": tot.coll_count,
+        "model_flops_global": mf,
+        "model_flops_per_dev": mf / n_dev,
+        "useful_ratio": (mf / n_dev) / max(flops_dev, 1.0),
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+        "roofline_fraction": (mf / n_dev / PEAK) / max(bound, 1e-30),
+        "mem_per_dev": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+        },
+        "analyze_s": round(time.time() - t0, 1),
+    }
+    if out_dir:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        (out_dir / f"{arch}__{shape_name}__{mesh_kind}.json").write_text(
+            json.dumps(result, indent=2))
+    return result
+
+
+def render_table(out_dir: Path) -> str:
+    rows = []
+    for f in sorted(out_dir.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") != "ok":
+            continue
+        rows.append(r)
+    lines = [
+        "| arch | shape | mesh | compute(s) | memory(s) | collective(s) "
+        "| dominant | useful | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} "
+            f"| {r['t_collective_s']:.2e} | {r['dominant']} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--table", action="store_true")
+    ap.add_argument("--out", default="results/roofline")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+
+    if args.table:
+        print(render_table(out_dir))
+        return
+
+    from repro.launch import shapes as shp
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = ([(a, c.name) for a, c in shp.all_cells()] if args.all
+             else [(args.arch, args.shape)])
+    multi = len(cells) * len(meshes) > 1
+    failures = 0
+    for arch, shape_name in cells:
+        for mesh_kind in meshes:
+            name = f"{arch}__{shape_name}__{mesh_kind}"
+            if args.skip_existing and (out_dir / f"{name}.json").exists():
+                print(f"[skip] {name}", flush=True)
+                continue
+            if multi:
+                import subprocess
+                rc = subprocess.run(
+                    [sys.executable, "-m", "repro.launch.roofline",
+                     "--arch", arch, "--shape", shape_name,
+                     "--mesh", mesh_kind, "--out", str(out_dir)],
+                    capture_output=True, text=True)
+                tail = [ln for ln in rc.stdout.splitlines()
+                        if ln.startswith("[")]
+                print("\n".join(tail) or f"[FAIL] {name} rc={rc.returncode}",
+                      flush=True)
+                failures += rc.returncode != 0
+                continue
+            r = analyze_cell(arch, shape_name, mesh_kind, out_dir)
+            if r["status"] == "skipped":
+                print(f"[skipped] {name}", flush=True)
+            else:
+                print(f"[ok] {name}: dom={r['dominant']} "
+                      f"frac={r['roofline_fraction']:.3f} "
+                      f"useful={r['useful_ratio']:.2f}", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

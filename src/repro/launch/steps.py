@@ -1,0 +1,201 @@
+"""Step builders + input specs for the dry-run and the real drivers.
+
+``input_specs(arch, cell, plan)`` returns (args as ShapeDtypeStructs,
+matching PartitionSpec trees, step_fn) — the shannon/kernels pattern:
+weak-type-correct, shardable, zero device allocation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import configs, optim
+from repro.launch.shapes import ADAFACTOR_ARCHS, ShapeCell
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.sharding import ShardingPlan, unsharded
+
+KEY = jax.random.PRNGKey(0)
+
+
+def plan_for_cell(mesh, cell: ShapeCell,
+                  activation_tp: bool | None = None) -> ShardingPlan:
+    """Cell-appropriate plan: SP off for decode; batch replicated when
+    the global batch does not divide the data axes (long_500k gb=1).
+
+    activation_tp defaults from REPRO_ACTIVATION_TP env (perf A/B knob,
+    see EXPERIMENTS.md SPerf)."""
+    import dataclasses
+    import math as _math
+    import os as _os
+    from repro.launch.mesh import make_plan
+    if activation_tp is None:
+        activation_tp = _os.environ.get("REPRO_ACTIVATION_TP", "1") == "1"
+    plan = make_plan(mesh, shard_seq=(cell.kind != "decode"))
+    plan = dataclasses.replace(plan, activation_tp=activation_tp)
+    dp_size = _math.prod(mesh.shape[a] for a in plan.data_axes)
+    if cell.global_batch % dp_size:
+        plan = dataclasses.replace(plan, data_axes=())
+    return plan
+
+
+def make_optimizer(arch: str):
+    if arch in ADAFACTOR_ARCHS:
+        return optim.adafactor()
+    return optim.adamw()
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, plan: ShardingPlan, opt,
+                    lr=3e-4, remat: bool = True):
+    p_specs = T.param_shardings(cfg, plan) if plan.mesh is not None else None
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(T.loss_fn)(
+            params, cfg, batch, plan, remat=remat)
+        if p_specs is not None:
+            # land gradients directly in the FSDP layout: turns the
+            # backward's weight-grad all-reduces into reduce-scatters
+            # (half the wire bytes) and keeps the optimizer local
+            # (SPerf iteration 3)
+            grads = jax.tree.map(
+                lambda g, sp: plan.constrain(g, sp), grads, p_specs,
+                is_leaf=lambda x: isinstance(x, jax.Array))
+        params, opt_state = opt.update(grads, opt_state, params, lr)
+        return params, opt_state, loss
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, plan: ShardingPlan):
+    def prefill_step(params, batch):
+        return T.prefill(params, cfg, batch, plan)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, plan: ShardingPlan):
+    def serve_step(params, state, tokens):
+        return T.decode_step(params, cfg, state, tokens, plan)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# shape/sharding specs
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell, plan: ShardingPlan):
+    gb, s = cell.global_batch, cell.seq
+    dp = plan.dp
+    tok_s = s - (cfg.num_prefix_embeds if cfg.frontend == "vision" else 0)
+    shapes: dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((gb, tok_s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((gb, tok_s), jnp.int32),
+    }
+    specs: dict[str, Any] = {"tokens": P(dp, None), "labels": P(dp, None)}
+    if cfg.frontend == "vision":
+        shapes["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (gb, cfg.num_prefix_embeds, cfg.d_model), jnp.bfloat16)
+        specs["prefix_embeds"] = P(dp, None, None)
+    if cfg.enc_dec:
+        shapes["frames"] = jax.ShapeDtypeStruct(
+            (gb, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        specs["frames"] = P(dp, None, None)
+    return shapes, specs
+
+
+def params_specs(cfg: ModelConfig, plan: ShardingPlan):
+    shapes = jax.eval_shape(functools.partial(T.init_params, KEY, cfg))
+    specs = T.param_shardings(cfg, plan)
+    return shapes, specs
+
+
+def opt_state_specs(opt, params_shapes, params_specs_tree):
+    shapes = jax.eval_shape(opt.init, params_shapes)
+
+    def norm(spec, ndim):
+        parts = tuple(spec) if spec is not None else ()
+        return parts + (None,) * (ndim - len(parts))
+
+    # adamw: {"m": like params, "v": like params, "step": scalar}
+    if set(shapes.keys()) == {"m", "v", "step"}:
+        return shapes, {"m": params_specs_tree, "v": params_specs_tree,
+                        "step": P()}
+
+    # adafactor: {"f": tree-of {vr, vc} | {v}, "step": scalar}
+    def fac_spec(pspec, pshape):
+        nd = len(pshape.shape)
+        parts = norm(pspec, nd)
+        if nd >= 2:
+            return {"vr": P(*parts[:-1]),
+                    "vc": P(*(parts[:-2] + parts[-1:]))}
+        return {"v": P(*parts)}
+
+    flat_specs, treedef = jax.tree.flatten(
+        params_specs_tree, is_leaf=lambda x: isinstance(x, P) or x is None)
+    flat_shapes = treedef.flatten_up_to(params_shapes)
+    fspecs = treedef.unflatten(
+        [fac_spec(sp, sh) for sp, sh in zip(flat_specs, flat_shapes)])
+    return shapes, {"f": fspecs, "step": P()}
+
+
+def decode_state_specs(cfg: ModelConfig, cell: ShapeCell,
+                       plan: ShardingPlan):
+    def mk_state():
+        enc = (jnp.zeros((cell.global_batch, cfg.enc_seq, cfg.d_model),
+                         jnp.bfloat16) if cfg.enc_dec else None)
+        return T.init_decode_state(cfg, cell.global_batch, cell.seq,
+                                   None, jnp.bfloat16, enc)
+
+    shapes = jax.eval_shape(mk_state)
+    period = cfg.block_period
+    kv_specs, ssm_specs = [], []
+    for j in range(period):
+        if cfg.is_attn_layer(j) and not cfg.attention_free:
+            spec = P(None, plan.dp, plan.tp, None, None)
+            kv_specs.append((spec, spec))
+            ssm_specs.append(None)
+        else:
+            kv_specs.append(None)
+            ssm_specs.append((P(None, plan.dp, plan.tp, None, None),
+                              P(None, plan.dp, None, None)))
+    specs = T.DecodeState(
+        kv=kv_specs, ssm=ssm_specs, pos=P(),
+        enc_out=P(plan.dp, None, None) if cfg.enc_dec else None)
+    return shapes, specs
+
+
+def input_specs(arch: str, cell: ShapeCell, plan: ShardingPlan):
+    """Returns (step_fn, arg ShapeDtypeStructs, arg PartitionSpec trees,
+    out PartitionSpec trees or None)."""
+    cfg = configs.get(arch)
+    p_shapes, p_specs = params_specs(cfg, plan)
+    if cell.kind == "train":
+        opt = make_optimizer(arch)
+        o_shapes, o_specs = opt_state_specs(opt, p_shapes, p_specs)
+        b_shapes, b_specs = batch_specs(cfg, cell, plan)
+        fn = make_train_step(cfg, plan, opt)
+        return (fn, (p_shapes, o_shapes, b_shapes),
+                (p_specs, o_specs, b_specs),
+                (p_specs, o_specs, P()))
+    if cell.kind == "prefill":
+        b_shapes, b_specs = batch_specs(cfg, cell, plan)
+        fn = make_prefill_step(cfg, plan)
+        _, st_specs = decode_state_specs(cfg, cell, plan)
+        return (fn, (p_shapes, b_shapes), (p_specs, b_specs),
+                (P(plan.dp, plan.tp), st_specs))
+    if cell.kind == "decode":
+        st_shapes, st_specs = decode_state_specs(cfg, cell, plan)
+        tok = jax.ShapeDtypeStruct((cell.global_batch,), jnp.int32)
+        fn = make_decode_step(cfg, plan)
+        return (fn, (p_shapes, st_shapes, tok),
+                (p_specs, st_specs, P(plan.dp)),
+                (P(plan.dp, plan.tp), st_specs))
+    raise ValueError(cell.kind)

@@ -1,0 +1,125 @@
+"""Sharding plan: maps model tensors onto the production mesh.
+
+Axes (see launch/mesh.py): single-pod ``(data=16, model=16)``; multi-pod
+``(pod=2, data=16, model=16)``. DP over (pod, data); TP/EP/SP over model.
+
+The plan is expressed as PartitionSpecs; model code applies them with
+``with_sharding_constraint`` (no-op when no mesh is active, so CPU smoke
+tests run the same code unconstrained).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardingPlan:
+    mesh: jax.sharding.Mesh | None = None
+    data_axes: tuple[str, ...] = ("data",)   # ("pod","data") multi-pod
+    model_axis: str = "model"
+    # Megatron-style sequence parallelism: residual-stream activations
+    # are sharded over the model axis on the SEQ dim between layers
+    # (AG before attn/mlp, RS after — GSPMD inserts them). Off for
+    # decode, where seq is 1.
+    shard_seq: bool = True
+    # Activation-TP vs fully-sequence-sharded compute (SPerf iteration):
+    # True  = classic Megatron TP (heads/ffn activations sharded over
+    #         model; per-layer ARs; GQA kv=8 pads badly onto tp=16).
+    # False = Ulysses/ZeRO-3 style: activations stay SEQ-sharded through
+    #         attention and FFN; layer weights are all-gathered at use
+    #         (they are FSDP-stored anyway); no activation all-reduce.
+    activation_tp: bool = True
+
+    @property
+    def dp(self):
+        if not self.data_axes:
+            return None          # batch too small to shard (e.g. gb=1)
+        return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+    @property
+    def tp(self):
+        return self.model_axis
+
+    # ---- parameter specs ---------------------------------------------
+    def embed(self) -> P:          # [vocab, d]
+        return P(self.tp, None)
+
+    def attn_qkv(self) -> P:       # [d, H, head_dim]
+        return P(None, self.tp, None)
+
+    def attn_o(self) -> P:         # [H, head_dim, d]
+        return P(self.tp, None, None)
+
+    def mlp_in(self) -> P:         # [d, f]
+        return P(None, self.tp)
+
+    def mlp_out(self) -> P:        # [f, d]
+        return P(self.tp, None)
+
+    def moe_in(self) -> P:         # [E, d, f] — expert parallel
+        return P(self.tp, None, None)
+
+    def moe_out(self) -> P:        # [E, f, d]
+        return P(self.tp, None, None)
+
+    def vector(self) -> P:         # norms etc.
+        return P(None)
+
+    # ---- activation specs --------------------------------------------
+    def act(self) -> P:            # [B, S, d] residual stream
+        if self.shard_seq:
+            return P(self.dp, self.tp, None)
+        return P(self.dp, None, None)
+
+    def act_heads(self) -> P:      # [B, S, H, head_dim]
+        if not self.activation_tp and self.shard_seq:
+            return P(self.dp, self.tp, None, None)   # seq-sharded attn
+        return P(self.dp, None, self.tp, None)
+
+    def kv_full(self) -> P:        # [B, S, Hkv, hd] K/V during attention
+        # seq-replicated so a seq-sharded Q attends to the whole context
+        return P(self.dp, None, None, None)
+
+    def act_ff(self) -> P:         # [B, S, f]
+        if not self.activation_tp and self.shard_seq:
+            return P(self.dp, self.tp, None)
+        return P(self.dp, None, self.tp)
+
+    def logits(self) -> P:         # [B, S, V]
+        if not self.activation_tp and self.shard_seq:
+            return P(self.dp, self.tp, None)
+        return P(self.dp, None, self.tp)
+
+    def tokens(self) -> P:         # [B, S]
+        return P(self.dp, None)
+
+    def kv_cache(self) -> P:       # [B, S, Hkv, head_dim] — SP over seq
+        return P(self.dp, self.tp, None, None)
+
+    def ssm_state(self) -> P:      # [B, nh, head_dim, d_state]
+        return P(self.dp, self.tp, None, None)
+
+    def moe_dispatch(self) -> P:   # [E, cap, d] — EP x DP
+        return P(self.tp, self.dp, None)
+
+    def flat_tokens(self) -> P:    # [N(*k), ...] — sharded over EVERYTHING
+        axes = tuple(self.data_axes) + (self.model_axis,)
+        return P(axes, None)
+
+    def flat_tokens_1d(self) -> P:
+        axes = tuple(self.data_axes) + (self.model_axis,)
+        return P(axes)
+
+    def constrain(self, x, spec: P):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+def unsharded() -> ShardingPlan:
+    """Plan with no mesh: every constraint is the identity (smoke tests)."""
+    return ShardingPlan(mesh=None)

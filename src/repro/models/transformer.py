@@ -1,0 +1,432 @@
+"""Decoder-only LM assembly for all families (dense/moe/ssm/hybrid/vlm),
+plus the enc-dec (whisper) variant.
+
+Layer stacking: layers are grouped into super-blocks of ``period`` =
+lcm of the structural periods (gemma2 local/global = 2, jamba attn 1:7 =
+8, MoE every-2 = 2, ...). Parameters are stacked [n_blocks, ...] per
+position-in-period, and the forward is a ``lax.scan`` over blocks — the
+compiled HLO contains ONE instance of each distinct layer type
+regardless of depth, which keeps 60-layer 512-device lowering tractable.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.sharding import ShardingPlan, unsharded
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ModelConfig, i: int, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+                 "ln2": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if cfg.is_attn_layer(i):
+        p["attn"] = L.init_attention(ks[0], cfg, dtype)
+    else:
+        p["mamba"] = L.init_mamba(ks[1], cfg, dtype)
+    if cfg.is_moe_layer(i):
+        p["moe"] = L.init_moe(ks[2], cfg, dtype)
+    elif cfg.d_ff:
+        p["mlp"] = L.init_mlp(ks[3], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _stack_layers(key, cfg: ModelConfig, n_layers: int, dtype) -> Params:
+    """Stack per-period layer params along a leading n_blocks axis."""
+    period = cfg.block_period
+    n_blocks = n_layers // period
+    keys = jax.random.split(key, n_layers).reshape(n_blocks, period, -1)
+    slots = []
+    for j in range(period):
+        per_block = [_init_layer(keys[b, j], cfg, b * period + j, dtype)
+                     for b in range(n_blocks)]
+        slots.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_block))
+    return {"slots": slots}
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    if cfg.n_layers % cfg.block_period:
+        raise ValueError(
+            f"{cfg.name}: n_layers {cfg.n_layers} not divisible by "
+            f"block period {cfg.block_period}")
+    k_emb, k_blocks, k_enc, k_out = jax.random.split(key, 4)
+    p: Params = {
+        # padded_vocab: TP-shardable tables; loss/sampling mask the pad
+        "embed": (jax.random.normal(
+            k_emb, (cfg.padded_vocab, cfg.d_model), dtype)
+            * 0.02).astype(dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "blocks": _stack_layers(k_blocks, cfg, cfg.n_layers, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = (jax.random.normal(
+            k_out, (cfg.padded_vocab, cfg.d_model), dtype)
+            / math.sqrt(cfg.d_model)).astype(dtype)
+    if cfg.enc_dec:
+        # encoder stack (self-attn only) + decoder cross-attn params
+        enc_cfg = cfg
+        p["enc_blocks"] = _stack_layers(k_enc, enc_cfg, cfg.n_enc_layers,
+                                        dtype)
+        p["enc_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        xkeys = jax.random.split(jax.random.fold_in(k_enc, 1),
+                                 cfg.n_layers)
+        xattn = [{"xattn": L.init_attention(xkeys[i], cfg, dtype),
+                  "lnx": jnp.zeros((cfg.d_model,), jnp.float32)}
+                 for i in range(cfg.n_layers)]
+        p["xattn"] = jax.tree.map(lambda *xs: jnp.stack(xs), *xattn)
+    return p
+
+
+def param_shardings(cfg: ModelConfig, plan: ShardingPlan):
+    """PartitionSpec pytree matching init_params' structure.
+
+    TP over ``model`` on the contraction-friendly dim AND FSDP/ZeRO-3
+    over the data axes on the other dim: weights live fully sharded
+    (1T params / 512 chips = ~4 GB/chip) and GSPMD all-gathers each
+    scanned layer's slice inside the loop at use time. Optimizer moments
+    inherit these specs (launch.steps.opt_state_specs).
+    """
+    from jax.sharding import PartitionSpec as P
+    dp, tp = plan.dp, plan.tp
+
+    def attn_spec():
+        s = {"wq": _lift(P(dp, tp)), "wk": _lift(P(dp, tp)),
+             "wv": _lift(P(dp, tp)), "wo": _lift(P(tp, dp))}
+        if cfg.qkv_bias:
+            s.update({"bq": _lift(P(tp)), "bk": _lift(P(tp)),
+                      "bv": _lift(P(tp))})
+        return s
+
+    def mamba_spec():
+        return {"wx": _lift(P(dp, tp)),
+                "wz": _lift(P(dp, tp)),
+                "wbcdt": _lift(P(dp, None)),
+                "conv": _lift(P(None, None)),
+                "A_log": _lift(P(None)), "D": _lift(P(None)),
+                "dt_bias": _lift(P(None)), "norm": _lift(P(tp)),
+                "out_proj": _lift(P(tp, dp))}
+
+    def moe_spec():
+        return {"router": _lift(P(dp, None)),
+                "wi": _lift(P(tp, dp, None)), "wg": _lift(P(tp, dp, None)),
+                "wo": _lift(P(tp, None, dp))}
+
+    def mlp_spec():
+        return {"wi": _lift(P(dp, tp)), "wg": _lift(P(dp, tp)),
+                "wo": _lift(P(tp, dp))}
+
+    def _lift(spec: P) -> P:
+        # stacked leading n_blocks axis is unsharded
+        return P(None, *spec)
+
+    def layer_spec(i: int):
+        s = {"ln1": _lift(P(None)), "ln2": _lift(P(None))}
+        if cfg.is_attn_layer(i):
+            s["attn"] = attn_spec()
+        else:
+            s["mamba"] = mamba_spec()
+        if cfg.is_moe_layer(i):
+            s["moe"] = moe_spec()
+        elif cfg.d_ff:
+            s["mlp"] = mlp_spec()
+        return s
+
+    period = cfg.block_period
+    specs: dict = {
+        "embed": P(tp, dp),
+        "final_norm": P(None),
+        "blocks": {"slots": [layer_spec(j) for j in range(period)]},
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = P(tp, dp)
+    if cfg.enc_dec:
+        specs["enc_blocks"] = {"slots": [layer_spec(0)]}
+        specs["enc_norm"] = P(None)
+        specs["xattn"] = {"xattn": attn_spec(), "lnx": _lift(P(None))}
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+class DecodeState(NamedTuple):
+    """Per-slot caches stacked [n_blocks, ...]."""
+    kv: Any           # list per slot: (k, v) or None
+    ssm: Any          # list per slot: (ssm_state, conv_state) or None
+    pos: jax.Array    # scalar int32 — next write position
+    enc_out: Any = None  # enc-dec: encoder activations [B, enc_seq, d]
+
+
+def _apply_layer(pl_, x, cfg, i_in_period, positions, plan, enc_out=None,
+                 cache=None, cache_pos=None, causal=True):
+    """One layer (attention-or-mamba + mlp-or-moe). Returns (x, new_cache,
+    aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rms_norm(x, pl_["ln1"], cfg.norm_eps)
+    new_cache = None
+    if "attn" in pl_:
+        local = cfg.is_local_layer(i_in_period)
+        a, new_cache = L.attention(
+            pl_["attn"], h, cfg, positions, plan, local=local,
+            cache=None if cache is None else cache[0],
+            cache_pos=cache_pos, causal=causal)
+        x = x + a
+    else:
+        mstate = None if cache is None else cache[1]
+        a, new_m = L.mamba_block(pl_["mamba"], h, cfg, plan, state=mstate)
+        x = x + a
+        new_cache = (None, new_m)
+    if "attn" in pl_ and new_cache is not None:
+        new_cache = (new_cache, None)
+    if enc_out is not None:
+        hx = L.rms_norm(x, pl_["lnx"], cfg.norm_eps)
+        xa, _ = L.attention(pl_["xattn"], hx, cfg, positions, plan,
+                            local=False, xattn_kv=enc_out)
+        x = x + xa
+    h2 = L.rms_norm(x, pl_["ln2"], cfg.norm_eps)
+    if "moe" in pl_:
+        mo, aux = L.moe(pl_["moe"], h2, cfg, plan)
+        x = x + mo
+    elif "mlp" in pl_:
+        x = x + L.mlp(pl_["mlp"], h2, plan)
+    return x, new_cache, aux
+
+
+def _run_blocks(blocks, x, cfg, positions, plan, xattn=None, enc_out=None,
+                decode_state: DecodeState | None = None, causal=True,
+                collect_caches: bool = False, remat: bool = False):
+    """Scan over super-blocks. Returns (x, new_decode_state, aux_sum)."""
+    period = len(blocks["slots"])
+    slots = blocks["slots"]
+    has_xattn = xattn is not None
+
+    def block_fn(carry, scanned):
+        xx = carry
+        slot_params = scanned["slots"]
+        caches = scanned.get("caches")
+        xp = scanned.get("xattn")
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches = []
+        for j in range(period):
+            pj = slot_params[j]
+            if has_xattn:
+                pj = dict(pj)
+                pj["xattn"] = xp["xattn"]
+                pj["lnx"] = xp["lnx"]
+            cache_j = None if caches is None else caches[j]
+            xx, nc, aux = _apply_layer(
+                pj, xx, cfg, j, positions, plan,
+                enc_out=enc_out if has_xattn else None,
+                cache=cache_j, causal=causal,
+                cache_pos=None if decode_state is None else decode_state.pos)
+            new_caches.append(nc)
+            aux_total = aux_total + aux
+        out = {"aux": aux_total}
+        if decode_state is not None or collect_caches:
+            out["caches"] = new_caches
+        return xx, out
+
+    if remat:
+        block_fn = jax.checkpoint(block_fn)
+    # decode: UNROLL the layer loop. A rolled scan dynamic-slices the
+    # stacked KV cache each iteration; GSPMD reshards the whole stack
+    # per layer (129 full-cache rewrites/step for qwen decode — SPerf
+    # iteration for the decode cells). Unrolled slices are static and
+    # the cache update stays in place.
+    from repro.models.layers import perf_opts_enabled
+    unroll = decode_state is not None and perf_opts_enabled()
+    scanned_in = {"slots": slots}
+    if decode_state is not None:
+        scanned_in["caches"] = [
+            (decode_state.kv[j], decode_state.ssm[j])
+            for j in range(period)]
+    if has_xattn:
+        # xattn params are stacked [n_layers] = [n_blocks * period]; for
+        # period>1 that would need regrouping — whisper has period 1.
+        scanned_in["xattn"] = xattn
+    x, outs = lax.scan(block_fn, x, scanned_in,
+                       unroll=True if unroll else 1)
+    aux = outs["aux"].sum()
+    new_state = None
+    if decode_state is not None:
+        kv = [outs["caches"][j][0] for j in range(period)]
+        ssm = [outs["caches"][j][1] for j in range(period)]
+        new_state = DecodeState(kv=kv, ssm=ssm, pos=decode_state.pos + 1,
+                                enc_out=decode_state.enc_out)
+    elif collect_caches:
+        kv = [outs["caches"][j][0] for j in range(period)]
+        ssm = [outs["caches"][j][1] for j in range(period)]
+        new_state = DecodeState(kv=kv, ssm=ssm,
+                                pos=jnp.int32(x.shape[1]))
+    return x, new_state, aux
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch: dict, plan):
+    """Token and/or frontend-stub embeddings -> [B, S, d]."""
+    emb_scale = math.sqrt(cfg.d_model)
+    if cfg.frontend == "vision" and "prefix_embeds" in batch:
+        tok = params["embed"][batch["tokens"]] * emb_scale
+        x = jnp.concatenate(
+            [batch["prefix_embeds"].astype(tok.dtype), tok], axis=1)
+    elif cfg.frontend == "audio" and not cfg.enc_dec:
+        x = batch["frames"]
+    else:
+        x = params["embed"][batch["tokens"]] * emb_scale
+    return plan.constrain(x, plan.act())
+
+
+def forward(params, cfg: ModelConfig, batch: dict,
+            plan: ShardingPlan | None = None, remat: bool = False):
+    """Full-sequence forward -> logits [B, S, V] (+ aux loss)."""
+    plan = plan or unsharded()
+    x = _embed_inputs(params, cfg, batch, plan)
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    enc_out = None
+    xattn = None
+    if cfg.enc_dec:
+        enc = batch["frames"]
+        enc_pos = jnp.arange(enc.shape[1], dtype=jnp.int32)[None, :].repeat(b, 0)
+        enc_x, _, _ = _run_blocks(params["enc_blocks"], enc, cfg, enc_pos,
+                                  plan, causal=False)
+        enc_out = L.rms_norm(enc_x, params["enc_norm"], cfg.norm_eps)
+        xattn = params["xattn"]
+    x, _, aux = _run_blocks(params["blocks"], x, cfg, positions, plan,
+                            xattn=xattn, enc_out=enc_out, remat=remat)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    unemb = params.get("unembed", params["embed"])
+    logits = jnp.einsum("bsd,vd->bsv", x, unemb)
+    logits = L.softcap(logits, cfg.final_logit_softcap)
+    return plan.constrain(logits, plan.logits()), aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict,
+            plan: ShardingPlan | None = None, remat: bool = False):
+    """Causal LM cross-entropy (mean over tokens) + MoE aux loss."""
+    logits, aux = forward(params, cfg, batch, plan, remat=remat)
+    labels = batch["labels"]
+    if cfg.frontend == "vision" and "prefix_embeds" in batch:
+        npfx = batch["prefix_embeds"].shape[1]
+        logits = logits[:, npfx:]
+    # mask the padded vocab columns out of the partition function
+    if cfg.padded_vocab != cfg.vocab:
+        col = jnp.arange(logits.shape[-1])
+        logits = jnp.where(col < cfg.vocab, logits, -1e30)
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logits.astype(jnp.float32), labels[..., None],
+                             axis=-1)[..., 0]
+    nll = (lse - ll).mean()
+    return nll + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch_size: int, max_seq: int,
+                      plan: ShardingPlan | None = None,
+                      dtype=jnp.bfloat16, enc_out=None) -> DecodeState:
+    plan = plan or unsharded()
+    period = cfg.block_period
+    n_blocks = cfg.n_layers // period
+    kv, ssm = [], []
+    for j in range(period):
+        if cfg.is_attn_layer(j):
+            shape = (n_blocks, batch_size, max_seq, cfg.n_kv_heads,
+                     cfg.head_dim)
+            k = plan.constrain(jnp.zeros(shape, dtype),
+                               _stacked(plan.kv_cache()))
+            v = plan.constrain(jnp.zeros(shape, dtype),
+                               _stacked(plan.kv_cache()))
+            kv.append((k, v))
+            ssm.append(None)
+        else:
+            mc = cfg.mamba
+            di, ds = mc.d_inner(cfg.d_model), mc.d_state
+            nh, hd = mc.n_heads(cfg.d_model), mc.head_dim
+            sstate = jnp.zeros((n_blocks, batch_size, nh, ds, hd),
+                               jnp.float32)
+            cstate = jnp.zeros((n_blocks, batch_size, mc.d_conv - 1,
+                                di + 2 * ds), dtype)
+            kv.append(None)
+            ssm.append((sstate, cstate))
+    return DecodeState(kv=kv, ssm=ssm, pos=jnp.int32(0), enc_out=enc_out)
+
+
+def _stacked(spec):
+    from jax.sharding import PartitionSpec as P
+    return P(None, *spec)
+
+
+def decode_step(params, cfg: ModelConfig, state: DecodeState,
+                tokens: jax.Array, plan: ShardingPlan | None = None):
+    """One decode step. tokens: [B] int32. Returns (logits [B, V], state)."""
+    plan = plan or unsharded()
+    x = params["embed"][tokens][:, None, :] * math.sqrt(cfg.d_model)
+    x = plan.constrain(x, plan.act())
+    positions = jnp.full((x.shape[0], 1), state.pos, jnp.int32)
+    enc_out, xattn = None, None
+    if cfg.enc_dec:
+        enc_out = state.enc_out
+        xattn = params["xattn"]
+    x, new_state, _ = _run_blocks(params["blocks"], x, cfg, positions, plan,
+                                  xattn=xattn, enc_out=enc_out,
+                                  decode_state=state)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    unemb = params.get("unembed", params["embed"])
+    logits = jnp.einsum("bsd,vd->bsv", x, unemb)[:, 0]
+    logits = L.softcap(logits, cfg.final_logit_softcap)
+    return logits, new_state
+
+
+def prefill(params, cfg: ModelConfig, batch: dict,
+            plan: ShardingPlan | None = None):
+    """Full-sequence forward that also builds the decode caches.
+
+    Returns (last-token logits [B, V], DecodeState with kv/ssm caches of
+    length S and pos = S) — the serving prefill step.
+    """
+    plan = plan or unsharded()
+    x = _embed_inputs(params, cfg, batch, plan)
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    enc_out, xattn = None, None
+    if cfg.enc_dec:
+        enc = batch["frames"]
+        enc_pos = jnp.arange(enc.shape[1], dtype=jnp.int32)[None, :].repeat(b, 0)
+        enc_x, _, _ = _run_blocks(params["enc_blocks"], enc, cfg, enc_pos,
+                                  plan, causal=False)
+        enc_out = L.rms_norm(enc_x, params["enc_norm"], cfg.norm_eps)
+        xattn = params["xattn"]
+    x, state, _ = _run_blocks(params["blocks"], x, cfg, positions, plan,
+                              xattn=xattn, enc_out=enc_out,
+                              collect_caches=True)
+    state = state._replace(enc_out=enc_out)
+    # constrain kv caches for the serving layout (SP over seq)
+    kv = [None if c is None else
+          (plan.constrain(c[0], _stacked(plan.kv_cache())),
+           plan.constrain(c[1], _stacked(plan.kv_cache())))
+          for c in state.kv]
+    state = state._replace(kv=kv)
+    x = L.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    unemb = params.get("unembed", params["embed"])
+    logits = jnp.einsum("bsd,vd->bsv", x, unemb)[:, 0]
+    logits = L.softcap(logits, cfg.final_logit_softcap)
+    return logits, state

@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adafactor, adamw, global_norm,
+)
+from repro.optim.schedule import warmup_cosine  # noqa: F401

@@ -1,0 +1,128 @@
+"""Sharded optimizers (no optax dependency).
+
+AdamW keeps bf16 moments (documented deviation from fp32-master
+practice: at 1T params fp32 m/v/master = 14 bytes/param = 14 TB — beyond
+any 512-chip v5e fleet; bf16 m/v + bf16 params = 6 bytes/param).
+Adafactor (factored second moment, no first moment) is the memory-floor
+option used for the ≥400B MoE archs (see configs in launch/shapes.py).
+
+Moment tensors inherit the parameter PartitionSpecs, so optimizer state
+is sharded exactly like the model (update math is elementwise — GSPMD
+partitions it with zero communication).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]  # (grads, state, params, lr)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, clip_norm: float | None = 1.0,
+          moment_dtype=jnp.bfloat16) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        if clip_norm is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gn, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            mh, vh = m32 / bc1, v32 / bc2
+            delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * \
+                p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                    m32.astype(moment_dtype), v32.astype(moment_dtype))
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_p = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {"m": new_m, "v": new_v, "step": step}
+
+    return Optimizer(init=init, update=update)
+
+
+def adafactor(eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay: float = 0.8, weight_decay: float = 0.0) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern, 2018).
+
+    State per matrix param: one row vector + one col vector (fp32);
+    scalars/vectors keep a full second moment. No first moment.
+    """
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(params):
+        def st(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(st, params,
+                                  is_leaf=lambda x: isinstance(x, jax.Array)
+                                  or hasattr(x, "shape")),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        beta = 1.0 - step.astype(jnp.float32) ** -decay
+
+        def upd(g, s, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr[..., None] / jnp.maximum(
+                    vr.mean(axis=-1, keepdims=True)[..., None], eps))
+                u = g32 / jnp.sqrt(jnp.maximum(denom * vc[..., None, :],
+                                               eps))
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g32 / jnp.sqrt(jnp.maximum(v, eps))
+                ns = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            newp = (p.astype(jnp.float32) - lr * u
+                    - lr * weight_decay * p.astype(jnp.float32))
+            return newp.astype(p.dtype), ns
+
+        leaves, treedef = jax.tree.flatten(params)
+        gl = treedef.flatten_up_to(grads)
+        sl = treedef.flatten_up_to(state["f"])
+        outs = [upd(g, s, p) for g, s, p in zip(gl, sl, leaves)]
+        new_p = treedef.unflatten([o[0] for o in outs])
+        new_s = treedef.unflatten([o[1] for o in outs])
+        return new_p, {"f": new_s, "step": step}
+
+    return Optimizer(init=init, update=update)

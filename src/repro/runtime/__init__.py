@@ -1,0 +1,3 @@
+from repro.runtime.elastic import ElasticPlan, plan_remesh  # noqa: F401
+from repro.runtime.heartbeat import HeartbeatMonitor  # noqa: F401
+from repro.runtime.trainer import TrainLoop, TrainLoopConfig  # noqa: F401

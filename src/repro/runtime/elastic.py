@@ -1,0 +1,43 @@
+"""Elastic re-meshing after node loss.
+
+Policy: keep the model axis intact (TP/EP shards are load-bearing —
+losing one breaks every layer) and shrink the DATA axis to the largest
+size the surviving hosts support; the global batch is preserved by
+raising per-replica accumulation. Restoring onto the shrunken mesh is
+just ``restore_checkpoint(..., shardings=new)`` — the checkpoint byte
+space is mesh-agnostic by construction (checkpoint.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+
+@dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: tuple[int, ...]
+    axis_names: tuple[str, ...]
+    grad_accum: int        # microbatch multiplier preserving global batch
+
+    def make_mesh(self):
+        return jax.make_mesh(self.mesh_shape, self.axis_names)
+
+
+def plan_remesh(total_devices: int, model_parallel: int,
+                old_data_parallel: int, *,
+                pods: int = 1) -> ElasticPlan:
+    """Largest power-of-two data axis that fits the surviving devices."""
+    if total_devices < model_parallel:
+        raise ValueError(
+            f"cannot keep model axis: {total_devices} devices < "
+            f"TP {model_parallel}")
+    avail = total_devices // model_parallel // max(pods, 1)
+    data = 1
+    while data * 2 <= avail:
+        data *= 2
+    accum = max(1, old_data_parallel // data)
+    if pods > 1:
+        return ElasticPlan((pods, data, model_parallel),
+                           ("pod", "data", "model"), accum)
+    return ElasticPlan((data, model_parallel), ("data", "model"), accum)

@@ -1,0 +1,48 @@
+"""Failure detection for the training controller.
+
+On a real fleet each host posts a heartbeat to the coordinator (or the
+coordinator observes barrier timeouts). Here the monitor abstracts that:
+workers call ``beat(host_id)``; the controller polls ``dead_hosts()``.
+Failure injection (``inject_failure``) drives the fault-tolerance tests
+and the checkpoint-restart example without real hardware deaths.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+
+class HeartbeatMonitor:
+    def __init__(self, n_hosts: int, timeout_s: float = 10.0,
+                 clock=time.monotonic):
+        self.n_hosts = n_hosts
+        self.timeout_s = timeout_s
+        self._clock = clock
+        self._last = {h: clock() for h in range(n_hosts)}
+        self._failed: set[int] = set()
+        self._lock = threading.Lock()
+
+    def beat(self, host_id: int):
+        with self._lock:
+            if host_id not in self._failed:
+                self._last[host_id] = self._clock()
+
+    def inject_failure(self, host_id: int):
+        with self._lock:
+            self._failed.add(host_id)
+
+    def revive(self, host_id: int):
+        with self._lock:
+            self._failed.discard(host_id)
+            self._last[host_id] = self._clock()
+
+    def dead_hosts(self) -> list[int]:
+        now = self._clock()
+        with self._lock:
+            return sorted(
+                h for h in range(self.n_hosts)
+                if h in self._failed
+                or now - self._last[h] > self.timeout_s)
+
+    def healthy(self) -> bool:
+        return not self.dead_hosts()

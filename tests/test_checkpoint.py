@@ -1,0 +1,71 @@
+"""Checkpoint save/restore + manager + restart equivalence."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import (CheckpointManager, HostCollectiveIO,
+                              restore_checkpoint, save_checkpoint)
+
+
+def tree():
+    return {"params": {"w": jnp.arange(640, dtype=jnp.float32)
+                       .reshape(8, 80),
+                       "b": jnp.full((3,), 2.5, jnp.bfloat16)},
+            "opt": {"m": jnp.ones((8, 80), jnp.bfloat16),
+                    "step": jnp.int32(41)}}
+
+
+@pytest.mark.parametrize("method", ["tam", "twophase"])
+def test_roundtrip(method, tmp_path):
+    io = HostCollectiveIO(n_ranks=8, n_nodes=2, stripe_size=512,
+                          stripe_count=4)
+    t = tree()
+    save_checkpoint(t, tmp_path / "ck", step=41, io=io, method=method,
+                    local_aggregators=4)
+    got, step = restore_checkpoint(tmp_path / "ck", t)
+    assert step == 41
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+
+
+def test_restore_across_rank_counts(tmp_path):
+    """The byte space is mesh/rank agnostic: write with 8 ranks, read
+    with a 1-rank reader (elastic restart)."""
+    io8 = HostCollectiveIO(n_ranks=8, n_nodes=4, stripe_size=256,
+                           stripe_count=2)
+    t = tree()
+    save_checkpoint(t, tmp_path / "ck", io=io8, method="tam",
+                    local_aggregators=4)
+    got, _ = restore_checkpoint(tmp_path / "ck", t)
+    assert np.array_equal(np.asarray(got["params"]["w"]),
+                          np.asarray(t["params"]["w"]))
+
+
+def test_manager_rolling_gc(tmp_path):
+    io = HostCollectiveIO(n_ranks=4, n_nodes=2, stripe_size=256,
+                          stripe_count=2)
+    mgr = CheckpointManager(tmp_path, io, keep=2)
+    t = tree()
+    for step in (10, 20, 30):
+        mgr.save(t, step)
+    assert mgr.latest_step() == 30
+    steps = sorted(int(p.name[5:13]) for p in
+                   tmp_path.glob("ckpt_*.manifest.json"))
+    assert steps == [20, 30]
+    got, step = mgr.restore(t)
+    assert step == 30
+
+
+def test_manager_restore_specific_step(tmp_path):
+    io = HostCollectiveIO(n_ranks=4, n_nodes=2, stripe_size=256,
+                          stripe_count=2)
+    mgr = CheckpointManager(tmp_path, io, keep=3)
+    t = tree()
+    mgr.save(t, 10)
+    t2 = jax.tree.map(lambda x: x + 1 if x.dtype != jnp.int32 else x, t)
+    mgr.save(t2, 20)
+    got10, _ = mgr.restore(t, step=10)
+    assert np.array_equal(np.asarray(got10["params"]["w"]),
+                          np.asarray(t["params"]["w"]))

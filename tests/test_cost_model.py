@@ -1,0 +1,82 @@
+"""Validate the analytical model against the paper's own claims."""
+import math
+
+import pytest
+
+from repro.core.cost_model import (Machine, Workload, btio, e3sm_f, e3sm_g,
+                                   optimal_PL, receives_per_global_aggregator,
+                                   s3d, sort_complexity, speedup, tam_cost,
+                                   twophase_cost)
+
+
+def test_twophase_is_tam_with_PL_equal_P():
+    w = e3sm_f(P=4096, nodes=64)
+    assert tam_cost(w, w.P).total == twophase_cost(w).total
+
+
+def test_congestion_metric():
+    w = e3sm_g(P=16384, nodes=256)
+    assert receives_per_global_aggregator(w, None) == 16384 / 56
+    assert receives_per_global_aggregator(w, 256) == 256 / 56
+
+
+def test_sort_complexity_paper_section_IV_D():
+    w = e3sm_f(P=16384, nodes=256)
+    # TAM sorting is cheaper whenever P_L >= P_G (paper claim)
+    assert sort_complexity(w, 256) < sort_complexity(w, None)
+
+
+def test_paper_speedup_range_at_scale():
+    """Paper: 3x-29x end-to-end at 16384 procs / 256 nodes."""
+    for mk in (e3sm_f, e3sm_g, btio, s3d):
+        w = mk(16384, 256)
+        s = speedup(w, 256)
+        assert 2.0 < s < 60.0, (mk.__name__, s)
+    # the most communication-bound case should sit in the upper range
+    assert speedup(e3sm_f(16384, 256), 256) > 5.0
+
+
+def test_btio_absolute_anchor():
+    """Paper SV-B: TAM BTIO at 16384 procs finishes in ~40 s at
+    >4-5 GiB/s — the strongest absolute-number anchor we have."""
+    w = btio(16384, 256)
+    t = tam_cost(w, 256).total
+    assert 20 < t < 80
+    assert w.total_bytes / t / 2**30 > 3.5
+
+
+def test_optimal_PL_is_moderate():
+    """Paper SV-A: P_L = 256 best on Theta among {nodes * 2^i}."""
+    w = e3sm_f(16384, 256)
+    best, _ = optimal_PL(w)
+    assert 256 <= best <= 2048  # optimum is far from both extremes
+    assert tam_cost(w, best).total < twophase_cost(w).total
+
+
+def test_intra_inter_tradeoff_monotonic():
+    """f(P_L) falls with P_L; g(P_L) grows (paper SIV-D)."""
+    w = btio(4096, 64)
+    pls = [64, 128, 256, 512, 1024]
+    intra = [tam_cost(w, pl).intra_comm + tam_cost(w, pl).intra_sort
+             for pl in pls]
+    inter = [tam_cost(w, pl).inter_comm for pl in pls]
+    assert all(a >= b for a, b in zip(intra, intra[1:]))
+    assert all(a <= b for a, b in zip(inter, inter[1:]))
+
+
+def test_strong_scaling_twophase_degrades():
+    """Two-phase comm grows with P (paper Fig. 3 a/b shape); TAM at
+    fixed P_L does not."""
+    t2 = [twophase_cost(e3sm_f(p, max(p // 64, 1))).comm
+          for p in (1024, 4096, 16384)]
+    assert t2[0] < t2[1] < t2[2]
+    tt = [tam_cost(e3sm_f(p, max(p // 64, 1)), 256).inter_comm
+          for p in (1024, 4096, 16384)]
+    assert max(tt) / min(tt) < 2.5  # flat-ish in P
+
+
+def test_tpu_preset():
+    m = Machine.tpu_v5e()
+    w = Workload(P=512, nodes=2, P_G=16, k=1000, total_bytes=1 << 30,
+                 coalesce_ratio=0.1)
+    assert tam_cost(w, 32, m).total < twophase_cost(w, m).total

@@ -1,0 +1,113 @@
+"""Host-level TAM vs two-phase: byte-identical files, congestion and
+coalescing behavior on the paper's I/O patterns."""
+import numpy as np
+import pytest
+
+from repro.checkpoint.host_io import HostCollectiveIO
+from repro.io_patterns import (btio_pattern, e3sm_f_pattern, e3sm_g_pattern,
+                               s3d_pattern)
+
+PATTERNS = {
+    "e3sm_g": lambda P: e3sm_g_pattern(P),
+    "e3sm_f": lambda P: e3sm_f_pattern(P),
+    "btio": lambda P: btio_pattern(P, n=32),
+    "s3d": lambda P: s3d_pattern(P, n=16),
+}
+
+
+def _reference_file(reqs, file_len):
+    out = np.zeros(file_len, np.uint8)
+    for offs, lens, data in reqs:
+        starts = np.concatenate([[0], np.cumsum(lens)[:-1]])
+        for o, l, s in zip(offs, lens, starts):
+            out[o:o + l] = data[s:s + l]
+    return out
+
+
+def _file_len(reqs):
+    return int(max((o[-1] + l[-1]) for o, l, _ in reqs if o.size))
+
+
+@pytest.mark.parametrize("pattern", sorted(PATTERNS))
+def test_tam_equals_twophase_equals_reference(pattern, tmp_path):
+    P = 16
+    reqs = PATTERNS[pattern](P)
+    io = HostCollectiveIO(n_ranks=P, n_nodes=4, stripe_size=4096,
+                          stripe_count=3)
+    t_tam = io.write(reqs, str(tmp_path / "tam"), method="tam",
+                     local_aggregators=8)
+    t_2ph = io.write(reqs, str(tmp_path / "tp"), method="twophase")
+    file_len = _file_len(reqs)
+    got_tam = io.read_file(str(tmp_path / "tam"), file_len)
+    got_2ph = io.read_file(str(tmp_path / "tp"), file_len)
+    ref = _reference_file(reqs, file_len)
+    assert np.array_equal(got_tam, ref)
+    assert np.array_equal(got_2ph, ref)
+    # congestion: TAM's global aggregators hear fewer senders
+    assert t_tam.messages_at_ga <= t_2ph.messages_at_ga
+
+
+def test_btio_coalesces_heavily(tmp_path):
+    """Block patterns coalesce at local aggregators (paper SV-B: BTIO
+    1.34e9 -> 2.36e7); interleaved E3SM-style patterns barely coalesce."""
+    P = 16
+    io = HostCollectiveIO(n_ranks=P, n_nodes=4, stripe_size=1 << 16,
+                          stripe_count=2)
+    t_btio = io.write(btio_pattern(P, n=32), str(tmp_path / "b"),
+                      method="tam", local_aggregators=4)
+    t_e3sm = io.write(e3sm_g_pattern(P), str(tmp_path / "e"),
+                      method="tam", local_aggregators=4)
+    assert t_btio.coalesce_ratio < 0.2
+    assert t_btio.coalesce_ratio < t_e3sm.coalesce_ratio
+
+
+def test_tam_reduces_modeled_comm_time(tmp_path):
+    P = 32
+    reqs = e3sm_f_pattern(P, reqs_per_rank=128, req_bytes=16)
+    io = HostCollectiveIO(n_ranks=P, n_nodes=8, stripe_size=2048,
+                          stripe_count=4)
+    t_tam = io.write(reqs, str(tmp_path / "t"), method="tam",
+                     local_aggregators=8)
+    t_2ph = io.write(reqs, str(tmp_path / "p"), method="twophase")
+    assert t_tam.inter_comm < t_2ph.inter_comm
+    assert t_tam.total < t_2ph.total
+
+
+def test_pl_sweep_has_interior_optimum(tmp_path):
+    """Sweep P_L (paper Figs. 4-7): intra falls, inter grows."""
+    P = 16  # BTIO needs a square process count
+    reqs = btio_pattern(P, n=32)
+    io = HostCollectiveIO(n_ranks=P, n_nodes=4, stripe_size=4096,
+                          stripe_count=4)
+    totals, intras, inters = [], [], []
+    for pl in (4, 8, 16):
+        t = io.write(reqs, str(tmp_path / f"x{pl}"), method="tam",
+                     local_aggregators=pl)
+        totals.append(t.total)
+        intras.append(t.intra_comm + t.intra_sort + t.intra_memcpy)
+        inters.append(t.inter_comm)
+    assert intras[0] >= intras[-1]
+    assert inters[0] <= inters[-1]
+
+
+def test_backup_aggregator_on_failure(tmp_path):
+    """A failed local aggregator is replaced by the next healthy group
+    member; the written file is unchanged (straggler mitigation)."""
+    P = 16
+    reqs = e3sm_g_pattern(P)
+    io = HostCollectiveIO(n_ranks=P, n_nodes=4, stripe_size=2048,
+                          stripe_count=2)
+    t_ok = io.write(reqs, str(tmp_path / "a"), method="tam",
+                    local_aggregators=4)
+    t_f = io.write(reqs, str(tmp_path / "b"), method="tam",
+                   local_aggregators=4, failed_aggregators={0, 4})
+    file_len = _file_len(reqs)
+    assert np.array_equal(io.read_file(str(tmp_path / "a"), file_len),
+                          io.read_file(str(tmp_path / "b"), file_len))
+    assert t_f.intra_comm >= t_ok.intra_comm
+
+    import pytest as _pytest
+    with _pytest.raises(RuntimeError):
+        io.write(reqs, str(tmp_path / "c"), method="tam",
+                 local_aggregators=4,
+                 failed_aggregators=set(range(P)))

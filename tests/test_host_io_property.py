@@ -1,0 +1,49 @@
+"""Property-based test: TAM collective write == dense reference for
+arbitrary non-overlapping request patterns (hypothesis)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.host_io import HostCollectiveIO
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 5),
+       st.sampled_from([1, 2, 4]), st.sampled_from([64, 128, 257]))
+def test_tam_write_matches_reference(seed, stripes, nodes_pow, stripe_sz):
+    rng = np.random.default_rng(seed)
+    n_nodes = nodes_pow
+    P = n_nodes * int(rng.integers(1, 5))
+    # carve a byte space into random non-overlapping extents
+    n_ext = int(rng.integers(1, 40))
+    lens = rng.integers(1, 64, size=n_ext)
+    gaps = rng.integers(0, 32, size=n_ext)
+    offs = np.cumsum(gaps) + np.concatenate([[0], np.cumsum(lens)[:-1]])
+    owner = rng.integers(0, P, size=n_ext)
+    reqs = []
+    for p in range(P):
+        sel = owner == p
+        o = offs[sel].astype(np.int64)
+        l = lens[sel].astype(np.int64)
+        order = np.argsort(o, kind="stable")
+        o, l = o[order], l[order]
+        data = rng.integers(1, 255, size=int(l.sum()), dtype=np.uint8)
+        reqs.append((o, l, data))
+
+    io = HostCollectiveIO(n_ranks=P, n_nodes=n_nodes,
+                          stripe_size=stripe_sz, stripe_count=stripes)
+    import tempfile
+    d = tempfile.mkdtemp()
+    io.write(reqs, f"{d}/t", method="tam",
+             local_aggregators=n_nodes * max(1, P // n_nodes // 2))
+    io.write(reqs, f"{d}/p", method="twophase")
+    ends = [int(o[-1] + l[-1]) for o, l, _ in reqs if o.size]
+    file_len = max(ends) if ends else 1
+    ref = np.zeros(file_len, np.uint8)
+    for o, l, data in reqs:
+        starts = np.concatenate([[0], np.cumsum(l)[:-1]])
+        for oo, ll, ss in zip(o, l, starts):
+            ref[oo:oo + ll] = data[ss:ss + ll]
+    got_t = io.read_file(f"{d}/t", file_len)
+    got_p = io.read_file(f"{d}/p", file_len)
+    assert np.array_equal(got_t, ref)
+    assert np.array_equal(got_p, ref)

@@ -1,0 +1,61 @@
+"""Optimizers + schedule."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adafactor, adamw, global_norm, warmup_cosine
+
+
+def _fit(opt, steps=150, lr=0.05):
+    params = {"w": jnp.array([3.0, -2.0]), "b": jnp.zeros(())}
+    target = jnp.array([1.0, 1.0])
+    state = opt.init(params)
+
+    def loss_fn(p):
+        return jnp.sum((p["w"] - target) ** 2) + p["b"] ** 2
+
+    for _ in range(steps):
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, state = opt.update(grads, state, params, lr)
+    return float(loss_fn(params))
+
+
+def test_adamw_converges():
+    assert _fit(adamw(weight_decay=0.0)) < 1e-2
+
+
+def test_adafactor_converges():
+    assert _fit(adafactor(), steps=300, lr=0.1) < 5e-2
+
+
+def test_adamw_moments_dtype_and_clip():
+    opt = adamw(clip_norm=1.0, moment_dtype=jnp.bfloat16)
+    params = {"w": jnp.ones((4, 4))}
+    state = opt.init(params)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    huge = {"w": jnp.full((4, 4), 1e6)}
+    new_p, state = opt.update(huge, state, params, 0.1)
+    # clipped: step bounded regardless of raw gradient scale
+    assert float(jnp.max(jnp.abs(new_p["w"] - params["w"]))) < 10.0
+
+
+def test_adafactor_state_is_factored():
+    opt = adafactor()
+    params = {"w": jnp.ones((32, 16)), "v": jnp.ones((7,))}
+    st = opt.init(params)
+    assert st["f"]["w"]["vr"].shape == (32,)
+    assert st["f"]["w"]["vc"].shape == (16,)
+    assert st["f"]["v"]["v"].shape == (7,)
+
+
+def test_global_norm():
+    assert abs(float(global_norm({"a": jnp.array([3.0]),
+                                  "b": jnp.array([4.0])})) - 5.0) < 1e-6
+
+
+def test_warmup_cosine_shape():
+    lr = warmup_cosine(1.0, warmup=10, total=100)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1.0) < 0.11
+    assert float(lr(99)) < 0.2
+    assert float(lr(5)) < float(lr(10))

@@ -1,0 +1,18 @@
+"""SPMD integration tests — run in a subprocess with 8 virtual devices
+(the main pytest process keeps the real 1-device view; see conftest)."""
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(1200)
+def test_spmd_checks(spmd_env):
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.testing.spmd_checks"],
+        env=spmd_env, capture_output=True, text=True, timeout=1200)
+    print(proc.stdout)
+    if proc.returncode != 0:
+        print(proc.stderr[-3000:])
+    assert proc.returncode == 0, "FAIL lines:\n" + "\n".join(
+        ln for ln in proc.stdout.splitlines() if ln.startswith("FAIL"))
