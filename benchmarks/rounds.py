@@ -1,0 +1,69 @@
+"""Round-engine benchmark: sweep the collective-buffer size.
+
+For each pattern and both schedules (TAM / two-phase), sweep
+``cb_bytes`` on the host-level path (real byte movement, per-round
+incast timing) and report the modeled paper-scale cost with the
+EXECUTED round count wired into the analytical model
+(``Workload.rounds_override`` replacing the one-stripe-per-round
+assumption). Also reports the SPMD round path's static peak
+aggregator buffering vs the single-shot exchange
+(``rounds.peak_aggregator_buffer_elems``) — the round path's is
+independent of the participating rank count.
+
+derived column: executed rounds (sweep rows), modeled total seconds
+(model rows), buffer elements (peak rows).
+"""
+from __future__ import annotations
+
+import tempfile
+
+from repro.checkpoint.host_io import HostCollectiveIO
+from repro.core import cost_model as cm
+from repro.core.rounds import peak_aggregator_buffer_elems
+from repro.io_patterns import btio_pattern, e3sm_g_pattern
+
+PATTERNS = {
+    "e3sm_g": (e3sm_g_pattern, cm.e3sm_g),
+    "btio": (lambda P: btio_pattern(P, n=32), cm.btio),
+}
+CB_SWEEP = (1024, 4096, 16384)
+
+
+def cb_sweep():
+    rows = []
+    P = 16
+    d = tempfile.mkdtemp()
+    for pname, (gen, wl) in sorted(PATTERNS.items()):
+        reqs = gen(P)
+        io = HostCollectiveIO(n_ranks=P, n_nodes=4, stripe_size=1024,
+                              stripe_count=4)
+        for method in ("tam", "twophase"):
+            la = 8 if method == "tam" else None
+            base = io.write(reqs, f"{d}/{pname}_{method}", method=method,
+                            local_aggregators=la)
+            rows.append((f"rounds/{pname}/{method}/single_shot",
+                         base.inter_comm * 1e6, base.rounds_executed))
+            for cb in CB_SWEEP:
+                t = io.write(reqs, f"{d}/{pname}_{method}_{cb}",
+                             method=method, local_aggregators=la,
+                             cb_bytes=cb)
+                rows.append((f"rounds/{pname}/{method}/cb{cb}",
+                             t.inter_comm * 1e6, t.rounds_executed))
+                # paper-scale model with the executed rounds wired in
+                w = cm.with_measured_rounds(
+                    wl(16384, 256), cm.rounds_for_cb(wl(16384, 256),
+                                                     cb * 1024))
+                cost = (cm.tam_cost(w, 256) if method == "tam"
+                        else cm.twophase_cost(w))
+                rows.append((f"rounds/{pname}/{method}/cb{cb}/modeled",
+                             cost.comm * 1e6, round(cost.total, 4)))
+    # static peak-buffer accounting of the SPMD paths (elements)
+    for rpn in (4, 16, 64):
+        peak = peak_aggregator_buffer_elems(
+            data_cap=4096, n_nodes=8, ranks_per_node=rpn,
+            domain_len=1 << 20, cb_buffer_size=8192)
+        rows.append((f"rounds/peak_buf/single_shot/rpn{rpn}", 0.0,
+                     peak["single_shot"]))
+        rows.append((f"rounds/peak_buf/rounds/rpn{rpn}", 0.0,
+                     peak["rounds"]))
+    return rows

@@ -1,18 +1,15 @@
 """Benchmark harness: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV. Requires ``repro`` on the
+path (``pip install -e .`` or ``PYTHONPATH=src``):
 
   PYTHONPATH=src python -m benchmarks.run [--only fig3]
 """
 from __future__ import annotations
 
 import argparse
-import sys
-from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
-
-from benchmarks import kernel_bench, paper_figures, spmd_bytes  # noqa: E402
+from benchmarks import kernel_bench, paper_figures, rounds, spmd_bytes
 
 SUITES = {
     "fig2": paper_figures.fig2_congestion,
@@ -22,6 +19,7 @@ SUITES = {
     "optimal_pl": paper_figures.optimal_pl_sweep,
     "kernels": kernel_bench.sort_coalesce_pack,
     "spmd_bytes": spmd_bytes.collective_bytes,
+    "rounds": rounds.cb_sweep,
 }
 
 

@@ -83,7 +83,8 @@ def _rank_requests(tree, manifest, n_ranks: int):
 def save_checkpoint(tree, path: str | Path, *, step: int = 0,
                     io: HostCollectiveIO | None = None,
                     method: str = "tam",
-                    local_aggregators: int | None = None
+                    local_aggregators: int | None = None,
+                    cb_bytes: int | None = None
                     ) -> tuple[dict, IOTimings]:
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
@@ -92,7 +93,8 @@ def save_checkpoint(tree, path: str | Path, *, step: int = 0,
     manifest = build_manifest(tree, step)
     reqs = _rank_requests(tree, manifest, io.n_ranks)
     timings = io.write(reqs, str(path), method=method,
-                       local_aggregators=local_aggregators)
+                       local_aggregators=local_aggregators,
+                       cb_bytes=cb_bytes)
     manifest["stripe_size"] = io.stripe_size
     manifest["stripe_count"] = io.stripe_count
     (path.parent / (path.name + ".manifest.json")).write_text(
@@ -132,6 +134,7 @@ class CheckpointManager:
     io: HostCollectiveIO
     method: str = "tam"
     local_aggregators: int | None = None
+    cb_bytes: int | None = None    # bounded-buffer rounds (None = single shot)
     keep: int = 3
 
     def save(self, tree, step: int) -> IOTimings:
@@ -139,7 +142,8 @@ class CheckpointManager:
         d.mkdir(parents=True, exist_ok=True)
         _, t = save_checkpoint(
             tree, d / f"ckpt_{step:08d}", step=step, io=self.io,
-            method=self.method, local_aggregators=self.local_aggregators)
+            method=self.method, local_aggregators=self.local_aggregators,
+            cb_bytes=self.cb_bytes)
         self._gc()
         return t
 

@@ -34,9 +34,10 @@ class IOTimings:
     inter_comm: float = 0.0
     inter_sort: float = 0.0
     io: float = 0.0
-    messages_at_ga: int = 0        # max receives at one global aggregator
+    messages_at_ga: int = 0        # max receives at one GA (per round)
     requests_before: int = 0
     requests_after: int = 0
+    rounds_executed: int = 1       # exchange rounds (1 == single shot)
 
     @property
     def comm(self) -> float:
@@ -53,6 +54,13 @@ class IOTimings:
 
 
 PAIR_BYTES = 8  # offset + length metadata per request
+
+
+def _to_domain_local(offs, stripe_size: int, stripe_count: int):
+    """Byte position inside the owning GA's domain image (its stripes
+    concatenated in round order) — mirrors ``domains.to_domain_local``."""
+    return ((offs // stripe_size) // stripe_count) * stripe_size \
+        + offs % stripe_size
 
 
 def _merge_coalesce(reqs: list[tuple[np.ndarray, np.ndarray, np.ndarray]]):
@@ -117,10 +125,14 @@ class HostCollectiveIO:
     def _owner(self, offs):
         return (offs // self.stripe_size) % self.stripe_count
 
+    def _domain_local(self, offs):
+        return _to_domain_local(offs, self.stripe_size, self.stripe_count)
+
     # ------------------------------------------------------------------
     def write(self, rank_requests, path: str, method: str = "tam",
               local_aggregators: int | None = None,
-              failed_aggregators: set[int] | None = None) -> IOTimings:
+              failed_aggregators: set[int] | None = None,
+              cb_bytes: int | None = None) -> IOTimings:
         """rank_requests: list of (offsets[int64], lengths[int64],
         payload[uint8]) per rank, offsets element=byte units here.
         method: "tam" | "twophase". Returns IOTimings; writes
@@ -130,8 +142,17 @@ class HostCollectiveIO:
         aggregators (straggler/failure mitigation): each group falls
         back to its next healthy member — output is unchanged, the
         reassignment only costs one extra intra-node hop in the model.
+
+        cb_bytes: aggregator collective-buffer bytes per round
+        (stripe-aligned, mirroring ``rounds.RoundScheduler``). ``None``
+        keeps the single-shot exchange. Bytes written are identical
+        either way; what changes is the TIMING: each round re-pays the
+        incast latency ``alpha_eff(senders)`` per receive, exactly the
+        cost model's round refinement.
         """
         failed_aggregators = failed_aggregators or set()
+        if cb_bytes is not None and cb_bytes % self.stripe_size:
+            raise ValueError("cb_bytes must be a stripe_size multiple")
         m = self.machine
         t = IOTimings()
         P, nodes = self.n_ranks, self.n_nodes
@@ -183,13 +204,24 @@ class HostCollectiveIO:
         t.requests_after = sum(la[0].size for la in per_la)
 
         # ---- inter-node: local aggregators -> global aggregators -------
+        # Round partition (mirrors core.rounds.RoundScheduler): round r
+        # covers domain-local bytes [r*cb, (r+1)*cb) of every GA; with
+        # cb_bytes=None everything lands in round 0 (single shot).
+        n_rounds = 1
+        if cb_bytes is not None:
+            dom_ends = [int((self._domain_local(o) + l).max())
+                        for o, l, _ in per_la if o.size]
+            n_rounds = max(-(-max(dom_ends, default=1) // cb_bytes), 1)
         ga_inbox: list[list] = [[] for _ in range(self.stripe_count)]
-        ga_msgs = np.zeros(self.stripe_count, np.int64)
-        ga_bytes = np.zeros(self.stripe_count, np.int64)
+        ga_msgs = np.zeros((self.stripe_count, n_rounds), np.int64)
+        ga_bytes = np.zeros((self.stripe_count, n_rounds), np.int64)
         for offs, lens, packed in per_la:
             if offs.size == 0:
                 continue
             owner = self._owner(offs)
+            rnd = (self._domain_local(offs) // cb_bytes
+                   if cb_bytes is not None
+                   else np.zeros(offs.size, np.int64))
             starts = np.concatenate([[0], np.cumsum(lens)[:-1]])
             for g in range(self.stripe_count):
                 sel = owner == g
@@ -200,11 +232,20 @@ class HostCollectiveIO:
                 pd = np.concatenate([packed[s:s + l] for s, l in
                                      zip(starts[sel], pl)])
                 ga_inbox[g].append((po, pl, pd))
-                ga_msgs[g] += 1
-                ga_bytes[g] += int(pl.sum()) + po.size * PAIR_BYTES
+                for r in np.unique(rnd[sel]):
+                    in_r = rnd[sel] == r
+                    ga_msgs[g, r] += 1       # one (re)send per round
+                    ga_bytes[g, r] += (int(pl[in_r].sum())
+                                       + int(in_r.sum()) * PAIR_BYTES)
+        t.rounds_executed = n_rounds
         t.messages_at_ga = int(ga_msgs.max(initial=0))
+        # per-round incast: a receiver with S concurrent senders pays
+        # alpha_eff(S) each (cost_model refinement 2, applied to the
+        # single-shot exchange too so the timings are comparable);
+        # rounds serialize.
+        alpha = np.vectorize(m.alpha_eff)(ga_msgs) * ga_msgs
         t.inter_comm = float(
-            (m.alpha_inter * ga_msgs + m.beta_inter * ga_bytes).max(initial=0))
+            (alpha + m.beta_inter * ga_bytes).max(axis=0, initial=0).sum())
 
         # ---- I/O step: sort + write segments ---------------------------
         total_bytes = 0
@@ -247,8 +288,7 @@ def _domain_image(offs, lens, packed, g, stripe_size, stripe_count):
     n_rounds = int(rounds.max()) + 1
     img = np.zeros(n_rounds * stripe_size, np.uint8)
     starts = np.concatenate([[0], np.cumsum(lens)[:-1]])
-    for o, l, s in zip(offs, lens, starts):
-        local = (o // stripe_size) // stripe_count * stripe_size + \
-            o % stripe_size
-        img[local:local + l] = packed[s:s + l]
+    locals_ = _to_domain_local(offs, stripe_size, stripe_count)
+    for o, l, s in zip(locals_, lens, starts):
+        img[o:o + l] = packed[s:s + l]
     return img

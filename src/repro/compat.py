@@ -1,0 +1,45 @@
+"""Version-compatibility shims for JAX API drift.
+
+``shard_map`` moved twice across the JAX versions this repo must run on:
+
+* old (<= 0.4.x): ``jax.experimental.shard_map.shard_map`` with a
+  ``check_rep`` kwarg;
+* new (>= 0.5/0.6): top-level ``jax.shard_map`` where ``check_rep``
+  was renamed ``check_vma``.
+
+All repro modules import :func:`shard_map` from here and always pass the
+NEW kwarg spelling (``check_vma``); the shim renames it when running on
+an older JAX. Anything else is forwarded untouched.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # pragma: no cover - exercised only on old JAX
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f: Callable, *, mesh, in_specs, out_specs,
+              check_vma: bool | None = None, **kwargs: Any):
+    """``jax.shard_map`` with the ``check_vma``/``check_rep`` rename
+    papered over (pass ``check_vma``; old JAX receives ``check_rep``)."""
+    if check_vma is not None:
+        key = "check_vma" if "check_vma" in _PARAMS else "check_rep"
+        kwargs[key] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kwargs)
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` fallback for JAX versions that predate it
+    (inside an SPMD context the size is ``psum(1, axis)``)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)

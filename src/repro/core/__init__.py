@@ -9,8 +9,12 @@ from repro.core.coalesce import (  # noqa: F401
 )
 from repro.core.twophase import IOConfig, make_twophase_write  # noqa: F401
 from repro.core.tam import make_tam_write  # noqa: F401
+from repro.core.rounds import (  # noqa: F401
+    RoundScheduler, peak_aggregator_buffer_elems,
+)
 from repro.core.cost_model import (  # noqa: F401
-    Machine, Workload, optimal_PL, tam_cost, twophase_cost,
+    Machine, Workload, optimal_PL, rounds_for_cb, tam_cost, twophase_cost,
+    with_measured_rounds,
 )
 from repro.core.hierarchical import (  # noqa: F401
     compressed_psum, two_layer_all_to_all, two_layer_psum,

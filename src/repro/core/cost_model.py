@@ -75,6 +75,7 @@ class Workload:
     coalesce_ratio: float = 1.0   # k'/k after intra-node coalescing
     pair_bytes: int = 8
     stripe_size: float = 1 << 20  # 1 MiB (paper's setting)
+    rounds_override: float | None = None  # executed rounds, when measured
 
     @property
     def q(self) -> int:
@@ -82,6 +83,12 @@ class Workload:
 
     @property
     def rounds(self) -> float:
+        """Exchange rounds. Defaults to ROMIO's one-stripe-per-aggregator
+        assumption; a measured executed round count (the round engine's
+        ``RoundScheduler.n_rounds`` / host-path ``rounds_executed``)
+        replaces the assumption via ``rounds_override``."""
+        if self.rounds_override is not None:
+            return max(float(self.rounds_override), 1.0)
         return max(self.total_bytes / (self.stripe_size * self.P_G), 1.0)
 
     @property
@@ -173,6 +180,19 @@ def optimal_PL(w: Workload, m: Machine = Machine(),
         candidates = tuple(cands)
     best = min(candidates, key=lambda pl: tam_cost(w, pl, m).total)
     return best, tam_cost(w, best, m)
+
+
+def rounds_for_cb(w: Workload, cb_bytes: float) -> float:
+    """Executed round count for a collective-buffer size: each aggregator
+    drains its ``total_bytes / P_G`` domain ``cb_bytes`` per round."""
+    return max(math.ceil(w.total_bytes / (cb_bytes * w.P_G)), 1)
+
+
+def with_measured_rounds(w: Workload, rounds: float) -> Workload:
+    """Pin the model's round count to an executed value (e.g. the host
+    path's ``IOTimings.rounds_executed`` or ``RoundScheduler.n_rounds``)."""
+    import dataclasses
+    return dataclasses.replace(w, rounds_override=float(rounds))
 
 
 def receives_per_global_aggregator(w: Workload, P_L: int | None) -> float:

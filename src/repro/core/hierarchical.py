@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import axis_size
+
 
 def _pad_to(x: jax.Array, mult: int) -> tuple[jax.Array, int]:
     n = x.shape[0]
@@ -41,7 +43,7 @@ def two_layer_psum(x: jax.Array, fast_axis: str, slow_axis: str) -> jax.Array:
     (1/q of the bytes) and exposes the slow hop for compression.
     """
     orig_shape = x.shape
-    q = lax.axis_size(fast_axis)
+    q = axis_size(fast_axis)
     flat, n = _pad_to(x.reshape(-1), q)
     shard = lax.psum_scatter(flat, fast_axis, scatter_dimension=0,
                              tiled=True)                   # intra: RS
@@ -79,7 +81,7 @@ def compressed_psum(x: jax.Array, residual: jax.Array, fast_axis: str,
     (Karimireddy et al., 2019). Returns (psum_result, new_residual).
     """
     orig_shape = x.shape
-    q = lax.axis_size(fast_axis)
+    q = axis_size(fast_axis)
     flat, n = _pad_to(x.reshape(-1), q)
     shard = lax.psum_scatter(flat, fast_axis, scatter_dimension=0,
                              tiled=True)
@@ -107,7 +109,7 @@ def two_layer_all_to_all(x: jax.Array, fast_axis: str, slow_axis: str) -> jax.Ar
     axes, but every slow-axis message is a q-chunk aggregate (fewer,
     larger slow-axis transfers — TAM's congestion fix for MoE dispatch).
     """
-    ns, nf = lax.axis_size(slow_axis), lax.axis_size(fast_axis)
+    ns, nf = axis_size(slow_axis), axis_size(fast_axis)
     assert x.shape[0] == ns * nf, "leading dim must be n_slow * n_fast"
     tail = x.shape[1:]
     # group by (dest pod, dest fast slot): grouped[t, u] -> rank (t, u)

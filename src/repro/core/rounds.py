@@ -1,0 +1,247 @@
+"""Round-scheduled bounded-buffer exchange engine (DESIGN).
+
+Why rounds
+----------
+ROMIO's Lustre driver (paper §II) never materializes a whole file
+domain worth of incoming traffic at an aggregator: the two-phase
+exchange runs in ROUNDS, each bounded by the aggregator's collective
+buffer (``cb_buffer_size``, romio_cb_buffer_size). Our analytical model
+already charges for this (``cost_model`` refinement 1: each round
+re-runs the request exchange and re-pays the incast latency), but the
+single-shot SPMD paths in ``twophase``/``tam`` exchanged everything at
+once, so aggregator-side receive buffers grew as
+``O(P * data_cap)`` — the per-rank payload capacity times every
+participating rank. That caps the file size a fixed mesh can drive.
+
+The protocol
+------------
+Aggregator ``g`` owns the contiguous file domain
+``[g * domain_len, (g+1) * domain_len)``. :class:`RoundScheduler`
+partitions every domain into ``domain_len / cb_buffer_size``
+stripe-aligned windows; round ``t`` moves exactly the requests whose
+offsets fall in window ``t`` of their destination domain:
+
+1. **split** — requests are split at window boundaries once, up front
+   (``requests.split_at_stripes``), so each request lives in exactly one
+   (destination, round) window;
+2. **select** — per round, the active requests are compacted to the
+   front of a static-capacity list (offset order preserved);
+3. **exchange** — the existing ``bucket_by_dest`` / ``all_to_all`` /
+   ``flatten_buckets`` / ``sort_with`` pipeline runs with per-bucket
+   payload capacity ``min(data_cap, cb_buffer_size)``;
+4. **pack + merge** — each rank packs its received slice into a
+   ``cb_buffer_size`` window image and the images are merged across the
+   node's other receive streams with a masked max-combine
+   (``lax.pmax``), NOT a gather: the merge buffer stays
+   ``O(cb_buffer_size)`` instead of ``O(ranks_per_node * data_cap)``;
+5. **accumulate** — the window is written into the carried domain
+   buffer at ``t * cb_buffer_size`` and the loop (``lax.fori_loop``, so
+   compiled size is round-count independent) advances.
+
+Peak aggregator-side buffering is therefore
+``n_nodes * min(data_cap, cb) + cb`` elements — independent of the
+number of participating ranks (see
+:func:`peak_aggregator_buffer_elems`, asserted by tests/test_rounds.py).
+The same mesh can drive arbitrarily large files by holding
+``cb_buffer_size`` fixed while rounds grow.
+
+Semantics: concurrently written regions must not overlap (the MPI
+standard leaves overlapping collective writes undefined); when they do,
+the masked max-combine resolves each element deterministically to the
+maximum written value, and capacity overflow is reported through the
+``dropped_requests`` / ``dropped_elems`` stats, never silent.
+
+Cost-model coupling
+-------------------
+The executed round count is ``RoundScheduler.n_rounds`` ==
+``cost_model.Workload.rounds`` when ``rounds_override`` is wired from a
+measured run (``IOTimings.rounds_executed`` on the host path). Each
+round pays ``alpha_eff(senders)`` once (incast refinement 2), which is
+exactly what ``HostCollectiveIO.write(cb_bytes=...)`` times.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import coalesce as co
+from repro.core.domains import FileLayout
+from repro.core.exchange import (bucket_by_dest, flatten_buckets,
+                                 repack_sorted, sort_with)
+from repro.core.requests import PAD_OFFSET, RequestList, split_at_stripes
+
+
+@dataclass(frozen=True)
+class RoundScheduler:
+    """Static partition of each aggregator's file domain into rounds.
+
+    layout:         striped file layout (element units).
+    n_aggregators:  global aggregators (== slow-axis size in SPMD).
+    cb_buffer_size: collective-buffer elements per aggregator per round;
+                    ``None`` = one round == the single-shot behavior.
+    """
+
+    layout: FileLayout
+    n_aggregators: int
+    cb_buffer_size: int | None = None
+
+    def __post_init__(self):
+        if self.layout.file_len % self.n_aggregators:
+            raise ValueError("file_len must divide evenly among aggregators")
+        cb = self.cb
+        if self.domain_len % cb:
+            raise ValueError(
+                f"cb_buffer_size {cb} must divide domain_len "
+                f"{self.domain_len} (stripe-aligned rounds)")
+        s = self.layout.stripe_size
+        if cb % s and s % cb:
+            raise ValueError(
+                f"cb_buffer_size {cb} must align with stripe_size {s}")
+
+    @property
+    def domain_len(self) -> int:
+        return self.layout.file_len // self.n_aggregators
+
+    @property
+    def cb(self) -> int:
+        return (self.cb_buffer_size if self.cb_buffer_size is not None
+                else self.domain_len)
+
+    @property
+    def n_rounds(self) -> int:
+        return -(-self.domain_len // self.cb)
+
+    def max_spans(self, data_cap: int) -> int:
+        """Windows one request (length <= data_cap) can straddle."""
+        return data_cap // self.cb + 2
+
+    def window_of(self, offsets: jax.Array) -> jax.Array:
+        """Round in which an offset is exchanged (domain-local window)."""
+        return (offsets % self.domain_len) // self.cb
+
+
+def _compact_active(r: RequestList, starts: jax.Array, dest: jax.Array,
+                    active: jax.Array):
+    """Move the active requests to the front, preserving offset order."""
+    off = jnp.where(active, r.offsets, PAD_OFFSET)
+    ln = jnp.where(active, r.lengths, 0)
+    order = jnp.argsort(jnp.where(active, 0, 1).astype(jnp.int32),
+                        stable=True)
+    return (RequestList(off[order], ln[order],
+                        jnp.sum(active, dtype=jnp.int32)),
+            starts[order], dest[order])
+
+
+def _lowest(dtype) -> jax.Array:
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(-jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).min, dtype)
+
+
+def exchange_rounds_write(sched: RoundScheduler, node_axis: str,
+                          merge_axes: tuple[str, ...], r: RequestList,
+                          starts: jax.Array, data: jax.Array):
+    """Round loop of the collective write (runs inside a shard_map body).
+
+    r/starts/data: this sender's offset-sorted requests, the payload
+    start of each request inside ``data``, and the packed payload.
+    Returns (domain shard [domain_len], stats dict); ``requests_at_ga``
+    is already summed over ``merge_axes`` (replicated at the node).
+    """
+    n_dest, cb, dl = sched.n_aggregators, sched.cb, sched.domain_len
+    data_cap = data.shape[0]
+    split = split_at_stripes(r, cb, sched.max_spans(data_cap))
+    s_starts = co.request_starts(split)
+    dest = (split.offsets // dl).astype(jnp.int32)
+    window = sched.window_of(split.offsets)
+    round_req_cap = min(split.capacity, cb)
+    round_data_cap = min(data_cap, cb)
+    base0 = lax.axis_index(node_axis) * dl
+    a2a = partial(lax.all_to_all, axis_name=node_axis, split_axis=0,
+                  concat_axis=0, tiled=True)
+    low = _lowest(data.dtype)
+
+    def body(t, carry):
+        buf, drop_r, drop_e, reqs_rx = carry
+        active = split.valid_mask() & (window == t)
+        act_r, act_starts, act_dest = _compact_active(split, s_starts,
+                                                      dest, active)
+        act_data = repack_sorted(act_r, act_starts, data, data_cap)
+        b = bucket_by_dest(act_r, co.request_starts(act_r), act_data,
+                           act_dest, n_dest, round_req_cap, round_data_cap)
+        rx_off, rx_len, rx_data = (a2a(b.offsets), a2a(b.lengths),
+                                   a2a(b.data))
+        rx_cnt = a2a(b.counts)
+        merged, starts_m, data_flat = flatten_buckets(rx_off, rx_len,
+                                                      rx_cnt, rx_data)
+        sorted_r, starts_s = sort_with(merged, starts_m)
+        base = base0 + t * cb
+        win = co.pack_data(sorted_r, starts_s, data_flat, cb, base=base)
+        mask = co.pack_data(sorted_r, starts_s,
+                            jnp.ones_like(data_flat), cb, base=base)
+        comb = lax.pmax(jnp.where(mask != 0, win, low), merge_axes)
+        anyw = lax.pmax(mask, merge_axes)
+        final = jnp.where(anyw != 0, comb, jnp.zeros((), data.dtype))
+        buf = lax.dynamic_update_slice(buf, final, (t * cb,))
+        return (buf, drop_r + b.dropped_requests, drop_e + b.dropped_elems,
+                reqs_rx + merged.count)
+
+    init = (jnp.zeros((dl,), data.dtype), jnp.int32(0), jnp.int32(0),
+            jnp.int32(0))
+    buf, drop_r, drop_e, reqs_rx = lax.fori_loop(0, sched.n_rounds, body,
+                                                 init)
+    return buf, {
+        "dropped_requests": drop_r,
+        "dropped_elems": drop_e,
+        "requests_at_ga": lax.psum(reqs_rx, merge_axes),
+    }
+
+
+def exchange_rounds_read(sched: RoundScheduler, node_axis: str,
+                         r: RequestList, starts: jax.Array,
+                         file_shard: jax.Array, data_cap: int) -> jax.Array:
+    """Round loop of the collective read: per round, aggregators
+    broadcast one ``cb``-sized window over the slow axis and every rank
+    gathers the elements of its requests falling in that window. Peak
+    per-rank buffering is ``n_nodes * cb`` instead of ``file_len``.
+    """
+    n_dest, cb, dl = sched.n_aggregators, sched.cb, sched.domain_len
+    cap = r.capacity
+    eidx = jnp.arange(data_cap, dtype=jnp.int32)
+    req_of = jnp.repeat(jnp.arange(cap, dtype=jnp.int32), r.lengths,
+                        total_repeat_length=data_cap)
+    fpos = r.offsets[req_of] + (eidx - starts[req_of])
+    live = eidx < jnp.sum(r.lengths, dtype=jnp.int32)
+    fpos = jnp.where(live, fpos, 0)
+    dest, wloc = fpos // dl, fpos % dl
+
+    def body(t, out):
+        win = lax.dynamic_slice_in_dim(file_shard, t * cb, cb)
+        allw = lax.all_gather(win, node_axis, axis=0, tiled=True)
+        active = live & (wloc // cb == t)
+        src = dest * cb + (wloc - t * cb)
+        vals = allw[jnp.clip(src, 0, n_dest * cb - 1)]
+        return jnp.where(active, vals, out)
+
+    return lax.fori_loop(0, sched.n_rounds, body,
+                         jnp.zeros((data_cap,), file_shard.dtype))
+
+
+def peak_aggregator_buffer_elems(data_cap: int, n_nodes: int,
+                                 ranks_per_node: int, domain_len: int,
+                                 cb_buffer_size: int | None) -> dict:
+    """Static receive-side buffer sizes (elements) of both write paths.
+
+    ``single_shot`` is the flattened payload stack after the slow-axis
+    all_to_all plus the intra-node gather — linear in the participating
+    rank count. ``rounds`` is the a2a slice plus one window image —
+    independent of ``ranks_per_node`` (the acceptance criterion).
+    """
+    single = n_nodes * ranks_per_node * data_cap + domain_len
+    cb = cb_buffer_size if cb_buffer_size is not None else domain_len
+    rounds = n_nodes * min(data_cap, cb) + cb + domain_len
+    return {"single_shot": single, "rounds": rounds}

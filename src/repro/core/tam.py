@@ -33,13 +33,13 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import axis_size, shard_map
 from repro.core import coalesce as co
+from repro.core import rounds
 from repro.core.domains import FileLayout
 from repro.core.exchange import bucket_by_dest, flatten_buckets, repack_sorted, sort_with
 from repro.core.requests import RequestList, mask_invalid
 from repro.core.twophase import IOConfig
-
-shard_map = jax.shard_map
 
 
 def _intra_node_aggregate(cfg: IOConfig, r: RequestList, data: jax.Array,
@@ -87,6 +87,30 @@ def _tam_write_shard_fn(layout: FileLayout, cfg: IOConfig, n_nodes: int,
         cfg, r, data, use_kernels)
     agg_starts = co.request_starts(agg_r)
 
+    if cfg.cb_buffer_size is not None:
+        # round-scheduled stage 2: only the inter-node hop is bounded;
+        # stage 1 stays whole-payload (the fast axis is not the memory
+        # bottleneck). Stage-2 state is replicated across lmem, so the
+        # window merge and receive stats run over lagg only (the pmax
+        # combine is idempotent under that replication).
+        sched = rounds.RoundScheduler(layout, n_nodes, cfg.cb_buffer_size)
+        shard, st = rounds.exchange_rounds_write(
+            sched, node, (lagg,), agg_r, agg_starts, packed)
+        lmem_size = axis_size(lmem)
+        stats = {
+            "dropped_requests": lax.psum(
+                st["dropped_requests"] + drop_coal * lmem_size,
+                (node, lagg, lmem)) // lmem_size,
+            "dropped_elems": lax.psum(st["dropped_elems"],
+                                      (node, lagg, lmem)) // lmem_size,
+            "requests_before_coalesce": lax.psum(n_before, (node, lagg)) //
+                lmem_size,
+            "requests_after_coalesce": lax.psum(n_after, (node, lagg)) //
+                lmem_size,
+            "requests_at_ga": st["requests_at_ga"][None],
+        }
+        return shard[None], stats
+
     # ---- stage 2: inter-node (local aggregators only) ----------------
     domain_len = layout.file_len // n_nodes
     dest = agg_r.offsets // domain_len
@@ -116,9 +140,9 @@ def _tam_write_shard_fn(layout: FileLayout, cfg: IOConfig, n_nodes: int,
             buckets.dropped_requests + drop_coal, (node, lagg, lmem)),
         "dropped_elems": lax.psum(buckets.dropped_elems, (node, lagg, lmem)),
         "requests_before_coalesce": lax.psum(n_before, (node, lagg)) //
-            jax.lax.axis_size(lmem),
+            axis_size(lmem),
         "requests_after_coalesce": lax.psum(n_after, (node, lagg)) //
-            jax.lax.axis_size(lmem),
+            axis_size(lmem),
         "requests_at_ga": sorted_r.count[None],
     }
     return shard[None], stats
@@ -135,6 +159,8 @@ def make_tam_write(mesh: jax.sharding.Mesh, layout: FileLayout,
     n_nodes = mesh.shape[node]
     if layout.file_len % n_nodes:
         raise ValueError("file_len must divide evenly among aggregators")
+    if cfg.cb_buffer_size is not None:  # validate the round partition now
+        rounds.RoundScheduler(layout, n_nodes, cfg.cb_buffer_size)
     rank_spec = P((node, lagg, lmem))
     fn = partial(_tam_write_shard_fn, layout, cfg, n_nodes, use_kernels)
     return shard_map(
@@ -166,6 +192,15 @@ def make_tam_read(mesh: jax.sharding.Mesh, layout: FileLayout,
     def fn(offsets, lengths, count, file_shard):
         r = mask_invalid(RequestList(offsets.reshape(-1),
                                      lengths.reshape(-1), count.reshape(())))
+        starts = co.request_starts(r)
+        if cfg.cb_buffer_size is not None:
+            # rounds bound the slow-axis broadcast at one window/round
+            sched = rounds.RoundScheduler(layout, n_nodes,
+                                          cfg.cb_buffer_size)
+            out = rounds.exchange_rounds_read(
+                sched, node, r, starts, file_shard.reshape(-1),
+                cfg.data_cap)
+            return out[None]
         # stage 2 reversed: every node obtains the full file image only of
         # the domains it needs; here we conservatively gather the file over
         # the slow axis once per node (one receive per GA pair, P_L/P_G
@@ -173,7 +208,6 @@ def make_tam_read(mesh: jax.sharding.Mesh, layout: FileLayout,
         whole = lax.all_gather(file_shard.reshape(-1), node, axis=0,
                                tiled=True)
         # stage 1 reversed: node-local distribution from the local image.
-        starts = co.request_starts(r)
         return co.unpack_data(r, starts, whole, cfg.data_cap)[None]
 
     return shard_map(

@@ -31,30 +31,36 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import coalesce as co
+from repro.core import rounds
 from repro.core.domains import FileLayout
 from repro.core.exchange import Buckets, bucket_by_dest, flatten_buckets, sort_with
 from repro.core.requests import RequestList, mask_invalid
-
-shard_map = jax.shard_map
 
 
 @dataclass(frozen=True)
 class IOConfig:
     """Static capacities for the SPMD collective-I/O paths.
 
-    req_cap:       per-rank request-list capacity.
-    data_cap:      per-rank payload capacity (elements).
-    coalesce_cap:  post-coalesce metadata capacity forwarded by a local
-                   aggregator (TAM stage 2). Patterns that coalesce well
-                   (BTIO/S3D-like) allow coalesce_cap << lmem * req_cap —
-                   that is TAM's inter-node metadata saving.
-    axis_names:    (node, lagg, lmem) mesh-axis names.
+    req_cap:        per-rank request-list capacity.
+    data_cap:       per-rank payload capacity (elements).
+    coalesce_cap:   post-coalesce metadata capacity forwarded by a local
+                    aggregator (TAM stage 2). Patterns that coalesce well
+                    (BTIO/S3D-like) allow coalesce_cap << lmem * req_cap —
+                    that is TAM's inter-node metadata saving.
+    cb_buffer_size: aggregator collective-buffer elements per round
+                    (ROMIO's romio_cb_buffer_size). ``None`` keeps the
+                    single-shot exchange; setting it bounds aggregator
+                    buffering at O(cb_buffer_size) independent of the
+                    rank count (see ``repro.core.rounds``).
+    axis_names:     (node, lagg, lmem) mesh-axis names.
     """
 
     req_cap: int
     data_cap: int
     coalesce_cap: int | None = None
+    cb_buffer_size: int | None = None
     axis_names: tuple[str, str, str] = ("node", "lagg", "lmem")
 
 
@@ -74,6 +80,20 @@ def _twophase_shard_fn(layout: FileLayout, cfg: IOConfig, n_nodes: int,
                                  count.reshape(())))
     data = data.reshape(-1)
     starts = co.request_starts(r)
+
+    if cfg.cb_buffer_size is not None:
+        # round-scheduled exchange: aggregator buffers O(cb_buffer_size)
+        sched = rounds.RoundScheduler(layout, n_nodes, cfg.cb_buffer_size)
+        shard, st = rounds.exchange_rounds_write(
+            sched, node, (lagg, lmem), r, starts, data)
+        stats = {
+            "dropped_requests": lax.psum(st["dropped_requests"],
+                                         (node, lagg, lmem)),
+            "dropped_elems": lax.psum(st["dropped_elems"],
+                                      (node, lagg, lmem)),
+            "requests_at_ga": st["requests_at_ga"][None],
+        }
+        return shard[None], stats
 
     # route directly to the owning global aggregator (= node id)
     domain_len = layout.file_len // n_nodes
@@ -116,11 +136,19 @@ def make_twophase_write(mesh: jax.sharding.Mesh, layout: FileLayout,
     Inputs (global shapes, sharded over all three axes on dim 0):
       offsets/lengths [P, req_cap], count [P], data [P, data_cap]
     Output: file [n_nodes, domain_len] sharded over ``node``; stats.
+
+    Single-shot contract: requests must not span file-domain
+    boundaries (spanning tails are ignored by domain packing, as ROMIO
+    expects the file-view flattening to split them). The round path
+    (``cfg.cb_buffer_size`` set) splits at window — hence domain —
+    boundaries itself and has no such restriction.
     """
     node, lagg, lmem = cfg.axis_names
     n_nodes = mesh.shape[node]
     if layout.file_len % n_nodes:
         raise ValueError("file_len must divide evenly among aggregators")
+    if cfg.cb_buffer_size is not None:  # validate the round partition now
+        rounds.RoundScheduler(layout, n_nodes, cfg.cb_buffer_size)
     rank_spec = P((node, lagg, lmem))
     fn = partial(_twophase_shard_fn, layout, cfg, n_nodes)
     return shard_map(
@@ -135,6 +163,8 @@ def make_twophase_read(mesh: jax.sharding.Mesh, layout: FileLayout,
                        cfg: IOConfig):
     """Baseline collective read: aggregators broadcast their file domains
     (all_gather over the slow axis), every rank gathers its own requests.
+    With ``cb_buffer_size`` set, the broadcast is one window per round
+    instead of the whole domain.
     """
     node, lagg, lmem = cfg.axis_names
     n_nodes = mesh.shape[node]
@@ -144,9 +174,16 @@ def make_twophase_read(mesh: jax.sharding.Mesh, layout: FileLayout,
     def fn(offsets, lengths, count, file_shard):
         r = mask_invalid(RequestList(offsets.reshape(-1),
                                      lengths.reshape(-1), count.reshape(())))
+        starts = co.request_starts(r)
+        if cfg.cb_buffer_size is not None:
+            sched = rounds.RoundScheduler(layout, n_nodes,
+                                          cfg.cb_buffer_size)
+            out = rounds.exchange_rounds_read(
+                sched, node, r, starts, file_shard.reshape(-1),
+                cfg.data_cap)
+            return out[None]
         whole = lax.all_gather(file_shard.reshape(-1), node, axis=0,
                                tiled=True)
-        starts = co.request_starts(r)
         out = co.unpack_data(r, starts, whole, cfg.data_cap)
         return out[None]
 

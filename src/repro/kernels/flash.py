@@ -52,10 +52,14 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal, window,
 
     def body(i, carry):
         m, l, acc = carry
-        kblk = pl.load(k_ref, (0, pl.dslice(i * block_kv, block_kv),
-                               slice(None))).astype(jnp.float32)
-        vblk = pl.load(v_ref, (0, pl.dslice(i * block_kv, block_kv),
-                               slice(None))).astype(jnp.float32)
+        # NB: dslice(0, 1) + squeeze, not an int indexer — integer dims
+        # in pl.load are rejected by older Pallas versions.
+        kblk = pl.load(k_ref, (pl.dslice(0, 1),
+                               pl.dslice(i * block_kv, block_kv),
+                               slice(None)))[0].astype(jnp.float32)
+        vblk = pl.load(v_ref, (pl.dslice(0, 1),
+                               pl.dslice(i * block_kv, block_kv),
+                               slice(None)))[0].astype(jnp.float32)
         kv_pos = (i * block_kv
                   + jax.lax.broadcasted_iota(jnp.int32, (block_kv, 1),
                                              0)[:, 0])

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def pipeline_apply(stage_fn, mesh, *, axis: str = "pipe",
                    microbatches: int):
@@ -79,7 +81,7 @@ def pipeline_apply(stage_fn, mesh, *, axis: str = "pipe",
             outs.shape[0] // S, 0)
         return mine
 
-    return jax.shard_map(
+    return shard_map(
         shard_fn, mesh=mesh, check_vma=False,
         in_specs=(P(axis), P(axis)),
         out_specs=P(axis))

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
+
 FAILURES = []
 
 
@@ -91,14 +93,14 @@ def main():
     # ---- hierarchical collectives ------------------------------------
     mesh2 = jax.make_mesh((2, 4), ("pod", "ici"))
     x = jnp.asarray(rng.normal(size=(8, 33)).astype(np.float32))
-    r2 = jax.jit(jax.shard_map(
+    r2 = jax.jit(shard_map(
         lambda xs: two_layer_psum(xs.reshape(33), "ici", "pod"),
         mesh=mesh2, in_specs=P(("pod", "ici")), out_specs=P(),
         check_vma=False))(x)
     check("two_layer_psum",
           np.allclose(np.asarray(r2), np.asarray(x.sum(0)), atol=1e-4))
 
-    outc, nres = jax.jit(jax.shard_map(
+    outc, nres = jax.jit(shard_map(
         lambda xs, res: compressed_psum(xs.reshape(33), res.reshape(33),
                                         "ici", "pod"),
         mesh=mesh2, in_specs=(P(("pod", "ici")), P(("pod", "ici"))),
@@ -111,7 +113,7 @@ def main():
           float(jnp.abs(nres).sum()) > 0)
 
     xa = jnp.arange(8 * 8 * 5, dtype=jnp.int32).reshape(8, 8 * 5)
-    ra = jax.jit(jax.shard_map(
+    ra = jax.jit(shard_map(
         lambda xs: two_layer_all_to_all(xs.reshape(8, 5), "ici", "pod"),
         mesh=mesh2, in_specs=P(("pod", "ici")), out_specs=P(("pod", "ici")),
         check_vma=False))(xa)

@@ -1,0 +1,24 @@
+"""Optional-hypothesis shim: when hypothesis is installed the real
+``given``/``settings``/``st`` are re-exported; when it is missing the
+property tests are skipped individually while the plain unit tests in
+the same module keep running (the seed suite failed collection on this
+import)."""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on environment
+    HAVE_HYPOTHESIS = False
+
+    class _Strategies:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()
+
+    def given(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_a, **_k):
+        return lambda f: f

@@ -1,7 +1,9 @@
 """Property-based test: TAM collective write == dense reference for
 arbitrary non-overlapping request patterns (hypothesis)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+from _hyp_compat import given, settings, st
 
 from repro.checkpoint.host_io import HostCollectiveIO
 

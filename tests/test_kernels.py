@@ -3,7 +3,7 @@ mode (kernels target TPU; CPU validates the kernel bodies)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.core import coalesce as co
 from repro.core.requests import PAD_OFFSET, RequestList, make_requests
