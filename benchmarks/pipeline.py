@@ -1,0 +1,120 @@
+"""Serial-vs-pipelined round engine benchmark.
+
+Two levels, mirroring the repo's split between the literal host-path
+reproduction and the paper-scale analytical model:
+
+* **model sweep** — for each paper workload (e3sm_f/g, btio, s3d) at
+  P=16384 / 256 nodes, sweep the collective-buffer size and compare the
+  serial round total against the pipelined total (``Workload.overlap``
+  refinement: each steady-state round pays ``max(comm, io)`` instead of
+  the sum), for both schedules. Also reports ``optimal_cb``'s
+  autotuned pick.
+* **host measurement** — run the host-level path (real byte movement)
+  at small scale with ``pipeline=`` off/on and report the measured
+  ``overlap_saved`` / ``overlap_fraction`` from ``IOTimings``.
+
+Emits ``BENCH_pipeline.json`` (env ``BENCH_PIPELINE_OUT`` overrides the
+path) so CI can archive the perf trajectory, and returns the usual
+``(name, us, derived)`` rows for ``benchmarks.run``.
+
+derived column: executed rounds (serial rows), pipelined/serial speedup
+(pipelined rows), autotuned cb bytes (auto rows), overlap fraction
+(host rows).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+from repro.checkpoint.host_io import HostCollectiveIO
+from repro.core import cost_model as cm
+from repro.io_patterns import btio_pattern, e3sm_g_pattern
+
+WORKLOADS = {
+    "e3sm_f": cm.e3sm_f,
+    "e3sm_g": cm.e3sm_g,
+    "btio": cm.btio,
+    "s3d": cm.s3d,
+}
+CB_MIB = (1, 4, 16, 64)
+P, NODES, P_L = 16384, 256, 256
+
+HOST_PATTERNS = {
+    "e3sm_g": e3sm_g_pattern,
+    "btio": lambda n: btio_pattern(n, n=32),
+}
+
+
+def _model_sweep(blob):
+    rows = []
+    for name, gen in sorted(WORKLOADS.items()):
+        w = gen(P, NODES)
+        entry = {"cb_sweep": [], "auto": {}}
+        for mib in CB_MIB:
+            cb = mib << 20
+            r = cm.rounds_for_cb(w, cb)
+            ws = cm.with_measured_rounds(w, r)
+            wp = cm.with_overlap(ws, 1.0)
+            for method, cost in (("twophase", cm.twophase_cost),
+                                 ("tam", lambda x: cm.tam_cost(x, P_L))):
+                serial = cost(ws).total
+                pipe = cost(wp).total
+                rows.append((f"pipeline/{name}/{method}/cb{mib}MiB/serial",
+                             serial * 1e6, r))
+                rows.append((f"pipeline/{name}/{method}/cb{mib}MiB/"
+                             "pipelined", pipe * 1e6,
+                             round(serial / pipe, 4)))
+                entry["cb_sweep"].append({
+                    "cb_bytes": cb, "method": method, "rounds": r,
+                    "serial_s": serial, "pipelined_s": pipe,
+                })
+        for method, P_L_arg in (("twophase", None), ("tam", P_L)):
+            cb_auto, cost = cm.optimal_cb(cm.with_overlap(w, 1.0),
+                                          P_L=P_L_arg)
+            rows.append((f"pipeline/{name}/{method}/auto_cb",
+                         cost.total * 1e6, cb_auto))
+            entry["auto"][method] = {"cb_bytes": cb_auto,
+                                     "total_s": cost.total}
+        blob["workloads"][name] = entry
+    return rows
+
+
+def _host_measurement(blob):
+    rows = []
+    n_ranks, cb = 16, 4096
+    d = tempfile.mkdtemp()
+    for pname, gen in sorted(HOST_PATTERNS.items()):
+        reqs = gen(n_ranks)
+        io = HostCollectiveIO(n_ranks=n_ranks, n_nodes=4,
+                              stripe_size=1024, stripe_count=4)
+        entry = {}
+        for method in ("tam", "twophase"):
+            la = 8 if method == "tam" else None
+            ts = io.write(reqs, f"{d}/{pname}_{method}_s", method=method,
+                          local_aggregators=la, cb_bytes=cb)
+            tp = io.write(reqs, f"{d}/{pname}_{method}_p", method=method,
+                          local_aggregators=la, cb_bytes=cb,
+                          pipeline=True)
+            rows.append((f"pipeline/host/{pname}/{method}/serial",
+                         ts.total * 1e6, ts.rounds_executed))
+            rows.append((f"pipeline/host/{pname}/{method}/pipelined",
+                         tp.total * 1e6, round(tp.overlap_fraction, 4)))
+            entry[method] = {
+                "rounds": tp.rounds_executed, "serial_s": ts.total,
+                "pipelined_s": tp.total,
+                "overlap_saved_s": tp.overlap_saved,
+                "overlap_fraction": tp.overlap_fraction,
+            }
+        blob["host"][pname] = entry
+    return rows
+
+
+def serial_vs_pipelined():
+    blob = {"P": P, "nodes": NODES, "P_L": P_L,
+            "workloads": {}, "host": {}}
+    rows = _model_sweep(blob) + _host_measurement(blob)
+    out = os.environ.get("BENCH_PIPELINE_OUT", "BENCH_pipeline.json")
+    with open(out, "w") as f:
+        json.dump(blob, f, indent=1, sort_keys=True)
+    return rows

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import argparse
 
-from benchmarks import kernel_bench, paper_figures, rounds, spmd_bytes
+from benchmarks import kernel_bench, paper_figures, pipeline, rounds, spmd_bytes
 
 SUITES = {
     "fig2": paper_figures.fig2_congestion,
@@ -20,6 +20,7 @@ SUITES = {
     "kernels": kernel_bench.sort_coalesce_pack,
     "spmd_bytes": spmd_bytes.collective_bytes,
     "rounds": rounds.cb_sweep,
+    "pipeline": pipeline.serial_vs_pipelined,
 }
 
 

@@ -84,7 +84,8 @@ def save_checkpoint(tree, path: str | Path, *, step: int = 0,
                     io: HostCollectiveIO | None = None,
                     method: str = "tam",
                     local_aggregators: int | None = None,
-                    cb_bytes: int | None = None
+                    cb_bytes: int | str | None = None,
+                    pipeline: bool = False
                     ) -> tuple[dict, IOTimings]:
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
@@ -94,7 +95,7 @@ def save_checkpoint(tree, path: str | Path, *, step: int = 0,
     reqs = _rank_requests(tree, manifest, io.n_ranks)
     timings = io.write(reqs, str(path), method=method,
                        local_aggregators=local_aggregators,
-                       cb_bytes=cb_bytes)
+                       cb_bytes=cb_bytes, pipeline=pipeline)
     manifest["stripe_size"] = io.stripe_size
     manifest["stripe_count"] = io.stripe_count
     (path.parent / (path.name + ".manifest.json")).write_text(
@@ -134,7 +135,9 @@ class CheckpointManager:
     io: HostCollectiveIO
     method: str = "tam"
     local_aggregators: int | None = None
-    cb_bytes: int | None = None    # bounded-buffer rounds (None = single shot)
+    cb_bytes: int | str | None = None   # rounds (None = single shot,
+    # "auto" = cost-model autotuned per request set)
+    pipeline: bool = False         # overlap each round's exchange/drain
     keep: int = 3
 
     def save(self, tree, step: int) -> IOTimings:
@@ -143,7 +146,7 @@ class CheckpointManager:
         _, t = save_checkpoint(
             tree, d / f"ckpt_{step:08d}", step=step, io=self.io,
             method=self.method, local_aggregators=self.local_aggregators,
-            cb_bytes=self.cb_bytes)
+            cb_bytes=self.cb_bytes, pipeline=self.pipeline)
         self._gc()
         return t
 

@@ -19,11 +19,13 @@ reproductions their x-axes without a 16k-core Cray.
 """
 from __future__ import annotations
 
+import queue
+import threading
 from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.cost_model import Machine
+from repro.core.cost_model import Machine, Workload, optimal_cb
 
 
 @dataclass
@@ -38,6 +40,12 @@ class IOTimings:
     requests_before: int = 0
     requests_after: int = 0
     rounds_executed: int = 1       # exchange rounds (1 == single shot)
+    overlap_saved: float = 0.0     # time hidden by the pipelined drain:
+    # each steady-state round is charged max(comm, io) instead of their
+    # sum, so total == serial total - overlap_saved
+    overlap_fraction: float = 0.0  # overlap_saved / the hideable time
+    # (the smaller of steady-state comm and io); 0 when serial or when
+    # there is no steady state (single round)
 
     @property
     def comm(self) -> float:
@@ -46,7 +54,8 @@ class IOTimings:
     @property
     def total(self) -> float:
         return (self.intra_comm + self.intra_sort + self.intra_memcpy
-                + self.inter_comm + self.inter_sort + self.io)
+                + self.inter_comm + self.inter_sort + self.io
+                - self.overlap_saved)
 
     @property
     def coalesce_ratio(self) -> float:
@@ -132,7 +141,8 @@ class HostCollectiveIO:
     def write(self, rank_requests, path: str, method: str = "tam",
               local_aggregators: int | None = None,
               failed_aggregators: set[int] | None = None,
-              cb_bytes: int | None = None) -> IOTimings:
+              cb_bytes: int | str | None = None,
+              pipeline: bool = False) -> IOTimings:
         """rank_requests: list of (offsets[int64], lengths[int64],
         payload[uint8]) per rank, offsets element=byte units here.
         method: "tam" | "twophase". Returns IOTimings; writes
@@ -145,12 +155,26 @@ class HostCollectiveIO:
 
         cb_bytes: aggregator collective-buffer bytes per round
         (stripe-aligned, mirroring ``rounds.RoundScheduler``). ``None``
-        keeps the single-shot exchange. Bytes written are identical
-        either way; what changes is the TIMING: each round re-pays the
-        incast latency ``alpha_eff(senders)`` per receive, exactly the
-        cost model's round refinement.
+        keeps the single-shot exchange; ``"auto"`` lets
+        :meth:`auto_cb_bytes` pick the size minimizing the modeled
+        total for this request set. Bytes written are identical either
+        way; what changes is the TIMING: each round re-pays the incast
+        latency ``alpha_eff(senders)`` per receive, exactly the cost
+        model's round refinement.
+
+        pipeline: double-buffer the rounds — round t+1's exchange
+        overlaps round t's drain, so each steady-state round is charged
+        ``max(comm, io)`` instead of their sum (``overlap_saved`` /
+        ``overlap_fraction`` report the hidden time), and each segment
+        is physically drained through a double-buffered background
+        writer thread, one cb window at a time. Output bytes are
+        identical to the serial path.
         """
         failed_aggregators = failed_aggregators or set()
+        if cb_bytes == "auto":
+            cb_bytes = self.auto_cb_bytes(
+                rank_requests, method=method,
+                local_aggregators=local_aggregators, pipeline=pipeline)
         if cb_bytes is not None and cb_bytes % self.stripe_size:
             raise ValueError("cb_bytes must be a stripe_size multiple")
         m = self.machine
@@ -242,23 +266,80 @@ class HostCollectiveIO:
         # per-round incast: a receiver with S concurrent senders pays
         # alpha_eff(S) each (cost_model refinement 2, applied to the
         # single-shot exchange too so the timings are comparable);
-        # rounds serialize.
+        # rounds serialize unless pipelined (accounted below).
         alpha = np.vectorize(m.alpha_eff)(ga_msgs) * ga_msgs
-        t.inter_comm = float(
-            (alpha + m.beta_inter * ga_bytes).max(axis=0, initial=0).sum())
+        comm_rounds = (alpha + m.beta_inter * ga_bytes).max(axis=0,
+                                                           initial=0)
+        t.inter_comm = float(comm_rounds.sum())
 
         # ---- I/O step: sort + write segments ---------------------------
-        total_bytes = 0
+        # pipelined: each segment drains through a double-buffered
+        # background writer, one cb window at a time (byte-identical:
+        # a single consumer writes the windows in order)
+        img_lens = np.zeros(self.stripe_count, np.int64)
         for g in range(self.stripe_count):
             offs, lens, packed, n_cmp = _merge_coalesce(ga_inbox[g])
             t.inter_sort = max(t.inter_sort, m.sort_per_cmp * n_cmp)
             seg = _domain_image(offs, lens, packed, g, self.stripe_size,
                                 self.stripe_count)
-            with open(f"{path}.seg{g}", "wb") as f:
-                f.write(seg.tobytes())
-            total_bytes += seg.size
-        t.io = total_bytes / m.io_bw
+            _write_segment(f"{path}.seg{g}", seg,
+                           cb_bytes if pipeline else None)
+            img_lens[g] = seg.size
+        t.io = float(img_lens.sum()) / m.io_bw
+
+        # ---- pipelined overlap: round t+1's exchange runs while round
+        # t's window drains, so the steady state pays max(comm, io) per
+        # round; the prologue (first exchange) and epilogue (last
+        # drain) stay exposed -------------------------------------------
+        if pipeline and n_rounds > 0:
+            cb = (cb_bytes if cb_bytes is not None
+                  else max(int(img_lens.max(initial=1)), 1))
+            lo = np.arange(n_rounds, dtype=np.int64) * cb
+            # bytes GA g drains in round r: its image's overlap with
+            # the window [r*cb, (r+1)*cb)
+            io_rounds = (np.clip(img_lens[:, None] - lo[None, :], 0, cb)
+                         .sum(axis=0) / m.io_bw)
+            serial = float(comm_rounds.sum() + io_rounds.sum())
+            span = float(comm_rounds[0]
+                         + np.maximum(comm_rounds[1:], io_rounds[:-1]).sum()
+                         + io_rounds[-1])
+            t.overlap_saved = max(serial - span, 0.0)
+            hideable = (float(min(comm_rounds[1:].sum(),
+                                  io_rounds[:-1].sum()))
+                        if n_rounds > 1 else 0.0)
+            t.overlap_fraction = (min(t.overlap_saved / hideable, 1.0)
+                                  if hideable > 0 else 0.0)
         return t
+
+    # ------------------------------------------------------------------
+    def auto_cb_bytes(self, rank_requests, method: str = "tam",
+                      local_aggregators: int | None = None,
+                      pipeline: bool = True) -> int:
+        """Autotuned collective-buffer size for THIS request set: the
+        stripe-aligned cb minimizing ``cost_model.optimal_cb``'s modeled
+        total (pipelined when ``pipeline``) for the measured workload
+        shape (P, nodes, P_G = stripe_count, request count, bytes)."""
+        P = self.n_ranks
+        total = float(sum(int(ln.sum()) for _, ln, _ in rank_requests))
+        n_req = float(sum(o.size for o, _, _ in rank_requests))
+        ext = max((int((o + ln).max()) for o, ln, _ in rank_requests
+                   if o.size), default=self.stripe_size)
+        n_str = -(-ext // self.stripe_size)
+        dom_bytes = -(-n_str // self.stripe_count) * self.stripe_size
+        cands, c = [], self.stripe_size
+        while c < dom_bytes:
+            cands.append(c)
+            c *= 2
+        cands.append(dom_bytes)
+        w = Workload(P=P, nodes=self.n_nodes, P_G=self.stripe_count,
+                     k=max(n_req, 1.0) / P, total_bytes=max(total, 1.0),
+                     stripe_size=float(self.stripe_size),
+                     overlap=1.0 if pipeline else 0.0)
+        P_L = ((local_aggregators or self.n_nodes * 4)
+               if method == "tam" else None)
+        cb, _ = optimal_cb(w, self.machine, P_L=P_L,
+                           candidates=tuple(cands))
+        return cb
 
     # ------------------------------------------------------------------
     def read_file(self, path: str, file_len: int) -> np.ndarray:
@@ -277,6 +358,48 @@ class HostCollectiveIO:
                 out[fo:fo + take] = seg[r * self.stripe_size:
                                         r * self.stripe_size + take]
         return out
+
+
+def _write_segment(path: str, seg: np.ndarray,
+                   cb_bytes: int | None) -> None:
+    """Write one segment file; with ``cb_bytes`` set, drain it through
+    a double-buffered background writer thread — one cb window is being
+    written while the producer stages the next (mirroring the SPMD
+    pipeline's two in-flight window buffers). A single consumer writes
+    the windows in order, so the bytes on disk are identical to the
+    direct write."""
+    if cb_bytes is None or seg.size <= cb_bytes:
+        with open(path, "wb") as f:
+            f.write(seg.tobytes())
+        return
+    q: queue.Queue = queue.Queue(maxsize=1)
+    error: list[BaseException] = []
+
+    def drain(f):
+        # on a write error, keep consuming (and discarding) so the
+        # producer's q.put never blocks on a dead consumer; the error
+        # re-raises in the producer after join
+        while True:
+            chunk = q.get()
+            if chunk is None:
+                return
+            if not error:
+                try:
+                    f.write(chunk)
+                except BaseException as e:  # noqa: BLE001 - re-raised below
+                    error.append(e)
+
+    with open(path, "wb") as f:
+        th = threading.Thread(target=drain, args=(f,))
+        th.start()
+        try:
+            for lo in range(0, int(seg.size), cb_bytes):
+                q.put(seg[lo:lo + cb_bytes].tobytes())
+        finally:
+            q.put(None)
+            th.join()
+    if error:
+        raise error[0]
 
 
 def _domain_image(offs, lens, packed, g, stripe_size, stripe_count):

@@ -13,8 +13,9 @@ from repro.core.rounds import (  # noqa: F401
     RoundScheduler, peak_aggregator_buffer_elems,
 )
 from repro.core.cost_model import (  # noqa: F401
-    Machine, Workload, optimal_PL, rounds_for_cb, tam_cost, twophase_cost,
-    with_measured_rounds,
+    Machine, Workload, cb_candidates, optimal_PL, optimal_cb,
+    rounds_for_cb, tam_cost, twophase_cost, with_measured_rounds,
+    with_overlap,
 )
 from repro.core.hierarchical import (  # noqa: F401
     compressed_psum, two_layer_all_to_all, two_layer_psum,

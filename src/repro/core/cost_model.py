@@ -17,6 +17,12 @@ measurements exhibit:
    offset-length pairs handled at the aggregator (dominant for E3SM-F's
    1.36e9 requests; Figs. 4-6 show it) — TAM shrinks it by the
    coalesce ratio.
+4. **Round overlap.** The pipelined round engine (``core.rounds`` with
+   ``IOConfig.pipeline``) exchanges round t+1 while draining round t,
+   so each steady-state round pays ``max(comm, io)`` instead of the
+   sum; ``Workload.overlap`` models the hidden fraction and
+   :func:`optimal_cb` picks the collective-buffer size minimizing the
+   pipelined total, the way :func:`optimal_PL` picks P_L.
 
 Message-count facts (paper SIV-D):
   two-phase:  P/P_G receives per GA per round;
@@ -76,6 +82,10 @@ class Workload:
     pair_bytes: int = 8
     stripe_size: float = 1 << 20  # 1 MiB (paper's setting)
     rounds_override: float | None = None  # executed rounds, when measured
+    overlap: float = 0.0          # pipelined round engine: fraction of the
+    # smaller of (per-round exchange, per-round drain) hidden in steady
+    # state. 0 = serial rounds (sum), 1 = perfect double-buffered overlap
+    # (each steady-state round pays max(comm, io) instead of comm + io).
 
     @property
     def q(self) -> int:
@@ -111,6 +121,7 @@ class CostBreakdown:
     inter_req_proc: float = 0.0
     inter_sort: float = 0.0
     io: float = 0.0
+    overlap_saved: float = 0.0    # time hidden by pipelining rounds
 
     @property
     def comm(self) -> float:
@@ -120,7 +131,7 @@ class CostBreakdown:
     def total(self) -> float:
         return (self.intra_comm + self.intra_sort + self.intra_memcpy
                 + self.inter_comm + self.inter_req_proc + self.inter_sort
-                + self.io)
+                + self.io - self.overlap_saved)
 
 
 def _log2(x: float) -> float:
@@ -139,11 +150,30 @@ def _inter_phase(w: Workload, m: Machine, endpoints: float,
     return comm, req_proc, sort
 
 
+def _overlap_saved(w: Workload, inter_comm: float, io: float) -> float:
+    """Time hidden by the pipelined round engine (refinement 4).
+
+    A double-buffered round loop exchanges round t+1 while draining
+    round t, so each of the R-1 steady-state rounds pays
+    ``max(comm_r, io_r)`` instead of ``comm_r + io_r``; the prologue
+    (first exchange) and epilogue (last drain) stay exposed. With
+    per-round uniform phases the saving is
+    ``overlap * (R - 1) * min(inter_comm, io) / R``.
+    """
+    rounds = w.rounds
+    if w.overlap <= 0.0 or rounds <= 1.0:
+        return 0.0
+    return (min(1.0, w.overlap) * (rounds - 1.0)
+            * min(inter_comm / rounds, io / rounds))
+
+
 def twophase_cost(w: Workload, m: Machine = Machine()) -> CostBreakdown:
     """Original two-phase I/O: all P ranks -> P_G aggregators."""
     comm, rp, sort = _inter_phase(w, m, w.P, w.P * w.k)
+    io = w.total_bytes / m.io_bw
     return CostBreakdown(inter_comm=comm, inter_req_proc=rp,
-                         inter_sort=sort, io=w.total_bytes / m.io_bw)
+                         inter_sort=sort, io=io,
+                         overlap_saved=_overlap_saved(w, comm, io))
 
 
 def tam_cost(w: Workload, P_L: int, m: Machine = Machine()) -> CostBreakdown:
@@ -162,8 +192,10 @@ def tam_cost(w: Workload, P_L: int, m: Machine = Machine()) -> CostBreakdown:
     comm, rp, sort = _inter_phase(w, m, P_L, k_prime)
     # GA sort merges P_L pre-sorted streams: log factor is P_L not P
     sort = m.sort_per_cmp * (k_prime / w.P_G) * _log2(P_L)
+    io = w.total_bytes / m.io_bw
     return CostBreakdown(intra_comm, intra_sort, intra_memcpy,
-                         comm, rp, sort, io=w.total_bytes / m.io_bw)
+                         comm, rp, sort, io=io,
+                         overlap_saved=_overlap_saved(w, comm, io))
 
 
 def optimal_PL(w: Workload, m: Machine = Machine(),
@@ -193,6 +225,87 @@ def with_measured_rounds(w: Workload, rounds: float) -> Workload:
     path's ``IOTimings.rounds_executed`` or ``RoundScheduler.n_rounds``)."""
     import dataclasses
     return dataclasses.replace(w, rounds_override=float(rounds))
+
+
+def with_overlap(w: Workload, overlap: float = 1.0) -> Workload:
+    """Model the pipelined round engine: ``overlap`` of the smaller
+    per-round phase (exchange vs drain) is hidden in steady state."""
+    import dataclasses
+    return dataclasses.replace(w, overlap=float(overlap))
+
+
+def cb_candidates(domain_bytes: float, stripe_bytes: float, *,
+                  min_cb_bytes: int = 1,
+                  max_cb_bytes: int | None = None) -> tuple[int, ...]:
+    """Collective-buffer sizes satisfying the round-partition invariants.
+
+    Every candidate ``c`` is stripe-aligned (``c % stripe == 0`` or
+    ``stripe % c == 0`` — ``RoundScheduler``'s validation) and, when
+    ``domain_bytes`` is an exact stripe multiple, divides it evenly (the
+    ``domain_len % cb`` invariant the SPMD round partition enforces).
+    Non-stripe-divisible domains (paper workloads whose total does not
+    divide by P_G, handled with a ceil round count) relax divisibility
+    and keep alignment only. Candidates are power-of-two spaced:
+    sub-stripe divisors of the stripe, then stripe multiples up to the
+    whole domain (``max_cb_bytes`` bounds aggregator memory).
+    """
+    domain_bytes = max(int(round(domain_bytes)), 1)
+    stripe_bytes = max(int(round(stripe_bytes)), 1)
+    exact = domain_bytes % stripe_bytes == 0
+    if not exact:   # round the domain up to a whole number of stripes
+        domain_bytes = -(-domain_bytes // stripe_bytes) * stripe_bytes
+    cands: set[int] = set()
+    c = stripe_bytes
+    while c >= max(min_cb_bytes, 1):          # sub-stripe divisors
+        if not exact or domain_bytes % c == 0:
+            cands.add(c)
+        if c % 2:
+            break
+        c //= 2
+    c = stripe_bytes
+    while c <= domain_bytes:                  # stripe multiples
+        if not exact or domain_bytes % c == 0:
+            cands.add(c)
+        c *= 2
+    cands.add(domain_bytes)                   # single round
+    cands = {c for c in cands
+             if c >= min_cb_bytes
+             and (max_cb_bytes is None or c <= max_cb_bytes)}
+    if not cands:   # memory bound excludes everything: smallest legal cb
+        cands = {max(stripe_bytes, min_cb_bytes)}
+    return tuple(sorted(cands))
+
+
+def optimal_cb(w: Workload, m: Machine = Machine(),
+               P_L: int | None = None,
+               candidates: tuple[int, ...] | None = None,
+               min_cb_bytes: int = 1,
+               max_cb_bytes: int | None = None
+               ) -> tuple[int, CostBreakdown]:
+    """Pick ``cb_buffer_size`` (bytes) minimizing the modeled total, the
+    way :func:`optimal_PL` picks P_L.
+
+    The trade-off: a small cb means many rounds — each re-paying the
+    incast latency ``alpha_eff(senders)`` — but little aggregator memory
+    and (with ``w.overlap > 0``) more steady-state rounds in which the
+    pipelined engine hides ``min(comm, io)``; a large cb means few
+    rounds but ``O(cb)`` aggregator buffering (bounded by
+    ``max_cb_bytes``). Every candidate obeys the round-partition
+    invariants (see :func:`cb_candidates`). Returns
+    ``(cb_bytes, CostBreakdown at that cb)``.
+    """
+    if candidates is None:
+        candidates = cb_candidates(w.total_bytes / w.P_G, w.stripe_size,
+                                   min_cb_bytes=min_cb_bytes,
+                                   max_cb_bytes=max_cb_bytes)
+
+    def cost(cb: int) -> CostBreakdown:
+        wc = with_measured_rounds(w, rounds_for_cb(w, cb))
+        return tam_cost(wc, P_L, m) if P_L is not None else \
+            twophase_cost(wc, m)
+
+    best = min(candidates, key=lambda cb: cost(cb).total)
+    return best, cost(best)
 
 
 def receives_per_global_aggregator(w: Workload, P_L: int | None) -> float:

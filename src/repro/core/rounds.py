@@ -45,6 +45,50 @@ number of participating ranks (see
 The same mesh can drive arbitrarily large files by holding
 ``cb_buffer_size`` fixed while rounds grow.
 
+The pipeline (``pipeline=True``)
+--------------------------------
+The serial loop pays ``exchange + drain`` per round. The pipelined loop
+is a classic software pipeline over TWO in-flight window buffers:
+
+* **prologue** — round 0 is exchanged into buffer A; nothing drains.
+* **steady state** — iteration ``t`` (1..n_rounds-1) exchanges round
+  ``t`` into the free buffer while DRAINING the carried buffer from
+  round ``t-1`` (flatten → sort → pack → masked pmax merge →
+  accumulate). The two halves share no data, so XLA is free to run the
+  slow-axis ``all_to_all`` concurrently with the local merge — each
+  steady-state round costs ``max(comm, drain)`` instead of their sum
+  (the host path's ``IOTimings`` measures exactly this, and
+  ``cost_model.Workload.overlap`` models it).
+* **epilogue** — the last carried buffer (round n_rounds-1) drains;
+  nothing is exchanged.
+
+Buffer ownership: the exchanged-but-undrained window (the ``rx`` tuple
+of post-``all_to_all`` buckets) is the loop carry — buffer A; the
+buffer being refilled by the current exchange is buffer B. They swap
+roles every iteration, so exactly two ``n_nodes * min(data_cap, cb)``
+receive images are ever live (``peak_aggregator_buffer_elems`` with
+``pipeline=True``).
+
+Byte-identity: the pipeline only re-associates WHEN each round's drain
+runs, not WHAT it drains — every round's received buckets pass through
+the identical drain (same sort, same pack base ``t * cb``, same pmax
+merge) exactly once, and rounds still accumulate into disjoint
+``[t*cb, (t+1)*cb)`` slices of the domain buffer, so the result is
+bit-identical to the serial loop (asserted by
+``repro/testing/rounds_checks.py`` for round counts {1, 2, 5}).
+
+Round-aware TAM stage 1
+-----------------------
+:func:`exchange_rounds_write_tam` fuses BOTH TAM layers into the same
+window loop: per round, ranks ship only the window's requests to their
+local aggregator (the ``lmem`` gather is bounded at
+``min(data_cap, cb)`` per rank instead of ``data_cap``), the LA
+sorts/coalesces that window, and the coalesced window flows through the
+same slow-axis exchange + pmax drain. Local-aggregator memory is then
+``ranks_per_node * min(data_cap, cb)`` — O(cb) for cb < data_cap —
+instead of ``ranks_per_node * data_cap`` (the ``tam_stage1_*`` keys of
+:func:`peak_aggregator_buffer_elems`).
+
 Semantics: concurrently written regions must not overlap (the MPI
 standard leaves overlapping collective writes undefined); when they do,
 the masked max-combine resolves each element deterministically to the
@@ -57,7 +101,10 @@ The executed round count is ``RoundScheduler.n_rounds`` ==
 ``cost_model.Workload.rounds`` when ``rounds_override`` is wired from a
 measured run (``IOTimings.rounds_executed`` on the host path). Each
 round pays ``alpha_eff(senders)`` once (incast refinement 2), which is
-exactly what ``HostCollectiveIO.write(cb_bytes=...)`` times.
+exactly what ``HostCollectiveIO.write(cb_bytes=...)`` times; with
+``pipeline=True`` the steady-state rounds overlap that latency with the
+drain (refinement 4), and ``cost_model.optimal_cb`` picks the cb
+balancing incast latency, memory, and round count.
 """
 from __future__ import annotations
 
@@ -142,15 +189,86 @@ def _lowest(dtype) -> jax.Array:
     return jnp.array(jnp.iinfo(dtype).min, dtype)
 
 
+def _make_drain(base0, cb: int, merge_axes: tuple[str, ...], dtype):
+    """Drain closure: merge one round's received buckets into the
+    carried domain buffer (flatten → sort → pack window → masked pmax
+    merge → accumulate at ``t * cb``)."""
+    low = _lowest(dtype)
+
+    def drain(t, buf, rx):
+        merged, starts_m, data_flat = flatten_buckets(*rx)
+        sorted_r, starts_s = sort_with(merged, starts_m)
+        base = base0 + t * cb
+        win = co.pack_data(sorted_r, starts_s, data_flat, cb, base=base)
+        mask = co.pack_data(sorted_r, starts_s,
+                            jnp.ones_like(data_flat), cb, base=base)
+        comb = lax.pmax(jnp.where(mask != 0, win, low), merge_axes)
+        anyw = lax.pmax(mask, merge_axes)
+        final = jnp.where(anyw != 0, comb, jnp.zeros((), dtype))
+        buf = lax.dynamic_update_slice(buf, final, (t * cb,))
+        return buf, (merged.count,)
+
+    return drain
+
+
+def _run_rounds(n_rounds: int, domain_len: int, dtype, exchange, drain,
+                n_ex_stats: int, n_dr_stats: int, pipeline: bool):
+    """Drive the round loop, serial or software-pipelined.
+
+    ``exchange(t) -> (rx, ex_stats)`` produces round t's received
+    buckets; ``drain(t, buf, rx) -> (buf, dr_stats)`` merges them into
+    the domain buffer. Stats tuples are accumulated elementwise.
+    Pipelined: prologue exchanges round 0; steady-state iteration t
+    exchanges round t while draining round t-1 (the carried ``rx`` is
+    the second in-flight window buffer); epilogue drains the last round.
+    """
+    zeros = tuple(jnp.int32(0) for _ in range(n_ex_stats + n_dr_stats))
+
+    def add(acc, delta, base):
+        return tuple(a + d for a, d in zip(acc[base:base + len(delta)],
+                                           delta))
+
+    buf0 = jnp.zeros((domain_len,), dtype)
+    if not pipeline:
+        def body(t, carry):
+            buf, acc = carry
+            rx, ex = exchange(t)
+            buf, dr = drain(t, buf, rx)
+            return buf, add(acc, ex, 0) + add(acc, dr, n_ex_stats)
+
+        buf, acc = lax.fori_loop(0, n_rounds, body, (buf0, zeros))
+        return buf, acc[:n_ex_stats], acc[n_ex_stats:]
+
+    rx0, ex0 = exchange(0)                       # prologue: fill buffer A
+
+    def body(t, carry):
+        buf, rx_prev, acc = carry
+        rx_next, ex = exchange(t)                # refill the free buffer …
+        buf, dr = drain(t - 1, buf, rx_prev)     # … while draining t-1
+        return buf, rx_next, add(acc, ex, 0) + add(acc, dr, n_ex_stats)
+
+    init_acc = ex0 + tuple(jnp.int32(0) for _ in range(n_dr_stats))
+    buf, rx_last, acc = lax.fori_loop(1, n_rounds, body,
+                                      (buf0, rx0, init_acc))
+    buf, dr = drain(n_rounds - 1, buf, rx_last)  # epilogue: last drain
+    acc = acc[:n_ex_stats] + tuple(
+        a + d for a, d in zip(acc[n_ex_stats:], dr))
+    return buf, acc[:n_ex_stats], acc[n_ex_stats:]
+
+
 def exchange_rounds_write(sched: RoundScheduler, node_axis: str,
                           merge_axes: tuple[str, ...], r: RequestList,
-                          starts: jax.Array, data: jax.Array):
+                          starts: jax.Array, data: jax.Array,
+                          pipeline: bool = False):
     """Round loop of the collective write (runs inside a shard_map body).
 
     r/starts/data: this sender's offset-sorted requests, the payload
     start of each request inside ``data``, and the packed payload.
-    Returns (domain shard [domain_len], stats dict); ``requests_at_ga``
-    is already summed over ``merge_axes`` (replicated at the node).
+    ``pipeline=True`` double-buffers: round t+1's exchange overlaps
+    round t's drain (byte-identical to the serial loop — see the module
+    docstring). Returns (domain shard [domain_len], stats dict);
+    ``requests_at_ga`` is already summed over ``merge_axes`` (replicated
+    at the node).
     """
     n_dest, cb, dl = sched.n_aggregators, sched.cb, sched.domain_len
     data_cap = data.shape[0]
@@ -163,37 +281,20 @@ def exchange_rounds_write(sched: RoundScheduler, node_axis: str,
     base0 = lax.axis_index(node_axis) * dl
     a2a = partial(lax.all_to_all, axis_name=node_axis, split_axis=0,
                   concat_axis=0, tiled=True)
-    low = _lowest(data.dtype)
 
-    def body(t, carry):
-        buf, drop_r, drop_e, reqs_rx = carry
+    def exchange(t):
         active = split.valid_mask() & (window == t)
         act_r, act_starts, act_dest = _compact_active(split, s_starts,
                                                       dest, active)
         act_data = repack_sorted(act_r, act_starts, data, data_cap)
         b = bucket_by_dest(act_r, co.request_starts(act_r), act_data,
                            act_dest, n_dest, round_req_cap, round_data_cap)
-        rx_off, rx_len, rx_data = (a2a(b.offsets), a2a(b.lengths),
-                                   a2a(b.data))
-        rx_cnt = a2a(b.counts)
-        merged, starts_m, data_flat = flatten_buckets(rx_off, rx_len,
-                                                      rx_cnt, rx_data)
-        sorted_r, starts_s = sort_with(merged, starts_m)
-        base = base0 + t * cb
-        win = co.pack_data(sorted_r, starts_s, data_flat, cb, base=base)
-        mask = co.pack_data(sorted_r, starts_s,
-                            jnp.ones_like(data_flat), cb, base=base)
-        comb = lax.pmax(jnp.where(mask != 0, win, low), merge_axes)
-        anyw = lax.pmax(mask, merge_axes)
-        final = jnp.where(anyw != 0, comb, jnp.zeros((), data.dtype))
-        buf = lax.dynamic_update_slice(buf, final, (t * cb,))
-        return (buf, drop_r + b.dropped_requests, drop_e + b.dropped_elems,
-                reqs_rx + merged.count)
+        rx = (a2a(b.offsets), a2a(b.lengths), a2a(b.counts), a2a(b.data))
+        return rx, (b.dropped_requests, b.dropped_elems)
 
-    init = (jnp.zeros((dl,), data.dtype), jnp.int32(0), jnp.int32(0),
-            jnp.int32(0))
-    buf, drop_r, drop_e, reqs_rx = lax.fori_loop(0, sched.n_rounds, body,
-                                                 init)
+    drain = _make_drain(base0, cb, merge_axes, data.dtype)
+    buf, (drop_r, drop_e), (reqs_rx,) = _run_rounds(
+        sched.n_rounds, dl, data.dtype, exchange, drain, 2, 1, pipeline)
     return buf, {
         "dropped_requests": drop_r,
         "dropped_elems": drop_e,
@@ -201,13 +302,116 @@ def exchange_rounds_write(sched: RoundScheduler, node_axis: str,
     }
 
 
+def exchange_rounds_write_tam(sched: RoundScheduler, node_axis: str,
+                              lagg_axis: str, lmem_axis: str,
+                              r: RequestList, starts: jax.Array,
+                              data: jax.Array,
+                              coalesce_cap: int | None = None,
+                              use_kernels: bool = False,
+                              pipeline: bool = False):
+    """Fused TAM round loop: BOTH aggregation layers run per window.
+
+    Per round t, stage 1 gathers only the window's requests over
+    ``lmem_axis`` (per-rank payload bounded at ``min(data_cap, cb)``),
+    the local aggregator sorts/coalesces/repacks that window, and
+    stage 2 exchanges the coalesced window over ``node_axis`` with the
+    pmax merge over ``lagg_axis`` — so local-aggregator memory is
+    O(cb) too, not just the global aggregator's (ROADMAP item).
+    ``pipeline=True`` overlaps round t+1's two-layer exchange with
+    round t's drain, as in :func:`exchange_rounds_write`.
+
+    Returns (domain shard, stats). ``*_rank`` drop stats are per-rank
+    (pre-gather — psum over all axes); ``*_agg`` drops and the
+    before/after coalesce counts are replicated across ``lmem_axis``
+    (post-gather — divide the psum by the lmem size).
+    """
+    n_dest, cb, dl = sched.n_aggregators, sched.cb, sched.domain_len
+    data_cap = data.shape[0]
+    split = split_at_stripes(r, cb, sched.max_spans(data_cap))
+    s_starts = co.request_starts(split)
+    dest0 = (split.offsets // dl).astype(jnp.int32)
+    window = sched.window_of(split.offsets)
+    rcap = min(split.capacity, cb)       # stage-1 requests/rank/round
+    rdcap = min(data_cap, cb)            # stage-1 payload/rank/round
+    base0 = lax.axis_index(node_axis) * dl
+    a2a = partial(lax.all_to_all, axis_name=node_axis, split_axis=0,
+                  concat_axis=0, tiled=True)
+    g = partial(lax.all_gather, axis_name=lmem_axis, axis=0, tiled=False)
+    idx = jnp.arange(split.capacity, dtype=jnp.int32)
+
+    def exchange(t):
+        # ---- stage 1: window-bounded intra-node aggregation ---------
+        active = split.valid_mask() & (window == t)
+        act_r, act_starts, _ = _compact_active(split, s_starts, dest0,
+                                               active)
+        drop_rank_r = jnp.maximum(act_r.count - rcap, 0)
+        drop_rank_e = jnp.sum(jnp.where(idx >= rcap, act_r.lengths, 0),
+                              dtype=jnp.int32)
+        win_r = RequestList(act_r.offsets[:rcap], act_r.lengths[:rcap],
+                            jnp.minimum(act_r.count, rcap))
+        drop_rank_e = drop_rank_e + jnp.maximum(
+            jnp.sum(win_r.lengths, dtype=jnp.int32) - rdcap, 0)
+        win_data = repack_sorted(win_r, act_starts[:rcap], data, rdcap)
+        all_off, all_len, all_cnt, all_data = (
+            g(win_r.offsets), g(win_r.lengths), g(win_r.count),
+            g(win_data))
+        m = all_off.shape[0]
+        merged, starts_m, data_flat = flatten_buckets(all_off, all_len,
+                                                      all_cnt, all_data)
+        if use_kernels:
+            from repro.kernels import ops as kops
+            sorted_r, starts_s = kops.sort_requests_with(merged, starts_m)
+            packed = repack_sorted(sorted_r, starts_s, data_flat, m * rdcap)
+            coal = kops.coalesce(sorted_r)
+        else:
+            sorted_r, starts_s = sort_with(merged, starts_m)
+            packed = repack_sorted(sorted_r, starts_s, data_flat, m * rdcap)
+            coal = co.coalesce_sorted(sorted_r)
+        ccap = min(coalesce_cap or coal.capacity, coal.capacity)
+        drop_agg_r = jnp.maximum(coal.count - ccap, 0)
+        agg = RequestList(coal.offsets[:ccap], coal.lengths[:ccap],
+                          jnp.minimum(coal.count, ccap))
+        # a coalesced run can escape its window only when cb == dl (the
+        # last window of domain d touches window 0 of domain d+1, both
+        # live in the single round) — re-split at the domain boundary so
+        # each forwarded request has exactly one owner
+        agg = split_at_stripes(agg, dl, m * rdcap // dl + 2)
+        # ---- stage 2: slow-axis exchange of the coalesced window ----
+        dest = (agg.offsets // dl).astype(jnp.int32)
+        b = bucket_by_dest(agg, co.request_starts(agg), packed, dest,
+                           n_dest, min(agg.capacity, cb),
+                           min(m * rdcap, cb))
+        rx = (a2a(b.offsets), a2a(b.lengths), a2a(b.counts), a2a(b.data))
+        return rx, (drop_rank_r, drop_rank_e,
+                    b.dropped_requests + drop_agg_r, b.dropped_elems,
+                    merged.count, agg.count)
+
+    drain = _make_drain(base0, cb, (lagg_axis,), data.dtype)
+    buf, ex_acc, dr_acc = _run_rounds(
+        sched.n_rounds, dl, data.dtype, exchange, drain, 6, 1, pipeline)
+    (drop_rank_r, drop_rank_e, drop_agg_r, drop_agg_e,
+     n_before, n_after) = ex_acc
+    return buf, {
+        "dropped_requests_rank": drop_rank_r,
+        "dropped_elems_rank": drop_rank_e,
+        "dropped_requests_agg": drop_agg_r,
+        "dropped_elems_agg": drop_agg_e,
+        "requests_before_coalesce": n_before,
+        "requests_after_coalesce": n_after,
+        "requests_at_ga": lax.psum(dr_acc[0], (lagg_axis,)),
+    }
+
+
 def exchange_rounds_read(sched: RoundScheduler, node_axis: str,
                          r: RequestList, starts: jax.Array,
-                         file_shard: jax.Array, data_cap: int) -> jax.Array:
+                         file_shard: jax.Array, data_cap: int,
+                         pipeline: bool = False) -> jax.Array:
     """Round loop of the collective read: per round, aggregators
     broadcast one ``cb``-sized window over the slow axis and every rank
     gathers the elements of its requests falling in that window. Peak
     per-rank buffering is ``n_nodes * cb`` instead of ``file_len``.
+    ``pipeline=True`` double-buffers: window t+1's broadcast overlaps
+    the scatter of window t's elements into the output.
     """
     n_dest, cb, dl = sched.n_aggregators, sched.cb, sched.domain_len
     cap = r.capacity
@@ -219,29 +423,60 @@ def exchange_rounds_read(sched: RoundScheduler, node_axis: str,
     fpos = jnp.where(live, fpos, 0)
     dest, wloc = fpos // dl, fpos % dl
 
-    def body(t, out):
+    def fetch(t):
         win = lax.dynamic_slice_in_dim(file_shard, t * cb, cb)
-        allw = lax.all_gather(win, node_axis, axis=0, tiled=True)
+        return lax.all_gather(win, node_axis, axis=0, tiled=True)
+
+    def scatter(t, out, allw):
         active = live & (wloc // cb == t)
         src = dest * cb + (wloc - t * cb)
         vals = allw[jnp.clip(src, 0, n_dest * cb - 1)]
         return jnp.where(active, vals, out)
 
-    return lax.fori_loop(0, sched.n_rounds, body,
-                         jnp.zeros((data_cap,), file_shard.dtype))
+    out0 = jnp.zeros((data_cap,), file_shard.dtype)
+    if not pipeline:
+        return lax.fori_loop(
+            0, sched.n_rounds,
+            lambda t, out: scatter(t, out, fetch(t)), out0)
+
+    allw0 = fetch(0)                             # prologue
+
+    def body(t, carry):
+        out, prev = carry
+        nxt = fetch(t)                           # broadcast window t …
+        return scatter(t - 1, out, prev), nxt    # … while placing t-1
+
+    out, last = lax.fori_loop(1, sched.n_rounds, body, (out0, allw0))
+    return scatter(sched.n_rounds - 1, out, last)   # epilogue
 
 
 def peak_aggregator_buffer_elems(data_cap: int, n_nodes: int,
                                  ranks_per_node: int, domain_len: int,
-                                 cb_buffer_size: int | None) -> dict:
-    """Static receive-side buffer sizes (elements) of both write paths.
+                                 cb_buffer_size: int | None,
+                                 pipeline: bool = False) -> dict:
+    """Static receive-side buffer sizes (elements) of the write paths.
 
     ``single_shot`` is the flattened payload stack after the slow-axis
     all_to_all plus the intra-node gather — linear in the participating
     rank count. ``rounds`` is the a2a slice plus one window image —
-    independent of ``ranks_per_node`` (the acceptance criterion).
+    independent of ``ranks_per_node`` (the acceptance criterion); with
+    ``pipeline=True`` TWO a2a window buffers are in flight (the price of
+    the overlap — the loop carry holds the previous round's received
+    buckets while the current exchange fills the next).
+    ``tam_stage1_*`` are the local aggregator's intra-node gather
+    buffers: the fused round loop (:func:`exchange_rounds_write_tam`)
+    bounds the per-rank contribution at ``min(data_cap, cb)`` instead
+    of ``data_cap``. Stage 1 is NOT doubled by the pipeline: the gather
+    is produced and consumed inside one exchange step, so only one is
+    ever live — only the post-``all_to_all`` carry doubles.
     """
     single = n_nodes * ranks_per_node * data_cap + domain_len
     cb = cb_buffer_size if cb_buffer_size is not None else domain_len
-    rounds = n_nodes * min(data_cap, cb) + cb + domain_len
-    return {"single_shot": single, "rounds": rounds}
+    in_flight = 2 if pipeline else 1
+    rounds = n_nodes * min(data_cap, cb) * in_flight + cb + domain_len
+    return {
+        "single_shot": single,
+        "rounds": rounds,
+        "tam_stage1_single_shot": ranks_per_node * data_cap,
+        "tam_stage1_rounds": ranks_per_node * min(data_cap, cb),
+    }

@@ -38,8 +38,8 @@ from repro.core import coalesce as co
 from repro.core import rounds
 from repro.core.domains import FileLayout
 from repro.core.exchange import bucket_by_dest, flatten_buckets, repack_sorted, sort_with
-from repro.core.requests import RequestList, mask_invalid
-from repro.core.twophase import IOConfig
+from repro.core.requests import RequestList, mask_invalid, split_at_stripes
+from repro.core.twophase import IOConfig, resolve_cb_buffer_size
 
 
 def _intra_node_aggregate(cfg: IOConfig, r: RequestList, data: jax.Array,
@@ -82,37 +82,52 @@ def _tam_write_shard_fn(layout: FileLayout, cfg: IOConfig, n_nodes: int,
                                  count.reshape(())))
     data = data.reshape(-1)
 
-    # ---- stage 1: intra-node ----------------------------------------
-    agg_r, packed, n_before, n_after, drop_coal = _intra_node_aggregate(
-        cfg, r, data, use_kernels)
-    agg_starts = co.request_starts(agg_r)
-
     if cfg.cb_buffer_size is not None:
-        # round-scheduled stage 2: only the inter-node hop is bounded;
-        # stage 1 stays whole-payload (the fast axis is not the memory
-        # bottleneck). Stage-2 state is replicated across lmem, so the
-        # window merge and receive stats run over lagg only (the pmax
-        # combine is idempotent under that replication).
+        # fused round loop: BOTH layers are window-bounded — stage 1
+        # gathers only min(data_cap, cb) payload per rank per round, so
+        # local-aggregator memory is O(cb) too (see
+        # rounds.exchange_rounds_write_tam). Post-gather state is
+        # replicated across lmem, so the window merge and receive stats
+        # run over lagg only (the pmax combine is idempotent under that
+        # replication) and replicated stats divide by the lmem size.
+        starts = co.request_starts(r)
         sched = rounds.RoundScheduler(layout, n_nodes, cfg.cb_buffer_size)
-        shard, st = rounds.exchange_rounds_write(
-            sched, node, (lagg,), agg_r, agg_starts, packed)
+        shard, st = rounds.exchange_rounds_write_tam(
+            sched, node, lagg, lmem, r, starts, data,
+            coalesce_cap=cfg.coalesce_cap, use_kernels=use_kernels,
+            pipeline=cfg.pipeline)
         lmem_size = axis_size(lmem)
+        all_axes = (node, lagg, lmem)
         stats = {
-            "dropped_requests": lax.psum(
-                st["dropped_requests"] + drop_coal * lmem_size,
-                (node, lagg, lmem)) // lmem_size,
-            "dropped_elems": lax.psum(st["dropped_elems"],
-                                      (node, lagg, lmem)) // lmem_size,
-            "requests_before_coalesce": lax.psum(n_before, (node, lagg)) //
-                lmem_size,
-            "requests_after_coalesce": lax.psum(n_after, (node, lagg)) //
-                lmem_size,
+            "dropped_requests":
+                lax.psum(st["dropped_requests_rank"], all_axes)
+                + lax.psum(st["dropped_requests_agg"], all_axes)
+                // lmem_size,
+            "dropped_elems":
+                lax.psum(st["dropped_elems_rank"], all_axes)
+                + lax.psum(st["dropped_elems_agg"], all_axes)
+                // lmem_size,
+            "requests_before_coalesce": lax.psum(
+                st["requests_before_coalesce"], (node, lagg)) // lmem_size,
+            "requests_after_coalesce": lax.psum(
+                st["requests_after_coalesce"], (node, lagg)) // lmem_size,
             "requests_at_ga": st["requests_at_ga"][None],
         }
         return shard[None], stats
 
+    # ---- stage 1: intra-node ----------------------------------------
+    agg_r, packed, n_before, n_after, drop_coal = _intra_node_aggregate(
+        cfg, r, data, use_kernels)
+
     # ---- stage 2: inter-node (local aggregators only) ----------------
     domain_len = layout.file_len // n_nodes
+    # coalescing may fuse runs across file-domain boundaries (and ranks
+    # may submit domain-spanning requests): split so each forwarded
+    # request has exactly one owning aggregator (they were silently
+    # truncated by the domain packing before)
+    agg_r = split_at_stripes(agg_r, domain_len,
+                             packed.shape[0] // domain_len + 2)
+    agg_starts = co.request_starts(agg_r)
     dest = agg_r.offsets // domain_len
     inter_data_cap = packed.shape[0]
     buckets = bucket_by_dest(agg_r, agg_starts, packed, dest, n_nodes,
@@ -153,12 +168,18 @@ def make_tam_write(mesh: jax.sharding.Mesh, layout: FileLayout,
     """Build the jit-able TAM collective write.
 
     Same signature as :func:`repro.core.twophase.make_twophase_write`;
-    P_L = mesh.shape[node] * mesh.shape[lagg] local aggregators.
+    P_L = mesh.shape[node] * mesh.shape[lagg] local aggregators. With
+    ``cfg.cb_buffer_size`` set, both aggregation layers run inside the
+    window loop (local-aggregator memory O(cb)); ``cfg.pipeline``
+    overlaps each round's two-layer exchange with the previous round's
+    drain; ``"auto"`` resolves the round size via
+    ``cost_model.optimal_cb``.
     """
     node, lagg, lmem = cfg.axis_names
     n_nodes = mesh.shape[node]
     if layout.file_len % n_nodes:
         raise ValueError("file_len must divide evenly among aggregators")
+    cfg = resolve_cb_buffer_size(layout, n_nodes, mesh.size, cfg)
     if cfg.cb_buffer_size is not None:  # validate the round partition now
         rounds.RoundScheduler(layout, n_nodes, cfg.cb_buffer_size)
     rank_spec = P((node, lagg, lmem))
@@ -186,6 +207,7 @@ def make_tam_read(mesh: jax.sharding.Mesh, layout: FileLayout,
     """
     node, lagg, lmem = cfg.axis_names
     n_nodes = mesh.shape[node]
+    cfg = resolve_cb_buffer_size(layout, n_nodes, mesh.size, cfg)
     domain_len = layout.file_len // n_nodes
     rank_spec = P((node, lagg, lmem))
 
@@ -199,7 +221,7 @@ def make_tam_read(mesh: jax.sharding.Mesh, layout: FileLayout,
                                           cfg.cb_buffer_size)
             out = rounds.exchange_rounds_read(
                 sched, node, r, starts, file_shard.reshape(-1),
-                cfg.data_cap)
+                cfg.data_cap, pipeline=cfg.pipeline)
             return out[None]
         # stage 2 reversed: every node obtains the full file image only of
         # the domains it needs; here we conservatively gather the file over

@@ -22,7 +22,7 @@ host-level path (``repro.checkpoint.host_io``) and the analytical model
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from functools import partial
 from typing import Any
 
@@ -36,7 +36,7 @@ from repro.core import coalesce as co
 from repro.core import rounds
 from repro.core.domains import FileLayout
 from repro.core.exchange import Buckets, bucket_by_dest, flatten_buckets, sort_with
-from repro.core.requests import RequestList, mask_invalid
+from repro.core.requests import ELEM_BYTES, RequestList, mask_invalid, split_at_stripes
 
 
 @dataclass(frozen=True)
@@ -53,15 +53,51 @@ class IOConfig:
                     (ROMIO's romio_cb_buffer_size). ``None`` keeps the
                     single-shot exchange; setting it bounds aggregator
                     buffering at O(cb_buffer_size) independent of the
-                    rank count (see ``repro.core.rounds``).
+                    rank count (see ``repro.core.rounds``); ``"auto"``
+                    lets ``cost_model.optimal_cb`` pick the size
+                    minimizing the modeled (pipelined) total at build
+                    time (:func:`resolve_cb_buffer_size`).
+    pipeline:       double-buffer the round loop — round t+1's exchange
+                    overlaps round t's window drain (byte-identical;
+                    see ``repro.core.rounds``). Ignored by the
+                    single-shot path.
     axis_names:     (node, lagg, lmem) mesh-axis names.
     """
 
     req_cap: int
     data_cap: int
     coalesce_cap: int | None = None
-    cb_buffer_size: int | None = None
+    cb_buffer_size: int | str | None = None
+    pipeline: bool = False
     axis_names: tuple[str, str, str] = ("node", "lagg", "lmem")
+
+
+def resolve_cb_buffer_size(layout: FileLayout, n_nodes: int, n_ranks: int,
+                           cfg: IOConfig, machine=None) -> IOConfig:
+    """Resolve ``cb_buffer_size == "auto"`` to concrete elements.
+
+    Builds the matching ``cost_model.Workload`` (byte units, one GA per
+    node) and lets :func:`repro.core.cost_model.optimal_cb` pick the
+    candidate minimizing the modeled total — pipelined when
+    ``cfg.pipeline`` — from the sizes that satisfy the
+    ``RoundScheduler`` invariants (divides ``domain_len``,
+    stripe-aligned)."""
+    if cfg.cb_buffer_size != "auto":
+        return cfg
+    from repro.core import cost_model as cm
+    dl = layout.file_len // n_nodes
+    s = layout.stripe_size
+    cands = tuple(c for c in cm.cb_candidates(dl, s)
+                  if dl % c == 0 and (c % s == 0 or s % c == 0)) or (dl,)
+    w = cm.Workload(
+        P=n_ranks, nodes=n_nodes, P_G=n_nodes, k=float(cfg.req_cap),
+        total_bytes=float(layout.file_len * ELEM_BYTES),
+        stripe_size=float(s * ELEM_BYTES),
+        overlap=1.0 if cfg.pipeline else 0.0)
+    cb_bytes, _ = cm.optimal_cb(
+        w, machine or cm.Machine(),
+        candidates=tuple(c * ELEM_BYTES for c in cands))
+    return replace(cfg, cb_buffer_size=cb_bytes // ELEM_BYTES)
 
 
 def _gather_axes(cfg: IOConfig) -> tuple[str, str]:
@@ -85,7 +121,8 @@ def _twophase_shard_fn(layout: FileLayout, cfg: IOConfig, n_nodes: int,
         # round-scheduled exchange: aggregator buffers O(cb_buffer_size)
         sched = rounds.RoundScheduler(layout, n_nodes, cfg.cb_buffer_size)
         shard, st = rounds.exchange_rounds_write(
-            sched, node, (lagg, lmem), r, starts, data)
+            sched, node, (lagg, lmem), r, starts, data,
+            pipeline=cfg.pipeline)
         stats = {
             "dropped_requests": lax.psum(st["dropped_requests"],
                                          (node, lagg, lmem)),
@@ -95,8 +132,12 @@ def _twophase_shard_fn(layout: FileLayout, cfg: IOConfig, n_nodes: int,
         }
         return shard[None], stats
 
-    # route directly to the owning global aggregator (= node id)
+    # route directly to the owning global aggregator (= node id);
+    # domain-spanning requests are split at the boundary so each piece
+    # has exactly one owner (they were silently truncated before)
     domain_len = layout.file_len // n_nodes
+    r = split_at_stripes(r, domain_len, cfg.data_cap // domain_len + 2)
+    starts = co.request_starts(r)
     dest = r.offsets // domain_len
     buckets = bucket_by_dest(r, starts, data, dest, n_nodes,
                              cfg.req_cap, cfg.data_cap)
@@ -137,16 +178,20 @@ def make_twophase_write(mesh: jax.sharding.Mesh, layout: FileLayout,
       offsets/lengths [P, req_cap], count [P], data [P, data_cap]
     Output: file [n_nodes, domain_len] sharded over ``node``; stats.
 
-    Single-shot contract: requests must not span file-domain
-    boundaries (spanning tails are ignored by domain packing, as ROMIO
-    expects the file-view flattening to split them). The round path
-    (``cfg.cb_buffer_size`` set) splits at window — hence domain —
-    boundaries itself and has no such restriction.
+    Domain-spanning requests are split at file-domain boundaries on
+    both paths (the round path additionally splits at window
+    boundaries), so each piece has exactly one owning aggregator —
+    overflow shows up in ``dropped_requests``/``dropped_elems``, never
+    as silent truncation. ``cfg.cb_buffer_size == "auto"`` resolves the
+    round size via ``cost_model.optimal_cb`` at build time;
+    ``cfg.pipeline`` overlaps each round's exchange with the previous
+    round's drain.
     """
     node, lagg, lmem = cfg.axis_names
     n_nodes = mesh.shape[node]
     if layout.file_len % n_nodes:
         raise ValueError("file_len must divide evenly among aggregators")
+    cfg = resolve_cb_buffer_size(layout, n_nodes, mesh.size, cfg)
     if cfg.cb_buffer_size is not None:  # validate the round partition now
         rounds.RoundScheduler(layout, n_nodes, cfg.cb_buffer_size)
     rank_spec = P((node, lagg, lmem))
@@ -168,6 +213,7 @@ def make_twophase_read(mesh: jax.sharding.Mesh, layout: FileLayout,
     """
     node, lagg, lmem = cfg.axis_names
     n_nodes = mesh.shape[node]
+    cfg = resolve_cb_buffer_size(layout, n_nodes, mesh.size, cfg)
     domain_len = layout.file_len // n_nodes
     rank_spec = P((node, lagg, lmem))
 
@@ -180,7 +226,7 @@ def make_twophase_read(mesh: jax.sharding.Mesh, layout: FileLayout,
                                           cfg.cb_buffer_size)
             out = rounds.exchange_rounds_read(
                 sched, node, r, starts, file_shard.reshape(-1),
-                cfg.data_cap)
+                cfg.data_cap, pipeline=cfg.pipeline)
             return out[None]
         whole = lax.all_gather(file_shard.reshape(-1), node, axis=0,
                                tiled=True)

@@ -4,13 +4,19 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 """Round-engine SPMD checks (run as a subprocess with 8 host devices).
 
 Property: for round counts {1, 2, 5} (cb_buffer_size in {160, 80, 32}
-on a 160-element domain) and mixed / strided / overlapping request
-patterns, the multi-round two-phase and TAM collective writes are
-byte-identical to BOTH the single-shot path and the
+on a 160-element domain) and mixed / strided / overlapping / spanning
+request patterns, the multi-round two-phase and TAM collective writes
+are byte-identical to BOTH the single-shot path and the
 ``write_reference`` oracle, with identical (zero) drop stats; the
-round-scheduled reads return every rank's payload; and a deliberately
+PIPELINED round loop (``IOConfig.pipeline``, prologue → steady state →
+epilogue double-buffering) is byte-identical to the serial round loop
+and the oracle at every round count; the round-scheduled reads
+(serial and pipelined) return every rank's payload; and a deliberately
 overflowed round bucket reports nonzero ``dropped_elems`` instead of
-failing silently. Exits nonzero on any failure.
+failing silently. The spanning pattern crosses the file-domain
+boundary, exercising the single-shot split-at-domain fix (those
+requests were silently truncated before). Exits nonzero on any
+failure.
 """
 import numpy as np
 import jax
@@ -79,13 +85,32 @@ def overlapping_pattern(rng):
             D[p, i * span:(i + 1) * span] = np.arange(o, o + span) % 97 + 1
         C[p] = 2
     for p in range(2, P_RANKS):
-        # disjoint extents clear of both regions AND the domain boundary
-        # at 160 (the single-shot path truncates domain-spanning
-        # requests silently; the round path splits them — keep the
-        # comparison on the common contract)
+        # disjoint extents clear of both regions and the domain boundary
         o = 40 + (p - 2) * 24 if p <= 4 else 170 + (p - 5) * 24
         O[p, 0], L[p, 0], C[p] = o, 20, 1
         D[p, :20] = rng.integers(1, 999, size=20)
+    return O, L, C, D
+
+
+def spanning_pattern(rng):
+    """Requests crossing the file-domain boundary at 160 (and window
+    boundaries): both paths must split them — the single-shot exchange
+    truncated the spanning tail silently before the domain-split fix."""
+    O = np.full((P_RANKS, REQ_CAP), 2**31 - 1, np.int32)
+    L = np.zeros((P_RANKS, REQ_CAP), np.int32)
+    C = np.zeros(P_RANKS, np.int32)
+    D = np.zeros((P_RANKS, DATA_CAP), np.int32)
+    # rank 0 straddles the domain boundary: [150, 174)
+    O[0, 0], L[0, 0], C[0] = 150, 24, 1
+    D[0, :24] = np.arange(150, 174) % 97 + 1
+    # rank 1 straddles a cb=32 window boundary inside domain 1:
+    # [250, 262) is domain-local [90, 102), crossing 96
+    O[1, 0], L[1, 0], C[1] = 250, 12, 1
+    D[1, :12] = np.arange(250, 262) % 97 + 1
+    for p in range(2, P_RANKS):
+        o = 8 + (p - 2) * 16
+        O[p, 0], L[p, 0], C[p] = o, 12, 1
+        D[p, :12] = rng.integers(1, 999, size=12)
     return O, L, C, D
 
 
@@ -101,18 +126,29 @@ def main():
 
     writers = {None: (jax.jit(make_twophase_write(mesh, layout, base)),
                       jax.jit(make_tam_write(mesh, layout, base)))}
+    pipelined = {}
     readers = {}
+    readers_p = {}
     for cb in CBS:
         cfg = replace(base, cb_buffer_size=cb)
+        cfgp = replace(base, cb_buffer_size=cb, pipeline=True)
         writers[cb] = (jax.jit(make_twophase_write(mesh, layout, cfg)),
                        jax.jit(make_tam_write(mesh, layout, cfg)))
+        pipelined[cb] = (jax.jit(make_twophase_write(mesh, layout, cfgp)),
+                         jax.jit(make_tam_write(mesh, layout, cfgp)))
         readers[cb] = (jax.jit(make_twophase_read(mesh, layout, cfg)),
                        jax.jit(make_tam_read(mesh, layout, cfg)))
+    # pipelined reads: 5-round config exercises prologue + steady state
+    # + epilogue (1-round = prologue/epilogue only, covered by writes)
+    cfgp32 = replace(base, cb_buffer_size=32, pipeline=True)
+    readers_p[32] = (jax.jit(make_twophase_read(mesh, layout, cfgp32)),
+                     jax.jit(make_tam_read(mesh, layout, cfgp32)))
 
     rng = np.random.default_rng(0)
     patterns = {"mixed": mixed_pattern(rng),
                 "strided": strided_pattern(rng),
-                "overlapping": overlapping_pattern(rng)}
+                "overlapping": overlapping_pattern(rng),
+                "spanning": spanning_pattern(rng)}
 
     for pname, (O, L, C, D) in patterns.items():
         ref = write_reference(layout, O, L, C, D)
@@ -134,6 +170,15 @@ def main():
                 check(f"{tag}_no_drops",
                       int(s["dropped_requests"]) == 0
                       and int(s["dropped_elems"]) == 0)
+                fp, sp = pipelined[cb][mi](O, L, C, D)
+                gotp = np.asarray(fp).reshape(-1)
+                check(f"{tag}_pipelined_vs_serial",
+                      np.array_equal(gotp, got))
+                check(f"{tag}_pipelined_vs_ref",
+                      np.array_equal(gotp, ref))
+                check(f"{tag}_pipelined_no_drops",
+                      int(sp["dropped_requests"]) == 0
+                      and int(sp["dropped_elems"]) == 0)
             rd2, rdt = readers[cb]
             for rd, mname in ((rd2, "twophase"), (rdt, "tam")):
                 got = np.asarray(rd(O, L, C,
@@ -142,6 +187,12 @@ def main():
                                         D[p][:L[p].sum()])
                          for p in range(P_RANKS))
                 check(f"{pname}/{mname}/read_rounds{n_rounds}", ok)
+        for rd, mname in zip(readers_p[32], ("twophase", "tam")):
+            got = np.asarray(rd(O, L, C, jnp.asarray(ref).reshape(2, -1)))
+            ok = all(np.array_equal(got[p][:L[p].sum()],
+                                    D[p][:L[p].sum()])
+                     for p in range(P_RANKS))
+            check(f"{pname}/{mname}/read_pipelined_rounds5", ok)
 
     # overflow observability: one rank pushes 2x identical 32-element
     # requests into one 32-element window -> 64 elems > the round

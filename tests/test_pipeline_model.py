@@ -1,0 +1,223 @@
+"""Pipelined round engine: overlap refinement in the cost model, the
+``optimal_cb`` autotuner invariants (unit sweep + hypothesis property),
+and the host path's max(comm, io) steady-state accounting."""
+import numpy as np
+import pytest
+
+from repro.checkpoint.host_io import HostCollectiveIO
+from repro.core.cost_model import (Machine, Workload, btio, cb_candidates,
+                                   e3sm_f, optimal_cb, rounds_for_cb,
+                                   tam_cost, twophase_cost,
+                                   with_measured_rounds, with_overlap)
+from repro.io_patterns import btio_pattern, e3sm_g_pattern
+
+from tests._hyp_compat import HAVE_HYPOTHESIS, given, settings, st
+
+
+# ---------------------------------------------------------------------------
+# overlap refinement (cost_model refinement 4)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gen", [btio, e3sm_f])
+def test_pipelined_total_beats_serial_at_paper_scale(gen):
+    """Acceptance: modeled pipelined < serial on btio and e3sm_f at
+    P=16384 / 256 nodes (both schedules, multi-round cb)."""
+    w = gen(16384, 256)
+    ws = with_measured_rounds(w, rounds_for_cb(w, 4 << 20))
+    wp = with_overlap(ws, 1.0)
+    assert ws.rounds > 1
+    for cost in (twophase_cost, lambda x: tam_cost(x, 256)):
+        serial, pipe = cost(ws), cost(wp)
+        assert pipe.total < serial.total
+        assert pipe.overlap_saved > 0.0
+        # only the smaller of (inter_comm, io) can hide, and only the
+        # R-1 steady-state rounds of it
+        assert pipe.overlap_saved < min(pipe.inter_comm, pipe.io)
+        # overlap touches nothing else in the breakdown
+        assert pipe.inter_comm == serial.inter_comm
+        assert pipe.io == serial.io
+
+
+def test_overlap_noop_cases():
+    w = e3sm_f(16384, 256)
+    # single round: no steady state, nothing hides
+    w1 = with_overlap(with_measured_rounds(w, 1), 1.0)
+    assert twophase_cost(w1).overlap_saved == 0.0
+    # overlap=0: serial
+    w0 = with_overlap(with_measured_rounds(w, 64), 0.0)
+    assert twophase_cost(w0).overlap_saved == 0.0
+    # overlap clamps at 1
+    w64 = with_measured_rounds(w, 64)
+    assert (twophase_cost(with_overlap(w64, 5.0)).overlap_saved
+            == twophase_cost(with_overlap(w64, 1.0)).overlap_saved)
+
+
+# ---------------------------------------------------------------------------
+# optimal_cb autotuner
+# ---------------------------------------------------------------------------
+
+def _check_cb_invariants(cb, domain_bytes, stripe_bytes):
+    assert cb >= 1
+    assert cb % stripe_bytes == 0 or stripe_bytes % cb == 0
+    if domain_bytes % stripe_bytes == 0:     # exact partition available
+        assert domain_bytes % cb == 0
+
+
+@pytest.mark.parametrize("gen", [btio, e3sm_f])
+def test_optimal_cb_paper_workloads(gen):
+    w = with_overlap(gen(16384, 256), 1.0)
+    cb, cost = optimal_cb(w)
+    _check_cb_invariants(cb, int(round(w.total_bytes / w.P_G)),
+                         int(w.stripe_size))
+    # never worse than the single-shot candidate (the largest one)
+    single = max(cb_candidates(w.total_bytes / w.P_G, w.stripe_size))
+    ws = with_measured_rounds(w, rounds_for_cb(w, single))
+    assert cost.total <= twophase_cost(ws).total + 1e-12
+
+
+def test_optimal_cb_respects_memory_bound():
+    w = with_overlap(e3sm_f(16384, 256), 1.0)
+    cap = 4 << 20
+    cb, _ = optimal_cb(w, max_cb_bytes=cap)
+    assert cb <= cap
+    _check_cb_invariants(cb, int(round(w.total_bytes / w.P_G)),
+                         int(w.stripe_size))
+
+
+def test_cb_candidates_alignment_sweep():
+    """Deterministic sweep of the property: every candidate satisfies
+    the RoundScheduler invariants (stripe alignment always; exact
+    domain divisibility whenever the domain is stripe-divisible)."""
+    for stripe_pow in (10, 16, 20):
+        stripe = 1 << stripe_pow
+        for mult in (1, 3, 8, 56, 100):
+            domain = stripe * mult
+            for c in cb_candidates(domain, stripe):
+                _check_cb_invariants(c, domain, stripe)
+            # non-divisible domain: alignment still holds
+            for c in cb_candidates(domain + 12345, stripe):
+                _check_cb_invariants(c, domain + 12345, stripe)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=200, deadline=None)
+@given(stripe_pow=st.integers(min_value=0, max_value=22),
+       domain_mult=st.integers(min_value=1, max_value=4096),
+       P_G=st.integers(min_value=1, max_value=128),
+       k=st.floats(min_value=0.1, max_value=1e6),
+       overlap=st.floats(min_value=0.0, max_value=1.0))
+def test_optimal_cb_never_violates_invariants(stripe_pow, domain_mult,
+                                              P_G, k, overlap):
+    """Property: optimal_cb never returns a cb violating stripe
+    alignment or the domain divisibility invariant."""
+    stripe = 1 << stripe_pow
+    domain = stripe * domain_mult
+    w = Workload(P=1024, nodes=64, P_G=P_G, k=k,
+                 total_bytes=float(domain * P_G), stripe_size=float(stripe),
+                 overlap=overlap)
+    cb, cost = optimal_cb(w)
+    _check_cb_invariants(cb, domain, stripe)
+    assert cost.total > 0.0
+
+
+# ---------------------------------------------------------------------------
+# host path: steady-state rounds pay max(comm, io), not the sum
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["tam", "twophase"])
+def test_host_pipeline_overlap_accounting(method, tmp_path):
+    P = 16
+    reqs = e3sm_g_pattern(P)
+    io = HostCollectiveIO(n_ranks=P, n_nodes=4, stripe_size=1024,
+                          stripe_count=3)
+    la = 8 if method == "tam" else None
+    file_len = int(max((o + ln).max() for o, ln, _ in reqs if o.size))
+    ts = io.write(reqs, str(tmp_path / "s"), method=method,
+                  local_aggregators=la, cb_bytes=4096)
+    tp = io.write(reqs, str(tmp_path / "p"), method=method,
+                  local_aggregators=la, cb_bytes=4096, pipeline=True)
+    # bytes identical through the double-buffered drain thread
+    assert np.array_equal(io.read_file(str(tmp_path / "s"), file_len),
+                          io.read_file(str(tmp_path / "p"), file_len))
+    # same exchange, same drain — only the schedule differs
+    assert tp.rounds_executed == ts.rounds_executed > 1
+    assert tp.inter_comm == ts.inter_comm and tp.io == ts.io
+    # steady state charged max(comm, io): the serial sum minus the
+    # hidden (smaller) phase of the R-1 steady-state rounds
+    assert 0.0 < tp.overlap_saved < min(tp.inter_comm, tp.io)
+    assert tp.total == pytest.approx(ts.total - tp.overlap_saved)
+    assert 0.0 < tp.overlap_fraction <= 1.0
+    # serial path reports no overlap
+    assert ts.overlap_saved == 0.0 and ts.overlap_fraction == 0.0
+
+
+def test_host_pipeline_single_round_no_overlap(tmp_path):
+    reqs = e3sm_g_pattern(4)
+    io = HostCollectiveIO(n_ranks=4, n_nodes=2, stripe_size=1024,
+                          stripe_count=2)
+    t = io.write(reqs, str(tmp_path / "x"), method="twophase",
+                 pipeline=True)   # cb=None: single shot, no steady state
+    assert t.rounds_executed == 1
+    assert t.overlap_saved == 0.0 and t.overlap_fraction == 0.0
+
+
+def test_host_auto_cb(tmp_path):
+    P = 16
+    reqs = btio_pattern(P, n=32)
+    io = HostCollectiveIO(n_ranks=P, n_nodes=4, stripe_size=1024,
+                          stripe_count=4)
+    file_len = int(max((o + ln).max() for o, ln, _ in reqs if o.size))
+    t0 = io.write(reqs, str(tmp_path / "s"), method="tam",
+                  local_aggregators=8)
+    ta = io.write(reqs, str(tmp_path / "a"), method="tam",
+                  local_aggregators=8, cb_bytes="auto", pipeline=True)
+    assert np.array_equal(io.read_file(str(tmp_path / "s"), file_len),
+                          io.read_file(str(tmp_path / "a"), file_len))
+    cb = io.auto_cb_bytes(reqs, method="tam", local_aggregators=8)
+    assert cb % io.stripe_size == 0 and cb >= io.stripe_size
+    assert ta.rounds_executed >= 1
+
+
+# ---------------------------------------------------------------------------
+# SPMD "auto" resolution obeys the RoundScheduler invariants
+# ---------------------------------------------------------------------------
+
+def test_spmd_auto_cb_resolution():
+    from repro.core.domains import FileLayout, contiguous_layout
+    from repro.core.rounds import RoundScheduler
+    from repro.core.twophase import IOConfig, resolve_cb_buffer_size
+
+    for layout, n_nodes in ((contiguous_layout(1 << 20, 8), 8),
+                            (FileLayout(stripe_size=1024, stripe_count=4,
+                                        file_len=1 << 20), 4)):
+        cfg = IOConfig(req_cap=64, data_cap=4096, cb_buffer_size="auto",
+                       pipeline=True)
+        resolved = resolve_cb_buffer_size(layout, n_nodes, 64, cfg)
+        assert isinstance(resolved.cb_buffer_size, int)
+        # constructing the scheduler IS the invariant check
+        RoundScheduler(layout, n_nodes, resolved.cb_buffer_size)
+        # non-auto configs pass through untouched
+        assert resolve_cb_buffer_size(layout, n_nodes, 64,
+                                      IOConfig(8, 8)) == IOConfig(8, 8)
+
+
+def test_peak_buffer_tam_stage1_bounded():
+    from repro.core.rounds import peak_aggregator_buffer_elems
+
+    # stage-1 gather is O(cb) per rank once data_cap exceeds cb
+    peaks = [peak_aggregator_buffer_elems(
+        data_cap=dc, n_nodes=8, ranks_per_node=16,
+        domain_len=1 << 20, cb_buffer_size=8192) for dc in
+        (8192, 65536, 1 << 20)]
+    assert len({p["tam_stage1_rounds"] for p in peaks}) == 1
+    singles = [p["tam_stage1_single_shot"] for p in peaks]
+    assert singles[0] < singles[1] < singles[2]
+    # the pipeline's price: exactly two in-flight a2a window buffers;
+    # stage 1 is produced and consumed inside one exchange step, so it
+    # does NOT double
+    serial = peak_aggregator_buffer_elems(4096, 8, 16, 1 << 20, 8192)
+    piped = peak_aggregator_buffer_elems(4096, 8, 16, 1 << 20, 8192,
+                                         pipeline=True)
+    extra = 8 * 4096   # one more n_nodes * min(data_cap, cb) image
+    assert piped["rounds"] == serial["rounds"] + extra
+    assert piped["tam_stage1_rounds"] == serial["tam_stage1_rounds"]

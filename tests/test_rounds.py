@@ -1,6 +1,9 @@
 """Round-based bounded-buffer exchange engine: scheduler math, peak
 buffering, host-path round timing, cost-model wiring, and the SPMD
-byte-identity property (subprocess with 8 virtual devices)."""
+byte-identity property (subprocess with 8 virtual devices) — including
+the pipelined (double-buffered) round loop and the domain-spanning
+request patterns. The pipelined overlap accounting and the optimal_cb
+autotuner live in tests/test_pipeline_model.py."""
 import subprocess
 import sys
 
@@ -150,3 +153,8 @@ def test_rounds_spmd_checks(spmd_env):
         print(proc.stderr[-3000:])
     assert proc.returncode == 0, "FAIL lines:\n" + "\n".join(
         ln for ln in proc.stdout.splitlines() if ln.startswith("FAIL"))
+    # the pipelined byte-identity and spanning-pattern checks must have
+    # actually executed (guards against silent skips in the harness)
+    assert "pipelined_vs_serial" in proc.stdout
+    assert "spanning/" in proc.stdout
+    assert "read_pipelined" in proc.stdout
