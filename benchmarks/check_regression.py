@@ -1,0 +1,112 @@
+"""CI benchmark regression gate for the pipelined round engine.
+
+Compares a freshly produced ``BENCH_pipeline.json`` against the
+committed baseline (``benchmarks/baselines/BENCH_pipeline_baseline.json``)
+and exits nonzero when:
+
+* the modeled PIPELINED total regresses by more than the threshold
+  (default 20%) on any (cb, method) point of the gated workloads
+  (btio, e3sm_f — the paper's acceptance pair);
+* pipelining stops beating serial on a multi-round point of a gated
+  workload (the PR-2 acceptance, kept);
+* the host executor's ``pipeline_depth="auto"`` pick disagrees with
+  the brute-force best depth of the measured sweep on EVERY paper
+  workload. (The host measurement is itself model-driven, so this is
+  an end-to-end plumbing consistency check — auto wiring, depth
+  clamping, tie-breaking — not independent validation of
+  ``optimal_depth``; the span recurrence itself is property-tested in
+  tests/test_plan.py.)
+
+The model is deterministic, so the comparison is stable; the threshold
+exists to absorb intentional re-calibrations of ``cost_model.Machine``
+(regenerate the baseline alongside such a change:
+``BENCH_PIPELINE_OUT=benchmarks/baselines/BENCH_pipeline_baseline.json
+PYTHONPATH=src python -m benchmarks.run --only pipeline``).
+
+Usage: python benchmarks/check_regression.py CURRENT BASELINE [--threshold 0.2]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+GATED_WORKLOADS = ("btio", "e3sm_f")
+
+
+def check(current: dict, baseline: dict,
+          threshold: float) -> tuple[list[str], int]:
+    errors = []
+    matched = 0
+
+    # ---- modeled pipelined totals vs the committed baseline ----------
+    for wl in GATED_WORKLOADS:
+        base_rows = {(r["cb_bytes"], r["method"]): r
+                     for r in baseline["workloads"][wl]["cb_sweep"]}
+        wl_matched = 0
+        for row in current["workloads"][wl]["cb_sweep"]:
+            # baseline-independent PR-2 acceptance: overlap must win on
+            # every multi-round point, including ones the baseline has
+            # not been regenerated for yet
+            if row["rounds"] > 1 and row["pipelined_s"] >= row["serial_s"]:
+                errors.append(
+                    f"{wl}/{row['method']}/cb{row['cb_bytes']}: pipelined "
+                    f"({row['pipelined_s']:.4g}s) no longer beats serial "
+                    f"({row['serial_s']:.4g}s)")
+            key = (row["cb_bytes"], row["method"])
+            if key not in base_rows:
+                continue
+            wl_matched += 1
+            base = base_rows[key]["pipelined_s"]
+            ratio = row["pipelined_s"] / base if base > 0 else 1.0
+            if ratio > 1.0 + threshold:
+                errors.append(
+                    f"{wl}/{row['method']}/cb{row['cb_bytes']}: pipelined "
+                    f"total regressed {ratio:.3f}x vs baseline "
+                    f"({row['pipelined_s']:.4g}s vs {base:.4g}s)")
+        if wl_matched == 0:
+            errors.append(
+                f"{wl}: no current sweep point matches the baseline — "
+                "the cb sweep changed; regenerate "
+                "benchmarks/baselines/BENCH_pipeline_baseline.json")
+        matched += wl_matched
+
+    # ---- auto depth agrees with the measured best somewhere ----------
+    agreements, checked = [], []
+    for pname, entry in current.get("host", {}).items():
+        for method, e in entry.items():
+            if "auto_depth" not in e:
+                continue
+            expect = min(e["best_depth_measured"], e["rounds"])
+            checked.append(f"{pname}/{method}")
+            agreements.append(e["auto_depth"] == expect)
+    if not checked:
+        errors.append("no host depth-sweep entries found in the artifact")
+    elif not any(agreements):
+        errors.append(
+            "pipeline_depth='auto' disagreed with the measured best depth "
+            f"on every workload checked: {checked}")
+    return errors, matched
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current")
+    ap.add_argument("baseline")
+    ap.add_argument("--threshold", type=float, default=0.2)
+    args = ap.parse_args()
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    errors, matched = check(current, baseline, args.threshold)
+    for e in errors:
+        print(f"REGRESSION: {e}", file=sys.stderr)
+    if not errors:
+        print(f"benchmark gate OK ({matched} matched points, "
+              f"threshold {args.threshold:.0%})")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -15,14 +15,16 @@ import numpy as np
 
 from repro.checkpoint.host_io import HostCollectiveIO
 from repro.core import cost_model as cm
-from repro.io_patterns import (btio_pattern, e3sm_f_pattern,
-                               e3sm_g_pattern, s3d_pattern)
+
+from benchmarks.workloads import HOST_PATTERNS, MODEL_WORKLOADS
 
 PATTERNS = {
-    "e3sm_g": (e3sm_g_pattern, cm.e3sm_g),
-    "e3sm_f": (e3sm_f_pattern, cm.e3sm_f),
-    "btio": (lambda P: btio_pattern(P, n=64), cm.btio),
-    "s3d": (lambda P: s3d_pattern(P, n=32), cm.s3d),
+    "e3sm_g": (HOST_PATTERNS["e3sm_g"], MODEL_WORKLOADS["e3sm_g"]),
+    "e3sm_f": (HOST_PATTERNS["e3sm_f"], MODEL_WORKLOADS["e3sm_f"]),
+    # this suite runs btio at the paper's 64-block figure setting
+    "btio": (lambda P: HOST_PATTERNS["btio"](P, n=64),
+             MODEL_WORKLOADS["btio"]),
+    "s3d": (HOST_PATTERNS["s3d"], MODEL_WORKLOADS["s3d"]),
 }
 
 

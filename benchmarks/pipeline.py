@@ -1,25 +1,30 @@
-"""Serial-vs-pipelined round engine benchmark.
+"""Serial-vs-pipelined round engine benchmark (+ depth-k ring sweep).
 
 Two levels, mirroring the repo's split between the literal host-path
 reproduction and the paper-scale analytical model:
 
-* **model sweep** — for each paper workload (e3sm_f/g, btio, s3d) at
-  P=16384 / 256 nodes, sweep the collective-buffer size and compare the
-  serial round total against the pipelined total (``Workload.overlap``
-  refinement: each steady-state round pays ``max(comm, io)`` instead of
-  the sum), for both schedules. Also reports ``optimal_cb``'s
-  autotuned pick.
+* **model sweep** — for each paper workload (``benchmarks.workloads``
+  registry) at P=16384 / 256 nodes, sweep the collective-buffer size
+  and compare the serial round total against the pipelined total
+  (``Workload.overlap`` refinement: each steady-state round pays
+  ``max(comm, io)`` instead of the sum), for both schedules. Also
+  reports ``optimal_cb``'s autotuned pick and the modeled depth sweep
+  (uniform rounds: every depth >= 2 ties — the model's honest answer).
 * **host measurement** — run the host-level path (real byte movement)
-  at small scale with ``pipeline=`` off/on and report the measured
-  ``overlap_saved`` / ``overlap_fraction`` from ``IOTimings``.
+  at small scale with ring depths k in {1, 2, 3, 4}, report the
+  measured totals, the brute-force best depth, and the
+  ``pipeline_depth="auto"`` pick (``cost_model.optimal_depth`` over
+  the MEASURED per-round arrays) — the two must agree, which
+  ``benchmarks/check_regression.py`` gates in CI.
 
 Emits ``BENCH_pipeline.json`` (env ``BENCH_PIPELINE_OUT`` overrides the
-path) so CI can archive the perf trajectory, and returns the usual
-``(name, us, derived)`` rows for ``benchmarks.run``.
+path) so CI can archive the perf trajectory and diff it against the
+committed baseline, and returns the usual ``(name, us, derived)`` rows
+for ``benchmarks.run``.
 
 derived column: executed rounds (serial rows), pipelined/serial speedup
-(pipelined rows), autotuned cb bytes (auto rows), overlap fraction
-(host rows).
+(pipelined rows), autotuned cb bytes (auto rows), ring depth (depth
+rows), overlap fraction (host rows).
 """
 from __future__ import annotations
 
@@ -29,35 +34,27 @@ import tempfile
 
 from repro.checkpoint.host_io import HostCollectiveIO
 from repro.core import cost_model as cm
-from repro.io_patterns import btio_pattern, e3sm_g_pattern
 
-WORKLOADS = {
-    "e3sm_f": cm.e3sm_f,
-    "e3sm_g": cm.e3sm_g,
-    "btio": cm.btio,
-    "s3d": cm.s3d,
-}
+from benchmarks.workloads import (HOST_PATTERNS, MODEL_WORKLOADS,
+                                  PAPER_NODES, PAPER_P, PAPER_P_L)
+
 CB_MIB = (1, 4, 16, 64)
-P, NODES, P_L = 16384, 256, 256
-
-HOST_PATTERNS = {
-    "e3sm_g": e3sm_g_pattern,
-    "btio": lambda n: btio_pattern(n, n=32),
-}
+DEPTHS = (1, 2, 3, 4)
+HOST_SET = ("e3sm_g", "btio")     # scaled host patterns (registry keys)
 
 
 def _model_sweep(blob):
     rows = []
-    for name, gen in sorted(WORKLOADS.items()):
-        w = gen(P, NODES)
-        entry = {"cb_sweep": [], "auto": {}}
+    for name, gen in sorted(MODEL_WORKLOADS.items()):
+        w = gen(PAPER_P, PAPER_NODES)
+        entry = {"cb_sweep": [], "auto": {}, "depth_sweep": {}}
         for mib in CB_MIB:
             cb = mib << 20
             r = cm.rounds_for_cb(w, cb)
             ws = cm.with_measured_rounds(w, r)
             wp = cm.with_overlap(ws, 1.0)
             for method, cost in (("twophase", cm.twophase_cost),
-                                 ("tam", lambda x: cm.tam_cost(x, P_L))):
+                                 ("tam", lambda x: cm.tam_cost(x, PAPER_P_L))):
                 serial = cost(ws).total
                 pipe = cost(wp).total
                 rows.append((f"pipeline/{name}/{method}/cb{mib}MiB/serial",
@@ -69,7 +66,20 @@ def _model_sweep(blob):
                     "cb_bytes": cb, "method": method, "rounds": r,
                     "serial_s": serial, "pipelined_s": pipe,
                 })
-        for method, P_L_arg in (("twophase", None), ("tam", P_L)):
+        # modeled depth sweep at the 4 MiB cb (uniform per-round phases:
+        # depths >= 2 tie; recorded so the artifact shows the model's
+        # depth column next to the host-measured one)
+        for method, P_L_arg in (("twophase", None), ("tam", PAPER_P_L)):
+            wc = cm.with_measured_rounds(w, cm.rounds_for_cb(w, 4 << 20))
+            sweep = {}
+            for k in DEPTHS:
+                _, span = cm.optimal_depth(wc, P_L=P_L_arg, depths=(k,))
+                sweep[str(k)] = span
+                rows.append((f"pipeline/{name}/{method}/depth{k}/modeled",
+                             span * 1e6, k))
+            best_k, _ = cm.optimal_depth(wc, P_L=P_L_arg, depths=DEPTHS)
+            entry["depth_sweep"][method] = {"span_s": sweep,
+                                            "optimal_depth": best_k}
             cb_auto, cost = cm.optimal_cb(cm.with_overlap(w, 1.0),
                                           P_L=P_L_arg)
             rows.append((f"pipeline/{name}/{method}/auto_cb",
@@ -84,34 +94,48 @@ def _host_measurement(blob):
     rows = []
     n_ranks, cb = 16, 4096
     d = tempfile.mkdtemp()
-    for pname, gen in sorted(HOST_PATTERNS.items()):
-        reqs = gen(n_ranks)
+    for pname in sorted(HOST_SET):
+        reqs = HOST_PATTERNS[pname](n_ranks)
         io = HostCollectiveIO(n_ranks=n_ranks, n_nodes=4,
                               stripe_size=1024, stripe_count=4)
         entry = {}
         for method in ("tam", "twophase"):
             la = 8 if method == "tam" else None
-            ts = io.write(reqs, f"{d}/{pname}_{method}_s", method=method,
-                          local_aggregators=la, cb_bytes=cb)
-            tp = io.write(reqs, f"{d}/{pname}_{method}_p", method=method,
+            timings = {}
+            for k in DEPTHS:
+                timings[k] = io.write(reqs, f"{d}/{pname}_{method}_k{k}",
+                                      method=method, local_aggregators=la,
+                                      cb_bytes=cb, pipeline_depth=k)
+                rows.append((f"pipeline/host/{pname}/{method}/depth{k}",
+                             timings[k].total * 1e6, k))
+            totals = {k: t.total for k, t in timings.items()}
+            ts_total = totals[1]
+            tp = timings[2]       # pipeline=True == the depth-2 run
+            ta = io.write(reqs, f"{d}/{pname}_{method}_a", method=method,
                           local_aggregators=la, cb_bytes=cb,
-                          pipeline=True)
+                          pipeline_depth="auto")
+            best = min(DEPTHS, key=lambda k: (round(totals[k], 15), k))
             rows.append((f"pipeline/host/{pname}/{method}/serial",
-                         ts.total * 1e6, ts.rounds_executed))
+                         ts_total * 1e6, tp.rounds_executed))
             rows.append((f"pipeline/host/{pname}/{method}/pipelined",
                          tp.total * 1e6, round(tp.overlap_fraction, 4)))
+            rows.append((f"pipeline/host/{pname}/{method}/auto_depth",
+                         ta.total * 1e6, ta.pipeline_depth))
             entry[method] = {
-                "rounds": tp.rounds_executed, "serial_s": ts.total,
+                "rounds": tp.rounds_executed, "serial_s": ts_total,
                 "pipelined_s": tp.total,
                 "overlap_saved_s": tp.overlap_saved,
                 "overlap_fraction": tp.overlap_fraction,
+                "depth_sweep": {str(k): totals[k] for k in DEPTHS},
+                "best_depth_measured": best,
+                "auto_depth": ta.pipeline_depth,
             }
         blob["host"][pname] = entry
     return rows
 
 
 def serial_vs_pipelined():
-    blob = {"P": P, "nodes": NODES, "P_L": P_L,
+    blob = {"P": PAPER_P, "nodes": PAPER_NODES, "P_L": PAPER_P_L,
             "workloads": {}, "host": {}}
     rows = _model_sweep(blob) + _host_measurement(blob)
     out = os.environ.get("BENCH_PIPELINE_OUT", "BENCH_pipeline.json")

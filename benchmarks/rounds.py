@@ -20,12 +20,12 @@ import tempfile
 from repro.checkpoint.host_io import HostCollectiveIO
 from repro.core import cost_model as cm
 from repro.core.rounds import peak_aggregator_buffer_elems
-from repro.io_patterns import btio_pattern, e3sm_g_pattern
 
-PATTERNS = {
-    "e3sm_g": (e3sm_g_pattern, cm.e3sm_g),
-    "btio": (lambda P: btio_pattern(P, n=32), cm.btio),
-}
+from benchmarks.workloads import (HOST_PATTERNS, MODEL_WORKLOADS,
+                                  PAPER_NODES, PAPER_P, PAPER_P_L)
+
+PATTERNS = {name: (HOST_PATTERNS[name], MODEL_WORKLOADS[name])
+            for name in ("e3sm_g", "btio")}
 CB_SWEEP = (1024, 4096, 16384)
 
 
@@ -50,10 +50,10 @@ def cb_sweep():
                 rows.append((f"rounds/{pname}/{method}/cb{cb}",
                              t.inter_comm * 1e6, t.rounds_executed))
                 # paper-scale model with the executed rounds wired in
+                wp = wl(PAPER_P, PAPER_NODES)
                 w = cm.with_measured_rounds(
-                    wl(16384, 256), cm.rounds_for_cb(wl(16384, 256),
-                                                     cb * 1024))
-                cost = (cm.tam_cost(w, 256) if method == "tam"
+                    wp, cm.rounds_for_cb(wp, cb * 1024))
+                cost = (cm.tam_cost(w, PAPER_P_L) if method == "tam"
                         else cm.twophase_cost(w))
                 rows.append((f"rounds/{pname}/{method}/cb{cb}/modeled",
                              cost.comm * 1e6, round(cost.total, 4)))

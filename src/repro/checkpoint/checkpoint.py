@@ -85,7 +85,8 @@ def save_checkpoint(tree, path: str | Path, *, step: int = 0,
                     method: str = "tam",
                     local_aggregators: int | None = None,
                     cb_bytes: int | str | None = None,
-                    pipeline: bool = False
+                    pipeline: bool = False,
+                    pipeline_depth: int | str | None = None
                     ) -> tuple[dict, IOTimings]:
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
@@ -95,7 +96,8 @@ def save_checkpoint(tree, path: str | Path, *, step: int = 0,
     reqs = _rank_requests(tree, manifest, io.n_ranks)
     timings = io.write(reqs, str(path), method=method,
                        local_aggregators=local_aggregators,
-                       cb_bytes=cb_bytes, pipeline=pipeline)
+                       cb_bytes=cb_bytes, pipeline=pipeline,
+                       pipeline_depth=pipeline_depth)
     manifest["stripe_size"] = io.stripe_size
     manifest["stripe_count"] = io.stripe_count
     (path.parent / (path.name + ".manifest.json")).write_text(
@@ -138,6 +140,8 @@ class CheckpointManager:
     cb_bytes: int | str | None = None   # rounds (None = single shot,
     # "auto" = cost-model autotuned per request set)
     pipeline: bool = False         # overlap each round's exchange/drain
+    pipeline_depth: int | str | None = None  # in-flight windows (the
+    # depth-k ring; None = 2 when pipeline, "auto" = measured pick)
     keep: int = 3
 
     def save(self, tree, step: int) -> IOTimings:
@@ -146,7 +150,8 @@ class CheckpointManager:
         _, t = save_checkpoint(
             tree, d / f"ckpt_{step:08d}", step=step, io=self.io,
             method=self.method, local_aggregators=self.local_aggregators,
-            cb_bytes=self.cb_bytes, pipeline=self.pipeline)
+            cb_bytes=self.cb_bytes, pipeline=self.pipeline,
+            pipeline_depth=self.pipeline_depth)
         self._gc()
         return t
 

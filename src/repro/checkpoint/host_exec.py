@@ -1,0 +1,229 @@
+"""Host executor: runs a compiled :class:`repro.core.plan.IOPlan` with
+real numpy data movement and modeled alpha-beta timing.
+
+One of the two interchangeable backends of the plan/executor split
+(ARCHITECTURE.md); the other is ``repro.core.spmd_exec``. The plan is
+compiled by the SAME planner (``HostCollectiveIO.plan_for`` routes
+through ``repro.core.plan.compile_plan``, byte units), so the window
+schedule the host drains is the one the SPMD ring would run.
+
+What is real vs modeled here: bytes are REAL — requests are merged,
+coalesced, and packed with numpy and every segment file on disk is
+byte-identical whatever the schedule (single shot, rounds, any ring
+depth). TIME is modeled — the per-round incast latency
+``alpha_eff(senders)``, the beta byte costs, and the depth-k pipeline
+makespan (``cost_model.pipeline_span``, the exact bounded-buffer
+recurrence over the MEASURED per-round comm/drain arrays). The drain
+itself is physical too: with a multi-round plan each segment is written
+through a background writer thread fed one cb window at a time through
+a ring of ``depth - 1`` queue slots.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+import numpy as np
+
+from repro.core.cost_model import Machine, optimal_depth, pipeline_span
+from repro.core.plan import IOPlan
+
+PAIR_BYTES = 8  # offset + length metadata per request
+
+
+def to_domain_local(offs, stripe_size: int, stripe_count: int):
+    """Byte position inside the owning GA's domain image (its stripes
+    concatenated in round order) — mirrors ``domains.to_domain_local``."""
+    return ((offs // stripe_size) // stripe_count) * stripe_size \
+        + offs % stripe_size
+
+
+def merge_coalesce(reqs: list[tuple[np.ndarray, np.ndarray, np.ndarray]]):
+    """Merge per-sender (offsets, lengths, payload), sort, coalesce.
+
+    Returns (offsets, lengths, payload) with payload packed in sorted
+    offset order (contiguous per coalesced run). Comparisons counted for
+    the sort-time model.
+    """
+    offs = np.concatenate([r[0] for r in reqs]) if reqs else np.zeros(0, np.int64)
+    lens = np.concatenate([r[1] for r in reqs]) if reqs else np.zeros(0, np.int64)
+    data = np.concatenate([r[2] for r in reqs]) if reqs else np.zeros(0, np.uint8)
+    if offs.size == 0:
+        return offs, lens, data, 0
+    order = np.argsort(offs, kind="stable")
+    offs, lens = offs[order], lens[order]
+    starts = np.concatenate([[0], np.cumsum(
+        np.concatenate([r[1] for r in reqs]))[:-1]])
+    packed = np.concatenate([
+        data[starts[i]:starts[i] + lens_orig]
+        for i, lens_orig in zip(order, lens)]) if data.size else data
+    # coalesce adjacent contiguous runs
+    boundary = np.ones(offs.size, bool)
+    boundary[1:] = offs[1:] != offs[:-1] + lens[:-1]
+    run = np.cumsum(boundary) - 1
+    out_offs = offs[boundary]
+    out_lens = np.bincount(run, weights=lens).astype(np.int64)
+    n_cmp = int(offs.size * max(np.log2(max(len(reqs), 2)), 1))
+    return out_offs, out_lens, packed, n_cmp
+
+
+def domain_image(offs, lens, packed, g, stripe_size, stripe_count):
+    """Dense image of aggregator g's file domain (its stripes, in round
+    order), mirroring core.domains.to_domain_local."""
+    if offs.size == 0:
+        return np.zeros(0, np.uint8)
+    rounds = (offs // stripe_size) // stripe_count
+    n_rounds = int(rounds.max()) + 1
+    img = np.zeros(n_rounds * stripe_size, np.uint8)
+    starts = np.concatenate([[0], np.cumsum(lens)[:-1]])
+    locals_ = to_domain_local(offs, stripe_size, stripe_count)
+    for o, l, s in zip(locals_, lens, starts):
+        img[o:o + l] = packed[s:s + l]
+    return img
+
+
+def write_segment(path: str, seg: np.ndarray, cb_bytes: int | None,
+                  depth: int = 2) -> None:
+    """Write one segment file; with ``cb_bytes`` smaller than the
+    segment, drain it through a background writer thread fed one cb
+    window at a time through ``depth - 1`` queue slots (mirroring the
+    SPMD ring's ``depth`` in-flight window buffers: the producer can
+    run up to depth-1 windows ahead of the writer). A single consumer
+    writes the windows in order, so the bytes on disk are identical to
+    the direct write for every depth."""
+    if cb_bytes is None or seg.size <= cb_bytes or depth <= 1:
+        with open(path, "wb") as f:
+            f.write(seg.tobytes())
+        return
+    q: queue.Queue = queue.Queue(maxsize=max(depth - 1, 1))
+    error: list[BaseException] = []
+
+    def drain(f):
+        # on a write error, keep consuming (and discarding) so the
+        # producer's q.put never blocks on a dead consumer; the error
+        # re-raises in the producer after join
+        while True:
+            chunk = q.get()
+            if chunk is None:
+                return
+            if not error:
+                try:
+                    f.write(chunk)
+                except BaseException as e:  # noqa: BLE001 - re-raised below
+                    error.append(e)
+
+    with open(path, "wb") as f:
+        th = threading.Thread(target=drain, args=(f,))
+        th.start()
+        try:
+            for lo in range(0, int(seg.size), cb_bytes):
+                q.put(seg[lo:lo + cb_bytes].tobytes())
+        finally:
+            q.put(None)
+            th.join()
+    if error:
+        raise error[0]
+
+
+def execute_write(plan: IOPlan, machine: Machine, per_la, path: str, t,
+                  depth_request=None):
+    """Run the inter-node exchange + I/O step of a write plan.
+
+    per_la: the stage-1 output — per local aggregator (per rank for
+    two-phase) ``(offsets, lengths, packed)`` in BYTE units, already
+    split at stripe boundaries. ``t`` is the :class:`IOTimings` being
+    filled (stage-1 fields already set by the caller).
+
+    The round partition comes from the plan: round r covers
+    domain-local bytes ``[r*cb, (r+1)*cb)`` of every GA (the 1-round
+    plan with ``cb == domain_len`` IS the single shot). Padding rounds
+    past the occupied extent receive zero messages and cost nothing —
+    the makespan is invariant to them.
+
+    depth_request: ``None`` executes the plan's resolved depth;
+    ``"auto"`` re-resolves against the MEASURED per-round comm/drain
+    arrays via ``cost_model.optimal_depth`` (the planner's uniform
+    model cannot distinguish depths > 2 — the measurement can).
+    """
+    m = machine
+    stripe_count, cb = plan.n_aggregators, plan.cb
+    stripe_size = plan.layout.stripe_size
+    n_rounds = plan.n_rounds
+
+    # ---- inter-node: local aggregators -> global aggregators ---------
+    ga_inbox: list[list] = [[] for _ in range(stripe_count)]
+    ga_msgs = np.zeros((stripe_count, n_rounds), np.int64)
+    ga_bytes = np.zeros((stripe_count, n_rounds), np.int64)
+    for offs, lens, packed in per_la:
+        if offs.size == 0:
+            continue
+        owner = (offs // stripe_size) % stripe_count
+        rnd = to_domain_local(offs, stripe_size, stripe_count) // cb
+        starts = np.concatenate([[0], np.cumsum(lens)[:-1]])
+        for g in range(stripe_count):
+            sel = owner == g
+            if not sel.any():
+                continue
+            po = offs[sel]
+            pl = lens[sel]
+            pd = np.concatenate([packed[s:s + l] for s, l in
+                                 zip(starts[sel], pl)])
+            ga_inbox[g].append((po, pl, pd))
+            for r in np.unique(rnd[sel]):
+                in_r = rnd[sel] == r
+                ga_msgs[g, r] += 1       # one (re)send per round
+                ga_bytes[g, r] += (int(pl[in_r].sum())
+                                   + int(in_r.sum()) * PAIR_BYTES)
+    t.rounds_executed = n_rounds
+    t.messages_at_ga = int(ga_msgs.max(initial=0))
+    # per-round incast: a receiver with S concurrent senders pays
+    # alpha_eff(S) each (cost_model refinement 2, applied to the
+    # single-shot exchange too so the timings are comparable);
+    # rounds serialize unless pipelined (accounted below).
+    alpha = np.vectorize(m.alpha_eff)(ga_msgs) * ga_msgs
+    comm_rounds = (alpha + m.beta_inter * ga_bytes).max(axis=0, initial=0)
+    t.inter_comm = float(comm_rounds.sum())
+
+    # ---- pipeline depth: the plan's pick, or re-resolved against the
+    # measured rounds ---------------------------------------------------
+    depth = plan.pipeline_depth
+    multi_window = n_rounds > 1
+
+    # ---- I/O step: sort + write segments ------------------------------
+    img_lens = np.zeros(stripe_count, np.int64)
+    segs = []
+    for g in range(stripe_count):
+        offs, lens, packed, n_cmp = merge_coalesce(ga_inbox[g])
+        t.inter_sort = max(t.inter_sort, m.sort_per_cmp * n_cmp)
+        segs.append(domain_image(offs, lens, packed, g, stripe_size,
+                                 stripe_count))
+        img_lens[g] = segs[-1].size
+    t.io = float(img_lens.sum()) / m.io_bw
+
+    # bytes GA g drains in round r: its image's overlap with the
+    # window [r*cb, (r+1)*cb)
+    lo = np.arange(n_rounds, dtype=np.int64) * cb
+    io_rounds = (np.clip(img_lens[:, None] - lo[None, :], 0, cb)
+                 .sum(axis=0) / m.io_bw)
+    if depth_request == "auto" and multi_window:
+        depth, _ = optimal_depth(round_times=(comm_rounds, io_rounds))
+    t.pipeline_depth = max(1, min(depth, n_rounds))  # executed in-flight
+
+    for g in range(stripe_count):
+        write_segment(f"{path}.seg{g}", segs[g],
+                      cb if multi_window and depth > 1 else None,
+                      depth=depth)
+
+    # ---- pipelined makespan: the depth-k bounded-buffer recurrence
+    # over the measured per-round arrays; the prologue (first exchange)
+    # and epilogue (last drain) stay exposed ----------------------------
+    if depth > 1 and n_rounds > 0:
+        serial = float(comm_rounds.sum() + io_rounds.sum())
+        span = pipeline_span(comm_rounds, io_rounds, depth)
+        t.overlap_saved = max(serial - span, 0.0)
+        hideable = (float(min(comm_rounds[1:].sum(),
+                              io_rounds[:-1].sum()))
+                    if n_rounds > 1 else 0.0)
+        t.overlap_fraction = (min(t.overlap_saved / hideable, 1.0)
+                              if hideable > 0 else 0.0)
+    return t

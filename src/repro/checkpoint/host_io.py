@@ -10,22 +10,36 @@ simulated "ranks" placed on "nodes":
   (merge-sort + coalesce, numpy), then only local aggregators talk to
   the global aggregators.
 
+Since the plan/executor split (ARCHITECTURE.md), :class:`HostCollectiveIO`
+is a thin wrapper: :meth:`HostCollectiveIO.plan_for` compiles the
+schedule through the SAME planner the SPMD entry points use
+(``repro.core.plan.compile_plan``, byte units), and
+``repro.checkpoint.host_exec.execute_write`` runs it — round partition,
+per-round incast timing, depth-k pipelined drain. Stage 1 (the
+intra-node aggregation, which the SPMD executor expresses as mesh-axis
+gathers) stays here because it is where ranks map onto nodes and
+failed-aggregator fallback lives.
+
 Data movement is real (numpy), producing byte-identical files for both
-schedules; *time* is modeled with the alpha-beta congestion machine from
-``core.cost_model`` applied to the actual per-phase message sizes and
-counts — receivers serialize incoming messages, which is exactly the
-contention TAM removes (paper Fig. 2). This gives the Fig. 3-7
-reproductions their x-axes without a 16k-core Cray.
+schedules at every ring depth; *time* is modeled with the alpha-beta
+congestion machine from ``core.cost_model`` applied to the actual
+per-phase message sizes and counts — receivers serialize incoming
+messages, which is exactly the contention TAM removes (paper Fig. 2).
+This gives the Fig. 3-7 reproductions their x-axes without a 16k-core
+Cray.
 """
 from __future__ import annotations
 
-import queue
-import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
+from repro.checkpoint import host_exec
+from repro.checkpoint.host_exec import PAIR_BYTES  # noqa: F401 (compat)
 from repro.core.cost_model import Machine, Workload, optimal_cb
+from repro.core.domains import FileLayout
+from repro.core.plan import (IOConfig, IOPlan, compile_plan,
+                             resolve_method)
 
 
 @dataclass
@@ -40,9 +54,11 @@ class IOTimings:
     requests_before: int = 0
     requests_after: int = 0
     rounds_executed: int = 1       # exchange rounds (1 == single shot)
+    pipeline_depth: int = 1        # executed in-flight windows (1=serial)
     overlap_saved: float = 0.0     # time hidden by the pipelined drain:
-    # each steady-state round is charged max(comm, io) instead of their
-    # sum, so total == serial total - overlap_saved
+    # the depth-k ring's makespan (cost_model.pipeline_span over the
+    # measured per-round arrays) replaces the serial comm+io sum, so
+    # total == serial total - overlap_saved
     overlap_fraction: float = 0.0  # overlap_saved / the hideable time
     # (the smaller of steady-state comm and io); 0 when serial or when
     # there is no steady state (single round)
@@ -60,45 +76,6 @@ class IOTimings:
     @property
     def coalesce_ratio(self) -> float:
         return self.requests_after / max(self.requests_before, 1)
-
-
-PAIR_BYTES = 8  # offset + length metadata per request
-
-
-def _to_domain_local(offs, stripe_size: int, stripe_count: int):
-    """Byte position inside the owning GA's domain image (its stripes
-    concatenated in round order) — mirrors ``domains.to_domain_local``."""
-    return ((offs // stripe_size) // stripe_count) * stripe_size \
-        + offs % stripe_size
-
-
-def _merge_coalesce(reqs: list[tuple[np.ndarray, np.ndarray, np.ndarray]]):
-    """Merge per-sender (offsets, lengths, payload), sort, coalesce.
-
-    Returns (offsets, lengths, payload) with payload packed in sorted
-    offset order (contiguous per coalesced run). Comparisons counted for
-    the sort-time model.
-    """
-    offs = np.concatenate([r[0] for r in reqs]) if reqs else np.zeros(0, np.int64)
-    lens = np.concatenate([r[1] for r in reqs]) if reqs else np.zeros(0, np.int64)
-    data = np.concatenate([r[2] for r in reqs]) if reqs else np.zeros(0, np.uint8)
-    if offs.size == 0:
-        return offs, lens, data, 0
-    order = np.argsort(offs, kind="stable")
-    offs, lens = offs[order], lens[order]
-    starts = np.concatenate([[0], np.cumsum(
-        np.concatenate([r[1] for r in reqs]))[:-1]])
-    packed = np.concatenate([
-        data[starts[i]:starts[i] + lens_orig]
-        for i, lens_orig in zip(order, lens)]) if data.size else data
-    # coalesce adjacent contiguous runs
-    boundary = np.ones(offs.size, bool)
-    boundary[1:] = offs[1:] != offs[:-1] + lens[:-1]
-    run = np.cumsum(boundary) - 1
-    out_offs = offs[boundary]
-    out_lens = np.bincount(run, weights=lens).astype(np.int64)
-    n_cmp = int(offs.size * max(np.log2(max(len(reqs), 2)), 1))
-    return out_offs, out_lens, packed, n_cmp
 
 
 class HostCollectiveIO:
@@ -135,18 +112,94 @@ class HostCollectiveIO:
         return (offs // self.stripe_size) % self.stripe_count
 
     def _domain_local(self, offs):
-        return _to_domain_local(offs, self.stripe_size, self.stripe_count)
+        return host_exec.to_domain_local(offs, self.stripe_size,
+                                         self.stripe_count)
+
+    def _measured_workload(self, rank_requests,
+                           pipeline: bool = True) -> Workload:
+        """Cost-model Workload for THIS request set (byte units)."""
+        P = self.n_ranks
+        total = float(sum(int(ln.sum()) for _, ln, _ in rank_requests))
+        n_req = float(sum(o.size for o, _, _ in rank_requests))
+        return Workload(P=P, nodes=self.n_nodes, P_G=self.stripe_count,
+                        k=max(n_req, 1.0) / P, total_bytes=max(total, 1.0),
+                        stripe_size=float(self.stripe_size),
+                        overlap=1.0 if pipeline else 0.0)
+
+    # ------------------------------------------------------------------
+    def plan_for(self, *, method: str = "twophase",
+                 cb_bytes: int | str | None = None,
+                 pipeline: bool = False,
+                 pipeline_depth: int | str | None = None,
+                 file_len: int | None = None, rank_requests=None,
+                 local_aggregators: int | None = None,
+                 req_cap: int = 0, data_cap: int = 0,
+                 coalesce_cap: int | None = None) -> IOPlan:
+        """Compile this writer's schedule — the host side of the
+        plan-identity contract: given the same layout/config, this and
+        the SPMD ``twophase.plan_for`` produce the SAME
+        :class:`IOPlan` (asserted by tests/test_plan.py). Units here
+        are bytes. This is THE auto-resolution point for the host path
+        (``write`` delegates): method resolves first (measured
+        workload, shared ``plan.resolve_method``), then
+        ``cb_bytes="auto"`` tunes for that method at the
+        ``local_aggregators`` P_L the write will actually use.
+
+        file_len defaults to the request set's extent padded so every
+        aggregator domain is a whole number of cb windows (padding
+        rounds are empty — they receive no messages and the makespan
+        is invariant to them). req_cap/data_cap are the SPMD backend's
+        static capacities; numpy is dynamic, so they default to 0 and
+        are advisory here.
+        """
+        pipe = pipeline or pipeline_depth is not None
+        workload = (self._measured_workload(rank_requests, pipe)
+                    if rank_requests is not None else None)
+        if method == "auto" and workload is not None:
+            method = resolve_method(workload, self.machine)
+        if cb_bytes == "auto":
+            if rank_requests is None:
+                raise ValueError(
+                    'cb_bytes="auto" needs rank_requests to measure')
+            cb_bytes = self.auto_cb_bytes(
+                rank_requests, method=method,
+                local_aggregators=local_aggregators, pipeline=pipe,
+                workload=workload)
+        if cb_bytes is not None and cb_bytes % self.stripe_size:
+            raise ValueError("cb_bytes must be a stripe_size multiple")
+        if file_len is None:
+            ext = self.stripe_size
+            if rank_requests is not None:
+                ext = max((int((o + ln).max()) for o, ln, _ in rank_requests
+                           if o.size), default=self.stripe_size)
+            n_str = -(-ext // self.stripe_size)
+            dom = -(-n_str // self.stripe_count) * self.stripe_size
+            if cb_bytes is not None:       # whole number of windows
+                dom = -(-dom // cb_bytes) * cb_bytes
+            file_len = dom * self.stripe_count
+        cfg = IOConfig(
+            req_cap=req_cap, data_cap=data_cap, coalesce_cap=coalesce_cap,
+            cb_buffer_size=cb_bytes, pipeline=pipe,
+            pipeline_depth=(pipeline_depth if pipeline_depth is not None
+                            else 2))
+        return compile_plan(
+            FileLayout(stripe_size=self.stripe_size,
+                       stripe_count=self.stripe_count, file_len=file_len),
+            cfg, n_aggregators=self.stripe_count, n_nodes=self.n_nodes,
+            n_ranks=self.n_ranks, method=method, direction="write",
+            machine=self.machine, workload=workload, unit_bytes=1)
 
     # ------------------------------------------------------------------
     def write(self, rank_requests, path: str, method: str = "tam",
               local_aggregators: int | None = None,
               failed_aggregators: set[int] | None = None,
               cb_bytes: int | str | None = None,
-              pipeline: bool = False) -> IOTimings:
+              pipeline: bool = False,
+              pipeline_depth: int | str | None = None) -> IOTimings:
         """rank_requests: list of (offsets[int64], lengths[int64],
         payload[uint8]) per rank, offsets element=byte units here.
-        method: "tam" | "twophase". Returns IOTimings; writes
-        ``<path>.seg<g>`` files.
+        method: "tam" | "twophase" | "auto" (cost-model pick at plan
+        time). Returns IOTimings; writes ``<path>.seg<g>`` files.
 
         failed_aggregators: ranks that must not serve as local
         aggregators (straggler/failure mitigation): each group falls
@@ -154,29 +207,30 @@ class HostCollectiveIO:
         reassignment only costs one extra intra-node hop in the model.
 
         cb_bytes: aggregator collective-buffer bytes per round
-        (stripe-aligned, mirroring ``rounds.RoundScheduler``). ``None``
-        keeps the single-shot exchange; ``"auto"`` lets
-        :meth:`auto_cb_bytes` pick the size minimizing the modeled
-        total for this request set. Bytes written are identical either
-        way; what changes is the TIMING: each round re-pays the incast
-        latency ``alpha_eff(senders)`` per receive, exactly the cost
-        model's round refinement.
+        (stripe-aligned). ``None`` = the 1-round plan (single shot);
+        ``"auto"`` lets :meth:`auto_cb_bytes` pick the size minimizing
+        the modeled total for this request set. Bytes written are
+        identical either way; what changes is the TIMING: each round
+        re-pays the incast latency ``alpha_eff(senders)`` per receive,
+        exactly the cost model's round refinement.
 
-        pipeline: double-buffer the rounds — round t+1's exchange
-        overlaps round t's drain, so each steady-state round is charged
-        ``max(comm, io)`` instead of their sum (``overlap_saved`` /
-        ``overlap_fraction`` report the hidden time), and each segment
-        is physically drained through a double-buffered background
-        writer thread, one cb window at a time. Output bytes are
-        identical to the serial path.
+        pipeline / pipeline_depth: run the depth-k window ring — the
+        exchange runs up to k-1 rounds ahead of the drain, each round
+        is charged by the exact bounded-buffer makespan
+        (``cost_model.pipeline_span``), and each segment is physically
+        drained through a background writer thread fed one cb window
+        at a time through k-1 queue slots. ``pipeline=True`` alone is
+        the classic double buffer (k=2); ``pipeline_depth="auto"``
+        re-resolves k against the MEASURED per-round arrays. Output
+        bytes are identical to the serial path for every k.
         """
         failed_aggregators = failed_aggregators or set()
-        if cb_bytes == "auto":
-            cb_bytes = self.auto_cb_bytes(
-                rank_requests, method=method,
-                local_aggregators=local_aggregators, pipeline=pipeline)
-        if cb_bytes is not None and cb_bytes % self.stripe_size:
-            raise ValueError("cb_bytes must be a stripe_size multiple")
+        plan = self.plan_for(
+            method=method, cb_bytes=cb_bytes, pipeline=pipeline,
+            pipeline_depth=(2 if pipeline_depth == "auto"
+                            else pipeline_depth),
+            rank_requests=rank_requests,
+            local_aggregators=local_aggregators)
         m = self.machine
         t = IOTimings()
         P, nodes = self.n_ranks, self.n_nodes
@@ -184,14 +238,13 @@ class HostCollectiveIO:
         split = [self._split_stripes(*r) for r in rank_requests]
         t.requests_before = sum(s[0].size for s in split)
 
-        if method == "twophase":
-            per_la = split                      # every rank speaks for itself
-            la_of_rank = list(range(P))
-            P_L = P
+        # ---- stage 1: intra-node aggregation (plan.method) -----------
+        if plan.method == "twophase":
+            per_la = split                  # every rank speaks for itself
         else:
             P_L = local_aggregators or nodes * 4
             assert P_L % nodes == 0
-            c = P_L // nodes                    # local aggs per node
+            c = P_L // nodes                # local aggs per node
             per_la = []
             for node in range(nodes):
                 node_ranks = range(node * q, (node + 1) * q)
@@ -206,7 +259,8 @@ class HostCollectiveIO:
                             f"no healthy aggregator in group {list(g)}")
                     reassigned = bool(len(g)) and \
                         int(g[0]) in failed_aggregators
-                    merged = _merge_coalesce([split[r] for r in g])
+                    merged = host_exec.merge_coalesce(
+                        [split[r] for r in g])
                     offs, lens, packed, n_cmp = merged
                     # coalescing may fuse runs ACROSS stripe boundaries;
                     # re-split so each request has exactly one owner
@@ -227,101 +281,20 @@ class HostCollectiveIO:
                                          bytes_in / m.memcpy_bw)
         t.requests_after = sum(la[0].size for la in per_la)
 
-        # ---- inter-node: local aggregators -> global aggregators -------
-        # Round partition (mirrors core.rounds.RoundScheduler): round r
-        # covers domain-local bytes [r*cb, (r+1)*cb) of every GA; with
-        # cb_bytes=None everything lands in round 0 (single shot).
-        n_rounds = 1
-        if cb_bytes is not None:
-            dom_ends = [int((self._domain_local(o) + l).max())
-                        for o, l, _ in per_la if o.size]
-            n_rounds = max(-(-max(dom_ends, default=1) // cb_bytes), 1)
-        ga_inbox: list[list] = [[] for _ in range(self.stripe_count)]
-        ga_msgs = np.zeros((self.stripe_count, n_rounds), np.int64)
-        ga_bytes = np.zeros((self.stripe_count, n_rounds), np.int64)
-        for offs, lens, packed in per_la:
-            if offs.size == 0:
-                continue
-            owner = self._owner(offs)
-            rnd = (self._domain_local(offs) // cb_bytes
-                   if cb_bytes is not None
-                   else np.zeros(offs.size, np.int64))
-            starts = np.concatenate([[0], np.cumsum(lens)[:-1]])
-            for g in range(self.stripe_count):
-                sel = owner == g
-                if not sel.any():
-                    continue
-                po = offs[sel]
-                pl = lens[sel]
-                pd = np.concatenate([packed[s:s + l] for s, l in
-                                     zip(starts[sel], pl)])
-                ga_inbox[g].append((po, pl, pd))
-                for r in np.unique(rnd[sel]):
-                    in_r = rnd[sel] == r
-                    ga_msgs[g, r] += 1       # one (re)send per round
-                    ga_bytes[g, r] += (int(pl[in_r].sum())
-                                       + int(in_r.sum()) * PAIR_BYTES)
-        t.rounds_executed = n_rounds
-        t.messages_at_ga = int(ga_msgs.max(initial=0))
-        # per-round incast: a receiver with S concurrent senders pays
-        # alpha_eff(S) each (cost_model refinement 2, applied to the
-        # single-shot exchange too so the timings are comparable);
-        # rounds serialize unless pipelined (accounted below).
-        alpha = np.vectorize(m.alpha_eff)(ga_msgs) * ga_msgs
-        comm_rounds = (alpha + m.beta_inter * ga_bytes).max(axis=0,
-                                                           initial=0)
-        t.inter_comm = float(comm_rounds.sum())
-
-        # ---- I/O step: sort + write segments ---------------------------
-        # pipelined: each segment drains through a double-buffered
-        # background writer, one cb window at a time (byte-identical:
-        # a single consumer writes the windows in order)
-        img_lens = np.zeros(self.stripe_count, np.int64)
-        for g in range(self.stripe_count):
-            offs, lens, packed, n_cmp = _merge_coalesce(ga_inbox[g])
-            t.inter_sort = max(t.inter_sort, m.sort_per_cmp * n_cmp)
-            seg = _domain_image(offs, lens, packed, g, self.stripe_size,
-                                self.stripe_count)
-            _write_segment(f"{path}.seg{g}", seg,
-                           cb_bytes if pipeline else None)
-            img_lens[g] = seg.size
-        t.io = float(img_lens.sum()) / m.io_bw
-
-        # ---- pipelined overlap: round t+1's exchange runs while round
-        # t's window drains, so the steady state pays max(comm, io) per
-        # round; the prologue (first exchange) and epilogue (last
-        # drain) stay exposed -------------------------------------------
-        if pipeline and n_rounds > 0:
-            cb = (cb_bytes if cb_bytes is not None
-                  else max(int(img_lens.max(initial=1)), 1))
-            lo = np.arange(n_rounds, dtype=np.int64) * cb
-            # bytes GA g drains in round r: its image's overlap with
-            # the window [r*cb, (r+1)*cb)
-            io_rounds = (np.clip(img_lens[:, None] - lo[None, :], 0, cb)
-                         .sum(axis=0) / m.io_bw)
-            serial = float(comm_rounds.sum() + io_rounds.sum())
-            span = float(comm_rounds[0]
-                         + np.maximum(comm_rounds[1:], io_rounds[:-1]).sum()
-                         + io_rounds[-1])
-            t.overlap_saved = max(serial - span, 0.0)
-            hideable = (float(min(comm_rounds[1:].sum(),
-                                  io_rounds[:-1].sum()))
-                        if n_rounds > 1 else 0.0)
-            t.overlap_fraction = (min(t.overlap_saved / hideable, 1.0)
-                                  if hideable > 0 else 0.0)
-        return t
+        # ---- inter-node exchange + I/O: the host executor ------------
+        return host_exec.execute_write(
+            plan, m, per_la, path, t,
+            depth_request="auto" if pipeline_depth == "auto" else None)
 
     # ------------------------------------------------------------------
     def auto_cb_bytes(self, rank_requests, method: str = "tam",
                       local_aggregators: int | None = None,
-                      pipeline: bool = True) -> int:
+                      pipeline: bool = True, workload=None) -> int:
         """Autotuned collective-buffer size for THIS request set: the
         stripe-aligned cb minimizing ``cost_model.optimal_cb``'s modeled
         total (pipelined when ``pipeline``) for the measured workload
-        shape (P, nodes, P_G = stripe_count, request count, bytes)."""
-        P = self.n_ranks
-        total = float(sum(int(ln.sum()) for _, ln, _ in rank_requests))
-        n_req = float(sum(o.size for o, _, _ in rank_requests))
+        shape (P, nodes, P_G = stripe_count, request count, bytes).
+        Pass ``workload`` to reuse an already-measured one."""
         ext = max((int((o + ln).max()) for o, ln, _ in rank_requests
                    if o.size), default=self.stripe_size)
         n_str = -(-ext // self.stripe_size)
@@ -331,10 +304,8 @@ class HostCollectiveIO:
             cands.append(c)
             c *= 2
         cands.append(dom_bytes)
-        w = Workload(P=P, nodes=self.n_nodes, P_G=self.stripe_count,
-                     k=max(n_req, 1.0) / P, total_bytes=max(total, 1.0),
-                     stripe_size=float(self.stripe_size),
-                     overlap=1.0 if pipeline else 0.0)
+        w = workload if workload is not None else \
+            self._measured_workload(rank_requests, pipeline)
         P_L = ((local_aggregators or self.n_nodes * 4)
                if method == "tam" else None)
         cb, _ = optimal_cb(w, self.machine, P_L=P_L,
@@ -360,58 +331,8 @@ class HostCollectiveIO:
         return out
 
 
-def _write_segment(path: str, seg: np.ndarray,
-                   cb_bytes: int | None) -> None:
-    """Write one segment file; with ``cb_bytes`` set, drain it through
-    a double-buffered background writer thread — one cb window is being
-    written while the producer stages the next (mirroring the SPMD
-    pipeline's two in-flight window buffers). A single consumer writes
-    the windows in order, so the bytes on disk are identical to the
-    direct write."""
-    if cb_bytes is None or seg.size <= cb_bytes:
-        with open(path, "wb") as f:
-            f.write(seg.tobytes())
-        return
-    q: queue.Queue = queue.Queue(maxsize=1)
-    error: list[BaseException] = []
-
-    def drain(f):
-        # on a write error, keep consuming (and discarding) so the
-        # producer's q.put never blocks on a dead consumer; the error
-        # re-raises in the producer after join
-        while True:
-            chunk = q.get()
-            if chunk is None:
-                return
-            if not error:
-                try:
-                    f.write(chunk)
-                except BaseException as e:  # noqa: BLE001 - re-raised below
-                    error.append(e)
-
-    with open(path, "wb") as f:
-        th = threading.Thread(target=drain, args=(f,))
-        th.start()
-        try:
-            for lo in range(0, int(seg.size), cb_bytes):
-                q.put(seg[lo:lo + cb_bytes].tobytes())
-        finally:
-            q.put(None)
-            th.join()
-    if error:
-        raise error[0]
-
-
-def _domain_image(offs, lens, packed, g, stripe_size, stripe_count):
-    """Dense image of aggregator g's file domain (its stripes, in round
-    order), mirroring core.domains.to_domain_local."""
-    if offs.size == 0:
-        return np.zeros(0, np.uint8)
-    rounds = (offs // stripe_size) // stripe_count
-    n_rounds = int(rounds.max()) + 1
-    img = np.zeros(n_rounds * stripe_size, np.uint8)
-    starts = np.concatenate([[0], np.cumsum(lens)[:-1]])
-    locals_ = _to_domain_local(offs, stripe_size, stripe_count)
-    for o, l, s in zip(locals_, lens, starts):
-        img[o:o + l] = packed[s:s + l]
-    return img
+# Backwards-compatible aliases: the executor bodies moved to host_exec.
+_merge_coalesce = host_exec.merge_coalesce
+_write_segment = host_exec.write_segment
+_domain_image = host_exec.domain_image
+_to_domain_local = host_exec.to_domain_local

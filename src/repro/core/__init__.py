@@ -7,15 +7,19 @@ from repro.core.domains import FileLayout, contiguous_layout  # noqa: F401
 from repro.core.coalesce import (  # noqa: F401
     aggregate, coalesce_sorted, merge_sorted, sort_requests,
 )
-from repro.core.twophase import IOConfig, make_twophase_write  # noqa: F401
-from repro.core.tam import make_tam_write  # noqa: F401
-from repro.core.rounds import (  # noqa: F401
-    RoundScheduler, peak_aggregator_buffer_elems,
+from repro.core.plan import (  # noqa: F401
+    IOConfig, IOPlan, RoundScheduler, compile_plan, resolve_cb_buffer_size,
 )
+from repro.core.twophase import make_twophase_write, plan_for  # noqa: F401
+from repro.core.tam import make_tam_write  # noqa: F401
+from repro.core.spmd_exec import (  # noqa: F401
+    make_collective_write, make_spmd_executor,
+)
+from repro.core.rounds import peak_aggregator_buffer_elems  # noqa: F401
 from repro.core.cost_model import (  # noqa: F401
     Machine, Workload, cb_candidates, optimal_PL, optimal_cb,
-    rounds_for_cb, tam_cost, twophase_cost, with_measured_rounds,
-    with_overlap,
+    optimal_cb_and_depth, optimal_depth, pipeline_span, rounds_for_cb,
+    tam_cost, twophase_cost, with_measured_rounds, with_overlap,
 )
 from repro.core.hierarchical import (  # noqa: F401
     compressed_psum, two_layer_all_to_all, two_layer_psum,

@@ -86,6 +86,12 @@ class Workload:
     # smaller of (per-round exchange, per-round drain) hidden in steady
     # state. 0 = serial rounds (sum), 1 = perfect double-buffered overlap
     # (each steady-state round pays max(comm, io) instead of comm + io).
+    pipeline_depth: int = 2       # in-flight cb windows of the round engine
+    # (1 = serial, 2 = the classic double buffer, k > 2 = a depth-k ring
+    # that can absorb multi-round spikes in non-uniform round times; with
+    # the model's uniform per-round phases every depth >= 2 hides the
+    # same amount, so the depth only matters through pipeline_span /
+    # optimal_depth when measured per-round times are supplied).
 
     @property
     def q(self) -> int:
@@ -153,15 +159,16 @@ def _inter_phase(w: Workload, m: Machine, endpoints: float,
 def _overlap_saved(w: Workload, inter_comm: float, io: float) -> float:
     """Time hidden by the pipelined round engine (refinement 4).
 
-    A double-buffered round loop exchanges round t+1 while draining
-    round t, so each of the R-1 steady-state rounds pays
-    ``max(comm_r, io_r)`` instead of ``comm_r + io_r``; the prologue
-    (first exchange) and epilogue (last drain) stay exposed. With
-    per-round uniform phases the saving is
-    ``overlap * (R - 1) * min(inter_comm, io) / R``.
+    A pipelined round loop exchanges round t+1 while draining round t,
+    so each of the R-1 steady-state rounds pays ``max(comm_r, io_r)``
+    instead of ``comm_r + io_r``; the prologue (first exchange) and
+    epilogue (last drain) stay exposed. With per-round uniform phases
+    the saving is ``overlap * (R - 1) * min(inter_comm, io) / R`` for
+    every depth >= 2 (a deeper ring only helps non-uniform rounds —
+    see :func:`pipeline_span`); depth 1 is the serial loop.
     """
     rounds = w.rounds
-    if w.overlap <= 0.0 or rounds <= 1.0:
+    if w.overlap <= 0.0 or rounds <= 1.0 or w.pipeline_depth <= 1:
         return 0.0
     return (min(1.0, w.overlap) * (rounds - 1.0)
             * min(inter_comm / rounds, io / rounds))
@@ -227,11 +234,102 @@ def with_measured_rounds(w: Workload, rounds: float) -> Workload:
     return dataclasses.replace(w, rounds_override=float(rounds))
 
 
-def with_overlap(w: Workload, overlap: float = 1.0) -> Workload:
+def with_overlap(w: Workload, overlap: float = 1.0,
+                 depth: int = 2) -> Workload:
     """Model the pipelined round engine: ``overlap`` of the smaller
-    per-round phase (exchange vs drain) is hidden in steady state."""
+    per-round phase (exchange vs drain) is hidden in steady state.
+    ``depth`` is the number of in-flight cb windows (the ring size):
+    1 restores the serial loop, 2 is the classic double buffer, and
+    deeper rings matter only through :func:`pipeline_span` when
+    per-round times are non-uniform."""
     import dataclasses
-    return dataclasses.replace(w, overlap=float(overlap))
+    return dataclasses.replace(w, overlap=float(overlap),
+                               pipeline_depth=int(depth))
+
+
+def pipeline_span(comm_rounds, io_rounds, depth: int) -> float:
+    """Exact makespan of a depth-k bounded-buffer round pipeline.
+
+    ``comm_rounds[t]`` / ``io_rounds[t]`` are round t's exchange and
+    drain times (any non-uniformity is welcome — this is what a deeper
+    ring exploits). The ring holds ``depth`` window buffers: the
+    exchange of round t reuses the buffer drained in round t - depth,
+    so
+
+        finish_ex[t] = max(finish_ex[t-1], finish_dr[t-depth]) + comm[t]
+        finish_dr[t] = max(finish_dr[t-1], finish_ex[t]) + io[t]
+
+    ``depth=1`` degenerates to the serial sum; ``depth=2`` reproduces
+    the closed form ``c_0 + sum max(c_t, i_{t-1}) + i_{R-1}`` the host
+    path measured before depth-k existed.
+    """
+    comm = [float(c) for c in comm_rounds]
+    io = [float(i) for i in io_rounds]
+    n = len(comm)
+    if n == 0:
+        return 0.0
+    d = max(1, min(int(depth), n))
+    if d == 1:
+        return sum(comm) + sum(io)
+    fin_ex = [0.0] * n
+    fin_dr = [0.0] * n
+    for t in range(n):
+        start = fin_ex[t - 1] if t else 0.0
+        if t - d >= 0:
+            start = max(start, fin_dr[t - d])
+        fin_ex[t] = start + comm[t]
+        fin_dr[t] = max(fin_dr[t - 1] if t else 0.0, fin_ex[t]) + io[t]
+    return fin_dr[-1]
+
+
+def optimal_depth(w: Workload | None = None, m: Machine = Machine(),
+                  P_L: int | None = None,
+                  cb_bytes: float | None = None,
+                  depths: tuple[int, ...] = (1, 2, 3, 4),
+                  round_times=None) -> tuple[int, float]:
+    """Pick the pipeline-ring depth minimizing the round-loop makespan,
+    the way :func:`optimal_cb` picks the collective-buffer size.
+
+    Two modes:
+
+    * **measured** — ``round_times = (comm_rounds, io_rounds)`` from an
+      executed run (the host path's per-round arrays): the span is
+      computed exactly per candidate depth, so a depth-k ring's ability
+      to absorb multi-round spikes is visible.
+    * **modeled** — from ``w`` (and ``cb_bytes`` to pin the round
+      count): per-round phases are uniform, every depth >= 2 ties and
+      the smallest winning depth is returned (deeper rings cost k x
+      window memory for no modeled gain — see
+      ``rounds.peak_aggregator_buffer_elems``).
+
+    Returns ``(depth, span_seconds)``. Ties go to the smallest depth.
+    """
+    if round_times is not None:
+        comm_rounds, io_rounds = round_times
+        comm_rounds = [float(c) for c in comm_rounds]
+        io_rounds = [float(i) for i in io_rounds]
+        spans = {d: pipeline_span(comm_rounds, io_rounds, d)
+                 for d in depths}
+    else:
+        if w is None:
+            raise ValueError("need a Workload or measured round_times")
+        wc = w if cb_bytes is None else \
+            with_measured_rounds(w, rounds_for_cb(w, cb_bytes))
+        cost = tam_cost(wc, P_L, m) if P_L is not None else \
+            twophase_cost(wc, m)
+        # uniform per-round phases: the span has a closed form (every
+        # depth >= 2 ties), so no per-round array is materialized even
+        # for million-round schedules
+        n = max(float(wc.rounds), 1.0)
+        c_r, i_r = cost.inter_comm / n, cost.io / n
+        spans = {d: (n * (c_r + i_r) if min(d, n) <= 1
+                     else c_r + (n - 1.0) * max(c_r, i_r) + i_r)
+                 for d in depths}
+    best_d, best_s = None, None
+    for d in depths:
+        if best_s is None or spans[d] < best_s - 1e-15:
+            best_d, best_s = d, spans[d]
+    return best_d, best_s
 
 
 def cb_candidates(domain_bytes: float, stripe_bytes: float, *,
@@ -306,6 +404,37 @@ def optimal_cb(w: Workload, m: Machine = Machine(),
 
     best = min(candidates, key=lambda cb: cost(cb).total)
     return best, cost(best)
+
+
+def optimal_cb_and_depth(w: Workload, m: Machine = Machine(),
+                         P_L: int | None = None,
+                         candidates: tuple[int, ...] | None = None,
+                         depths: tuple[int, ...] = (1, 2, 3, 4),
+                         min_cb_bytes: int = 1,
+                         max_cb_bytes: int | None = None
+                         ) -> tuple[int, int, float]:
+    """Jointly pick (cb_bytes, pipeline depth): for every legal cb the
+    best ring depth's exact :func:`pipeline_span` replaces the serial
+    ``inter_comm + io`` round phases, and the (cb, depth) pair with the
+    smallest resulting total wins. This is what ``pipeline_depth="auto"``
+    resolves through at plan time. Returns
+    ``(cb_bytes, depth, total_seconds)``."""
+    if candidates is None:
+        candidates = cb_candidates(w.total_bytes / w.P_G, w.stripe_size,
+                                   min_cb_bytes=min_cb_bytes,
+                                   max_cb_bytes=max_cb_bytes)
+    best: tuple[float, int, int] | None = None
+    for cb in candidates:
+        wc = with_measured_rounds(w, rounds_for_cb(w, cb))
+        cost = tam_cost(wc, P_L, m) if P_L is not None else \
+            twophase_cost(wc, m)
+        fixed = (cost.intra_comm + cost.intra_sort + cost.intra_memcpy
+                 + cost.inter_req_proc + cost.inter_sort)
+        d, span = optimal_depth(wc, m, P_L=P_L, depths=depths)
+        total = fixed + span
+        if best is None or total < best[0] - 1e-15:
+            best = (total, cb, d)
+    return best[1], best[2], best[0]
 
 
 def receives_per_global_aggregator(w: Workload, P_L: int | None) -> float:

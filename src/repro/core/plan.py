@@ -1,0 +1,331 @@
+"""Unified collective-I/O plan IR (the schedule, compiled once).
+
+The paper's contribution is a *schedule*: which requests move on which
+hop, in which round, bounded by the collective buffer. Before this
+module, four entry points (``core.twophase``, ``core.tam``,
+``core.rounds``, ``checkpoint.host_io``) each re-derived domain
+partitioning, stripe splitting, window math, and round accounting —
+every new capability had to be built 2-4 times. Following ROMIO's split
+of access-pattern analysis from data movement (Thakur et al.) and the
+intra/inter-node layering of the source paper, the schedule is now
+compiled ONCE into an explicit, immutable :class:`IOPlan` and executed
+by interchangeable backends:
+
+* the **SPMD executor** (``core.spmd_exec``) — shard_map + the
+  depth-k round ring of ``core.rounds``;
+* the **host executor** (``checkpoint.host_exec``) — numpy data
+  movement + modeled alpha-beta timing + drain threads.
+
+``make_twophase_*`` / ``make_tam_*`` / ``HostCollectiveIO`` keep their
+signatures as thin wrappers over plan + execute. See ARCHITECTURE.md
+for the layer diagram and how to add a backend or a per-round
+transform (e.g. the future slow-hop compression hook).
+
+What the IR captures
+--------------------
+* **File-domain assignment** — ``layout`` + ``n_aggregators``:
+  aggregator g owns domain ``[g * domain_len, (g+1) * domain_len)`` of
+  the (possibly striped) file.
+* **Round schedule** — ``cb`` elements per aggregator per round,
+  ``n_rounds = domain_len / cb`` (:class:`RoundScheduler`, which lives
+  here now). The single-shot exchange is the degenerate 1-round plan
+  (``cb == domain_len``) — there is no separate single-shot code path
+  anymore.
+* **Aggregation topology** — ``method``: ``"twophase"`` (flat
+  all-to-many) or ``"tam"`` (two-stage intra/inter-node); ``"auto"``
+  resolves via the cost model at plan time.
+* **Direction** — ``"write"`` or ``"read"``.
+* **Pipeline depth** — ``pipeline_depth`` in-flight cb windows
+  (1 = serial, 2 = double buffer, k = ring); ``"auto"`` resolves
+  jointly with cb via ``cost_model.optimal_cb_and_depth``.
+* **Static capacities** — per-rank request/payload capacities the SPMD
+  backend needs for fixed shapes (the host backend, being numpy, reads
+  them as documentation only).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+from repro.core.domains import FileLayout
+from repro.core.requests import ELEM_BYTES
+
+
+@dataclass(frozen=True)
+class IOConfig:
+    """Static capacities + schedule knobs for the collective-I/O paths.
+
+    req_cap:        per-rank request-list capacity.
+    data_cap:       per-rank payload capacity (elements).
+    coalesce_cap:   post-coalesce metadata capacity forwarded by a local
+                    aggregator (TAM stage 2). Patterns that coalesce well
+                    (BTIO/S3D-like) allow coalesce_cap << lmem * req_cap —
+                    that is TAM's inter-node metadata saving.
+    cb_buffer_size: aggregator collective-buffer elements per round
+                    (ROMIO's romio_cb_buffer_size). ``None`` = one round
+                    covering the whole domain (the single-shot
+                    schedule); ``"auto"`` lets ``cost_model.optimal_cb``
+                    pick the size minimizing the modeled (pipelined)
+                    total at plan time.
+    pipeline:       pipeline the round loop — round t+1's exchange
+                    overlaps round t's window drain (byte-identical;
+                    see ``repro.core.rounds``).
+    pipeline_depth: in-flight cb windows when ``pipeline`` is set
+                    (ignored otherwise): 2 = the classic double buffer,
+                    k = a depth-k ring holding k windows at k x the
+                    window memory; ``"auto"`` picks depth jointly with
+                    cb via ``cost_model.optimal_cb_and_depth``.
+    axis_names:     (node, lagg, lmem) mesh-axis names.
+    """
+
+    req_cap: int
+    data_cap: int
+    coalesce_cap: int | None = None
+    cb_buffer_size: int | str | None = None
+    pipeline: bool = False
+    pipeline_depth: int | str = 2
+    axis_names: tuple[str, str, str] = ("node", "lagg", "lmem")
+
+
+@dataclass(frozen=True)
+class RoundScheduler:
+    """Static partition of each aggregator's file domain into rounds.
+
+    layout:         striped file layout (element units).
+    n_aggregators:  global aggregators (== slow-axis size in SPMD).
+    cb_buffer_size: collective-buffer elements per aggregator per round;
+                    ``None`` = one round == the single-shot behavior.
+    """
+
+    layout: FileLayout
+    n_aggregators: int
+    cb_buffer_size: int | None = None
+
+    def __post_init__(self):
+        if self.layout.file_len % self.n_aggregators:
+            raise ValueError("file_len must divide evenly among aggregators")
+        cb = self.cb
+        if self.domain_len % cb:
+            raise ValueError(
+                f"cb_buffer_size {cb} must divide domain_len "
+                f"{self.domain_len} (stripe-aligned rounds)")
+        s = self.layout.stripe_size
+        if cb % s and s % cb:
+            raise ValueError(
+                f"cb_buffer_size {cb} must align with stripe_size {s}")
+
+    @property
+    def domain_len(self) -> int:
+        return self.layout.file_len // self.n_aggregators
+
+    @property
+    def cb(self) -> int:
+        return (self.cb_buffer_size if self.cb_buffer_size is not None
+                else self.domain_len)
+
+    @property
+    def n_rounds(self) -> int:
+        return -(-self.domain_len // self.cb)
+
+    def max_spans(self, data_cap: int) -> int:
+        """Windows one request (length <= data_cap) can straddle."""
+        return data_cap // self.cb + 2
+
+    def window_of(self, offsets):
+        """Round in which an offset is exchanged (domain-local window)."""
+        return (offsets % self.domain_len) // self.cb
+
+
+@dataclass(frozen=True)
+class IOPlan:
+    """The compiled schedule of one collective-I/O operation.
+
+    Immutable and hashable: two entry points given the same workload
+    must compile the SAME plan (asserted by tests/test_plan.py), which
+    is what guarantees the SPMD and host executors run one schedule.
+
+    layout / n_aggregators: file-domain assignment (aggregator g owns
+        the contiguous domain-local span of its stripes).
+    cb / n_rounds: the round window schedule; ``cb == domain_len`` is
+        the single-shot (1-round) schedule.
+    method: "twophase" | "tam" (resolved — never "auto" here).
+    direction: "write" | "read".
+    pipeline_depth: resolved in-flight window count (1 = serial).
+    req_cap / data_cap / coalesce_cap: static capacities for the SPMD
+        backend; advisory for the host backend (numpy is dynamic).
+    tam_read_fallback: True when method == "tam" and direction ==
+        "read": under SPMD every rank participates in every collective
+        hop, so a TAM read lowers to the same slow-axis window
+        broadcast as the two-phase read — the plan records the fallback
+        EXPLICITLY instead of silently aliasing (``make_tam_read``
+        asserts it; see that docstring for why the paths coincide).
+    """
+
+    layout: FileLayout
+    n_aggregators: int
+    cb: int
+    n_rounds: int
+    method: str
+    direction: str
+    pipeline_depth: int
+    req_cap: int
+    data_cap: int
+    coalesce_cap: int | None
+    axis_names: tuple[str, str, str]
+    tam_read_fallback: bool = False
+
+    @property
+    def domain_len(self) -> int:
+        return self.layout.file_len // self.n_aggregators
+
+    @property
+    def in_flight_windows(self) -> int:
+        """Window buffers live at once (the k x memory price)."""
+        return max(1, min(self.pipeline_depth, self.n_rounds))
+
+    def scheduler(self) -> RoundScheduler:
+        return RoundScheduler(self.layout, self.n_aggregators, self.cb)
+
+
+def _default_workload(layout: FileLayout, cfg: IOConfig, n_aggregators: int,
+                      n_nodes: int, n_ranks: int, unit_bytes: int):
+    """Cost-model Workload for plan-time auto resolution when the caller
+    did not supply a measured one (mirrors the PR-2 ``"auto"`` cb
+    resolution: byte units, k = req_cap, coalesce ratio from the
+    configured coalesce capacity)."""
+    from repro.core import cost_model as cm
+    s = max(layout.stripe_size, 1)
+    coalesce_ratio = 1.0
+    if cfg.coalesce_cap and cfg.req_cap:
+        # one local aggregator coalesces its whole group's request
+        # lists (~n_ranks/n_nodes of them) down to <= coalesce_cap, so
+        # the modeled k'/k accounts for the per-LA fan-in, not just one
+        # rank's list
+        group = max(n_ranks // max(n_nodes, 1), 1)
+        coalesce_ratio = min(1.0,
+                             cfg.coalesce_cap / (group * cfg.req_cap))
+    return cm.Workload(
+        P=n_ranks, nodes=n_nodes, P_G=n_aggregators,
+        k=float(max(cfg.req_cap, 1)),
+        total_bytes=float(max(layout.file_len, 1) * unit_bytes),
+        stripe_size=float(s * unit_bytes),
+        coalesce_ratio=coalesce_ratio,
+        overlap=1.0 if cfg.pipeline else 0.0)
+
+
+def resolve_method(workload, machine=None) -> str:
+    """``method="auto"``: pick two-phase vs TAM for a workload by the
+    modeled totals (``tam_cost`` at the optimal P_L vs
+    ``twophase_cost``). Shared by :func:`compile_plan` and the host
+    planner so the choice cannot drift between entry points."""
+    from repro.core import cost_model as cm
+    machine = machine or cm.Machine()
+    tam_best = cm.optimal_PL(workload, machine)[1]
+    return ("tam" if tam_best.total < cm.twophase_cost(workload,
+                                                       machine).total
+            else "twophase")
+
+
+def _legal_cb_candidates(domain_len: int, stripe: int, unit_bytes: int):
+    """RoundScheduler-legal cb sizes in BYTES for the autotuner."""
+    from repro.core import cost_model as cm
+    cands = tuple(c for c in cm.cb_candidates(domain_len, stripe)
+                  if domain_len % c == 0 and (c % stripe == 0
+                                              or stripe % c == 0))
+    cands = cands or (domain_len,)
+    return tuple(c * unit_bytes for c in cands)
+
+
+def compile_plan(layout: FileLayout, cfg: IOConfig, *,
+                 n_aggregators: int, n_nodes: int, n_ranks: int,
+                 method: str = "twophase", direction: str = "write",
+                 machine=None, workload=None,
+                 unit_bytes: int = ELEM_BYTES) -> IOPlan:
+    """Compile one collective-I/O schedule into an :class:`IOPlan`.
+
+    This is THE planner: both executors' entry points
+    (``twophase.plan_for`` / ``tam`` wrappers and
+    ``HostCollectiveIO.plan_for``) route through it, so all domain /
+    stripe / window / round derivation lives here and nowhere else.
+
+    layout:        striped file layout. Units are the caller's (elements
+                   on the SPMD side, bytes on the host side) — the plan
+                   is unit-agnostic; ``unit_bytes`` converts to bytes
+                   only where the cost model needs absolute sizes.
+    n_aggregators: global aggregators (slow-axis size for SPMD,
+                   stripe_count for the host path).
+    method:        "twophase" | "tam" | "auto" — auto compares the
+                   modeled totals (``tam_cost`` at the optimal P_L vs
+                   ``twophase_cost``) for the workload and picks.
+    workload:      optional measured ``cost_model.Workload`` driving
+                   the auto resolutions; derived from cfg + layout when
+                   absent.
+    machine:       optional ``cost_model.Machine`` calibration.
+
+    Raises ``ValueError`` for schedules violating the round-partition
+    invariants (uneven domains, non-aligned cb) — compile time, not run
+    time, is where a bad schedule should die.
+    """
+    from repro.core import cost_model as cm
+    if direction not in ("write", "read"):
+        raise ValueError(f"unknown direction {direction!r}")
+    if layout.file_len % n_aggregators:
+        raise ValueError("file_len must divide evenly among aggregators")
+    domain_len = layout.file_len // n_aggregators
+    machine = machine or cm.Machine()
+    w = workload if workload is not None else _default_workload(
+        layout, cfg, n_aggregators, n_nodes, n_ranks, unit_bytes)
+
+    # ---- aggregation topology -----------------------------------------
+    if method == "auto":
+        method = resolve_method(w, machine)
+    if method not in ("twophase", "tam"):
+        raise ValueError(f"unknown method {method!r}")
+    tam_read_fallback = method == "tam" and direction == "read"
+
+    # ---- round window schedule + pipeline depth -----------------------
+    cb = cfg.cb_buffer_size
+    depth: int | str = cfg.pipeline_depth if cfg.pipeline else 1
+    P_L_arg = None
+    if method == "tam":
+        P_L_arg, _ = cm.optimal_PL(w, machine)
+    if cb == "auto" or depth == "auto":
+        cands = _legal_cb_candidates(domain_len, layout.stripe_size,
+                                     unit_bytes)
+        if cb == "auto" and depth == "auto":
+            cb_bytes, depth, _ = cm.optimal_cb_and_depth(
+                w, machine, P_L=P_L_arg, candidates=cands)
+            cb = cb_bytes // unit_bytes
+        elif cb == "auto":
+            cb_bytes, _ = cm.optimal_cb(w, machine, P_L=P_L_arg,
+                                        candidates=cands)
+            cb = cb_bytes // unit_bytes
+        else:  # depth == "auto" at a fixed cb
+            wc = cm.with_measured_rounds(
+                w, cm.rounds_for_cb(w, (cb if cb is not None
+                                        else domain_len) * unit_bytes))
+            depth, _ = cm.optimal_depth(wc, machine, P_L=P_L_arg)
+    if cb is None:
+        cb = domain_len            # single shot == the 1-round schedule
+    depth = max(1, int(depth))
+
+    sched = RoundScheduler(layout, n_aggregators, cb)   # validates
+    return IOPlan(
+        layout=layout, n_aggregators=n_aggregators, cb=sched.cb,
+        n_rounds=sched.n_rounds, method=method, direction=direction,
+        pipeline_depth=depth, req_cap=cfg.req_cap, data_cap=cfg.data_cap,
+        coalesce_cap=cfg.coalesce_cap, axis_names=cfg.axis_names,
+        tam_read_fallback=tam_read_fallback)
+
+
+def resolve_cb_buffer_size(layout: FileLayout, n_nodes: int, n_ranks: int,
+                           cfg: IOConfig, machine=None) -> IOConfig:
+    """Resolve ``cb_buffer_size == "auto"`` to concrete elements.
+
+    Kept as the public PR-2 entry point; it is now a thin view over
+    :func:`compile_plan`'s cb resolution (one aggregator per node)."""
+    if cfg.cb_buffer_size != "auto":
+        return cfg
+    plan = compile_plan(layout, cfg, n_aggregators=n_nodes,
+                        n_nodes=n_nodes, n_ranks=n_ranks,
+                        machine=machine)
+    return replace(cfg, cb_buffer_size=plan.cb)

@@ -45,37 +45,44 @@ number of participating ranks (see
 The same mesh can drive arbitrarily large files by holding
 ``cb_buffer_size`` fixed while rounds grow.
 
-The pipeline (``pipeline=True``)
---------------------------------
+The depth-k pipeline ring (``depth`` / ``pipeline=True``)
+---------------------------------------------------------
 The serial loop pays ``exchange + drain`` per round. The pipelined loop
-is a classic software pipeline over TWO in-flight window buffers:
+is a software pipeline over a RING of ``depth`` in-flight window
+buffers (``depth=2`` is the classic double buffer; the ``pipeline``
+bool remains as sugar for depth 2):
 
-* **prologue** — round 0 is exchanged into buffer A; nothing drains.
-* **steady state** — iteration ``t`` (1..n_rounds-1) exchanges round
-  ``t`` into the free buffer while DRAINING the carried buffer from
-  round ``t-1`` (flatten → sort → pack → masked pmax merge →
-  accumulate). The two halves share no data, so XLA is free to run the
-  slow-axis ``all_to_all`` concurrently with the local merge — each
-  steady-state round costs ``max(comm, drain)`` instead of their sum
-  (the host path's ``IOTimings`` measures exactly this, and
-  ``cost_model.Workload.overlap`` models it).
-* **epilogue** — the last carried buffer (round n_rounds-1) drains;
-  nothing is exchanged.
+* **prologue** — rounds ``0..depth-2`` are exchanged into the ring
+  (statically unrolled); nothing drains.
+* **steady state** — iteration ``t`` (depth-1..n_rounds-1) exchanges
+  round ``t`` into the freed buffer while DRAINING the OLDEST carried
+  window, round ``t-(depth-1)`` (flatten → sort → pack → masked pmax
+  merge → accumulate). The two halves share no data, so XLA is free to
+  run the slow-axis ``all_to_all`` concurrently with the local merge —
+  each steady-state round costs ``max(comm, drain)`` instead of their
+  sum, and with k > 2 the ring absorbs a multi-round incast spike: up
+  to k-1 exchanged windows can queue while one slow drain (or k-1
+  drains while one slow exchange) catches up
+  (``cost_model.pipeline_span`` is the exact makespan recurrence).
+* **epilogue** — the last ``depth-1`` carried windows drain; nothing
+  is exchanged.
 
-Buffer ownership: the exchanged-but-undrained window (the ``rx`` tuple
-of post-``all_to_all`` buckets) is the loop carry — buffer A; the
-buffer being refilled by the current exchange is buffer B. They swap
-roles every iteration, so exactly two ``n_nodes * min(data_cap, cb)``
-receive images are ever live (``peak_aggregator_buffer_elems`` with
-``pipeline=True``).
+Buffer ownership: the exchanged-but-undrained windows (``rx`` tuples
+of post-``all_to_all`` buckets) are the loop carry — a ring of
+``depth-1`` tuples rotated each iteration, plus the buffer the current
+exchange refills, so exactly ``min(depth, n_rounds)``
+``n_nodes * min(data_cap, cb)`` receive images are ever live — the
+k x window memory price (``peak_aggregator_buffer_elems`` with
+``pipeline_depth=k``). Depth clamps to the round count.
 
-Byte-identity: the pipeline only re-associates WHEN each round's drain
+Byte-identity: the ring only re-associates WHEN each round's drain
 runs, not WHAT it drains — every round's received buckets pass through
 the identical drain (same sort, same pack base ``t * cb``, same pmax
 merge) exactly once, and rounds still accumulate into disjoint
 ``[t*cb, (t+1)*cb)`` slices of the domain buffer, so the result is
-bit-identical to the serial loop (asserted by
-``repro/testing/rounds_checks.py`` for round counts {1, 2, 5}).
+bit-identical to the serial loop for EVERY depth (asserted by
+``repro/testing/rounds_checks.py`` for depths {1, 2, 3, 4} x round
+counts {1, 2, 5}).
 
 Round-aware TAM stage 1
 -----------------------
@@ -108,7 +115,6 @@ balancing incast latency, memory, and round count.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from functools import partial
 
 import jax
@@ -116,59 +122,20 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import coalesce as co
-from repro.core.domains import FileLayout
 from repro.core.exchange import (bucket_by_dest, flatten_buckets,
                                  repack_sorted, sort_with)
+# RoundScheduler folded into the plan IR (PR 3); re-exported here so
+# ``from repro.core.rounds import RoundScheduler`` keeps working.
+from repro.core.plan import RoundScheduler  # noqa: F401
 from repro.core.requests import PAD_OFFSET, RequestList, split_at_stripes
 
 
-@dataclass(frozen=True)
-class RoundScheduler:
-    """Static partition of each aggregator's file domain into rounds.
-
-    layout:         striped file layout (element units).
-    n_aggregators:  global aggregators (== slow-axis size in SPMD).
-    cb_buffer_size: collective-buffer elements per aggregator per round;
-                    ``None`` = one round == the single-shot behavior.
-    """
-
-    layout: FileLayout
-    n_aggregators: int
-    cb_buffer_size: int | None = None
-
-    def __post_init__(self):
-        if self.layout.file_len % self.n_aggregators:
-            raise ValueError("file_len must divide evenly among aggregators")
-        cb = self.cb
-        if self.domain_len % cb:
-            raise ValueError(
-                f"cb_buffer_size {cb} must divide domain_len "
-                f"{self.domain_len} (stripe-aligned rounds)")
-        s = self.layout.stripe_size
-        if cb % s and s % cb:
-            raise ValueError(
-                f"cb_buffer_size {cb} must align with stripe_size {s}")
-
-    @property
-    def domain_len(self) -> int:
-        return self.layout.file_len // self.n_aggregators
-
-    @property
-    def cb(self) -> int:
-        return (self.cb_buffer_size if self.cb_buffer_size is not None
-                else self.domain_len)
-
-    @property
-    def n_rounds(self) -> int:
-        return -(-self.domain_len // self.cb)
-
-    def max_spans(self, data_cap: int) -> int:
-        """Windows one request (length <= data_cap) can straddle."""
-        return data_cap // self.cb + 2
-
-    def window_of(self, offsets: jax.Array) -> jax.Array:
-        """Round in which an offset is exchanged (domain-local window)."""
-        return (offsets % self.domain_len) // self.cb
+def _effective_depth(pipeline: bool, depth: int | None) -> int:
+    """Resolve the (pipeline, depth) sugar: an explicit ``depth`` wins;
+    the ``pipeline`` bool alone means the classic double buffer."""
+    if depth is not None:
+        return max(1, int(depth))
+    return 2 if pipeline else 1
 
 
 def _compact_active(r: RequestList, starts: jax.Array, dest: jax.Array,
@@ -212,15 +179,19 @@ def _make_drain(base0, cb: int, merge_axes: tuple[str, ...], dtype):
 
 
 def _run_rounds(n_rounds: int, domain_len: int, dtype, exchange, drain,
-                n_ex_stats: int, n_dr_stats: int, pipeline: bool):
-    """Drive the round loop, serial or software-pipelined.
+                n_ex_stats: int, n_dr_stats: int, depth: int):
+    """Drive the round loop: serial (depth 1) or a depth-k window ring.
 
     ``exchange(t) -> (rx, ex_stats)`` produces round t's received
     buckets; ``drain(t, buf, rx) -> (buf, dr_stats)`` merges them into
     the domain buffer. Stats tuples are accumulated elementwise.
-    Pipelined: prologue exchanges round 0; steady-state iteration t
-    exchanges round t while draining round t-1 (the carried ``rx`` is
-    the second in-flight window buffer); epilogue drains the last round.
+    Ring schedule (depth k, clamped to the round count): the prologue
+    exchanges rounds 0..k-2 into the ring (statically unrolled); the
+    steady-state iteration t exchanges round t while draining the
+    oldest carried window, round t-(k-1); the epilogue drains the
+    remaining k-1 windows. Every round is drained exactly once, in
+    order, through the identical drain — byte-identical to serial for
+    every k.
     """
     zeros = tuple(jnp.int32(0) for _ in range(n_ex_stats + n_dr_stats))
 
@@ -229,7 +200,8 @@ def _run_rounds(n_rounds: int, domain_len: int, dtype, exchange, drain,
                                            delta))
 
     buf0 = jnp.zeros((domain_len,), dtype)
-    if not pipeline:
+    d = max(1, min(depth, n_rounds))
+    if d == 1:
         def body(t, carry):
             buf, acc = carry
             rx, ex = exchange(t)
@@ -239,36 +211,42 @@ def _run_rounds(n_rounds: int, domain_len: int, dtype, exchange, drain,
         buf, acc = lax.fori_loop(0, n_rounds, body, (buf0, zeros))
         return buf, acc[:n_ex_stats], acc[n_ex_stats:]
 
-    rx0, ex0 = exchange(0)                       # prologue: fill buffer A
+    ring: list = []                              # prologue: fill the ring
+    acc = zeros
+    for i in range(d - 1):
+        rx, ex = exchange(i)
+        ring.append(rx)
+        acc = add(acc, ex, 0) + acc[n_ex_stats:]
 
     def body(t, carry):
-        buf, rx_prev, acc = carry
-        rx_next, ex = exchange(t)                # refill the free buffer …
-        buf, dr = drain(t - 1, buf, rx_prev)     # … while draining t-1
-        return buf, rx_next, add(acc, ex, 0) + add(acc, dr, n_ex_stats)
+        buf, ring, acc = carry
+        rx_new, ex = exchange(t)                 # refill the freed buffer …
+        buf, dr = drain(t - (d - 1), buf, ring[0])   # … drain the oldest
+        ring = ring[1:] + (rx_new,)
+        return buf, ring, add(acc, ex, 0) + add(acc, dr, n_ex_stats)
 
-    init_acc = ex0 + tuple(jnp.int32(0) for _ in range(n_dr_stats))
-    buf, rx_last, acc = lax.fori_loop(1, n_rounds, body,
-                                      (buf0, rx0, init_acc))
-    buf, dr = drain(n_rounds - 1, buf, rx_last)  # epilogue: last drain
-    acc = acc[:n_ex_stats] + tuple(
-        a + d for a, d in zip(acc[n_ex_stats:], dr))
+    buf, ring, acc = lax.fori_loop(d - 1, n_rounds, body,
+                                   (buf0, tuple(ring), acc))
+    for j in range(d - 1):                       # epilogue: drain the ring
+        buf, dr = drain(n_rounds - (d - 1) + j, buf, ring[j])
+        acc = acc[:n_ex_stats] + add(acc, dr, n_ex_stats)
     return buf, acc[:n_ex_stats], acc[n_ex_stats:]
 
 
 def exchange_rounds_write(sched: RoundScheduler, node_axis: str,
                           merge_axes: tuple[str, ...], r: RequestList,
                           starts: jax.Array, data: jax.Array,
-                          pipeline: bool = False):
+                          pipeline: bool = False,
+                          depth: int | None = None):
     """Round loop of the collective write (runs inside a shard_map body).
 
     r/starts/data: this sender's offset-sorted requests, the payload
     start of each request inside ``data``, and the packed payload.
-    ``pipeline=True`` double-buffers: round t+1's exchange overlaps
-    round t's drain (byte-identical to the serial loop — see the module
-    docstring). Returns (domain shard [domain_len], stats dict);
-    ``requests_at_ga`` is already summed over ``merge_axes`` (replicated
-    at the node).
+    ``depth=k`` runs the depth-k window ring (k in-flight windows;
+    byte-identical to the serial loop for every k — see the module
+    docstring); ``pipeline=True`` is sugar for depth 2. Returns
+    (domain shard [domain_len], stats dict); ``requests_at_ga`` is
+    already summed over ``merge_axes`` (replicated at the node).
     """
     n_dest, cb, dl = sched.n_aggregators, sched.cb, sched.domain_len
     data_cap = data.shape[0]
@@ -294,7 +272,8 @@ def exchange_rounds_write(sched: RoundScheduler, node_axis: str,
 
     drain = _make_drain(base0, cb, merge_axes, data.dtype)
     buf, (drop_r, drop_e), (reqs_rx,) = _run_rounds(
-        sched.n_rounds, dl, data.dtype, exchange, drain, 2, 1, pipeline)
+        sched.n_rounds, dl, data.dtype, exchange, drain, 2, 1,
+        _effective_depth(pipeline, depth))
     return buf, {
         "dropped_requests": drop_r,
         "dropped_elems": drop_e,
@@ -308,7 +287,8 @@ def exchange_rounds_write_tam(sched: RoundScheduler, node_axis: str,
                               data: jax.Array,
                               coalesce_cap: int | None = None,
                               use_kernels: bool = False,
-                              pipeline: bool = False):
+                              pipeline: bool = False,
+                              depth: int | None = None):
     """Fused TAM round loop: BOTH aggregation layers run per window.
 
     Per round t, stage 1 gathers only the window's requests over
@@ -317,8 +297,9 @@ def exchange_rounds_write_tam(sched: RoundScheduler, node_axis: str,
     stage 2 exchanges the coalesced window over ``node_axis`` with the
     pmax merge over ``lagg_axis`` — so local-aggregator memory is
     O(cb) too, not just the global aggregator's (ROADMAP item).
-    ``pipeline=True`` overlaps round t+1's two-layer exchange with
-    round t's drain, as in :func:`exchange_rounds_write`.
+    ``depth=k`` / ``pipeline=True`` overlap each round's two-layer
+    exchange with older rounds' drains through the depth-k window
+    ring, as in :func:`exchange_rounds_write`.
 
     Returns (domain shard, stats). ``*_rank`` drop stats are per-rank
     (pre-gather — psum over all axes); ``*_agg`` drops and the
@@ -388,7 +369,8 @@ def exchange_rounds_write_tam(sched: RoundScheduler, node_axis: str,
 
     drain = _make_drain(base0, cb, (lagg_axis,), data.dtype)
     buf, ex_acc, dr_acc = _run_rounds(
-        sched.n_rounds, dl, data.dtype, exchange, drain, 6, 1, pipeline)
+        sched.n_rounds, dl, data.dtype, exchange, drain, 6, 1,
+        _effective_depth(pipeline, depth))
     (drop_rank_r, drop_rank_e, drop_agg_r, drop_agg_e,
      n_before, n_after) = ex_acc
     return buf, {
@@ -405,13 +387,14 @@ def exchange_rounds_write_tam(sched: RoundScheduler, node_axis: str,
 def exchange_rounds_read(sched: RoundScheduler, node_axis: str,
                          r: RequestList, starts: jax.Array,
                          file_shard: jax.Array, data_cap: int,
-                         pipeline: bool = False) -> jax.Array:
+                         pipeline: bool = False,
+                         depth: int | None = None) -> jax.Array:
     """Round loop of the collective read: per round, aggregators
     broadcast one ``cb``-sized window over the slow axis and every rank
     gathers the elements of its requests falling in that window. Peak
     per-rank buffering is ``n_nodes * cb`` instead of ``file_len``.
-    ``pipeline=True`` double-buffers: window t+1's broadcast overlaps
-    the scatter of window t's elements into the output.
+    ``depth=k`` / ``pipeline=True`` run the window ring: the broadcast
+    of window t overlaps the scatters of the k-1 carried older windows.
     """
     n_dest, cb, dl = sched.n_aggregators, sched.cb, sched.domain_len
     cap = r.capacity
@@ -434,45 +417,53 @@ def exchange_rounds_read(sched: RoundScheduler, node_axis: str,
         return jnp.where(active, vals, out)
 
     out0 = jnp.zeros((data_cap,), file_shard.dtype)
-    if not pipeline:
+    d = max(1, min(_effective_depth(pipeline, depth), sched.n_rounds))
+    if d == 1:
         return lax.fori_loop(
             0, sched.n_rounds,
             lambda t, out: scatter(t, out, fetch(t)), out0)
 
-    allw0 = fetch(0)                             # prologue
+    ring = tuple(fetch(i) for i in range(d - 1))    # prologue
 
     def body(t, carry):
-        out, prev = carry
+        out, ring = carry
         nxt = fetch(t)                           # broadcast window t …
-        return scatter(t - 1, out, prev), nxt    # … while placing t-1
+        out = scatter(t - (d - 1), out, ring[0])    # … place the oldest
+        return out, ring[1:] + (nxt,)
 
-    out, last = lax.fori_loop(1, sched.n_rounds, body, (out0, allw0))
-    return scatter(sched.n_rounds - 1, out, last)   # epilogue
+    out, ring = lax.fori_loop(d - 1, sched.n_rounds, body, (out0, ring))
+    for j in range(d - 1):                       # epilogue
+        out = scatter(sched.n_rounds - (d - 1) + j, out, ring[j])
+    return out
 
 
 def peak_aggregator_buffer_elems(data_cap: int, n_nodes: int,
                                  ranks_per_node: int, domain_len: int,
                                  cb_buffer_size: int | None,
-                                 pipeline: bool = False) -> dict:
+                                 pipeline: bool = False,
+                                 pipeline_depth: int | None = None) -> dict:
     """Static receive-side buffer sizes (elements) of the write paths.
 
     ``single_shot`` is the flattened payload stack after the slow-axis
     all_to_all plus the intra-node gather — linear in the participating
     rank count. ``rounds`` is the a2a slice plus one window image —
     independent of ``ranks_per_node`` (the acceptance criterion); with
-    ``pipeline=True`` TWO a2a window buffers are in flight (the price of
-    the overlap — the loop carry holds the previous round's received
-    buckets while the current exchange fills the next).
+    ``pipeline_depth=k`` (``pipeline=True`` is sugar for k=2) k a2a
+    window buffers are in flight — the k x window memory price of the
+    ring: the loop carry holds the k-1 oldest undrained rounds'
+    received buckets while the current exchange fills the k-th (the
+    depth clamps to the round count at run time; this static bound
+    charges the configured k).
     ``tam_stage1_*`` are the local aggregator's intra-node gather
     buffers: the fused round loop (:func:`exchange_rounds_write_tam`)
     bounds the per-rank contribution at ``min(data_cap, cb)`` instead
-    of ``data_cap``. Stage 1 is NOT doubled by the pipeline: the gather
-    is produced and consumed inside one exchange step, so only one is
-    ever live — only the post-``all_to_all`` carry doubles.
+    of ``data_cap``. Stage 1 is NOT multiplied by the ring depth: the
+    gather is produced and consumed inside one exchange step, so only
+    one is ever live — only the post-``all_to_all`` carry rings.
     """
     single = n_nodes * ranks_per_node * data_cap + domain_len
     cb = cb_buffer_size if cb_buffer_size is not None else domain_len
-    in_flight = 2 if pipeline else 1
+    in_flight = _effective_depth(pipeline, pipeline_depth)
     rounds = n_nodes * min(data_cap, cb) * in_flight + cb + domain_len
     return {
         "single_shot": single,

@@ -19,6 +19,13 @@ Collective write in three steps:
 Two-phase I/O is the degenerate configuration lmem == 1 and
 coalesce_cap == req_cap (P_L == P): stage 1 becomes the identity.
 
+Since the plan/executor split (ARCHITECTURE.md) this module is a thin
+wrapper: the builders compile an :class:`~repro.core.plan.IOPlan` with
+``method="tam"`` and hand it to the SPMD executor, whose fused round
+loop (``rounds.exchange_rounds_write_tam``) runs BOTH aggregation
+layers inside each cb window — local-aggregator memory is O(cb), and
+the single-shot exchange is just the 1-round plan.
+
 SPMD note: every ``lmem`` slot redundantly executes stage 2 on replicated
 aggregates (SPMD has no "idle rank"); the HLO slow-axis collective is
 still the coalesced size, which is what the roofline reads. The
@@ -26,141 +33,11 @@ host-level path models the true per-endpoint congestion.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
-import jax.numpy as jnp
-from jax import lax
-from jax.sharding import PartitionSpec as P
 
-from repro.compat import axis_size, shard_map
-from repro.core import coalesce as co
-from repro.core import rounds
 from repro.core.domains import FileLayout
-from repro.core.exchange import bucket_by_dest, flatten_buckets, repack_sorted, sort_with
-from repro.core.requests import RequestList, mask_invalid, split_at_stripes
-from repro.core.twophase import IOConfig, resolve_cb_buffer_size
-
-
-def _intra_node_aggregate(cfg: IOConfig, r: RequestList, data: jax.Array,
-                          use_kernels: bool = False):
-    """Stage 1: gather over ``lmem``, merge-sort, coalesce, repack.
-
-    Returns (coalesced requests [coalesce_cap], repacked payload
-    [lmem * data_cap], pre/post request counts for stats).
-    """
-    _, _, lmem = cfg.axis_names
-    g = partial(lax.all_gather, axis_name=lmem, axis=0, tiled=False)
-    all_off, all_len, all_cnt, all_data = (g(r.offsets), g(r.lengths),
-                                           g(r.count), g(data))
-    m = all_off.shape[0]
-    merged, starts_m, data_flat = flatten_buckets(
-        all_off, all_len, all_cnt, all_data)
-    if use_kernels:
-        from repro.kernels import ops as kops
-        sorted_r, starts_s = kops.sort_requests_with(merged, starts_m)
-        packed = repack_sorted(sorted_r, starts_s, data_flat,
-                               m * cfg.data_cap)
-        coalesced = kops.coalesce(sorted_r)
-    else:
-        sorted_r, starts_s = sort_with(merged, starts_m)
-        packed = repack_sorted(sorted_r, starts_s, data_flat,
-                               m * cfg.data_cap)
-        coalesced = co.coalesce_sorted(sorted_r)
-    cap = cfg.coalesce_cap or coalesced.capacity
-    out = RequestList(coalesced.offsets[:cap], coalesced.lengths[:cap],
-                      jnp.minimum(coalesced.count, cap))
-    dropped = jnp.maximum(coalesced.count - cap, 0)
-    return out, packed, merged.count, out.count, dropped
-
-
-def _tam_write_shard_fn(layout: FileLayout, cfg: IOConfig, n_nodes: int,
-                        use_kernels: bool,
-                        offsets, lengths, count, data):
-    node, lagg, lmem = cfg.axis_names
-    r = mask_invalid(RequestList(offsets.reshape(-1), lengths.reshape(-1),
-                                 count.reshape(())))
-    data = data.reshape(-1)
-
-    if cfg.cb_buffer_size is not None:
-        # fused round loop: BOTH layers are window-bounded — stage 1
-        # gathers only min(data_cap, cb) payload per rank per round, so
-        # local-aggregator memory is O(cb) too (see
-        # rounds.exchange_rounds_write_tam). Post-gather state is
-        # replicated across lmem, so the window merge and receive stats
-        # run over lagg only (the pmax combine is idempotent under that
-        # replication) and replicated stats divide by the lmem size.
-        starts = co.request_starts(r)
-        sched = rounds.RoundScheduler(layout, n_nodes, cfg.cb_buffer_size)
-        shard, st = rounds.exchange_rounds_write_tam(
-            sched, node, lagg, lmem, r, starts, data,
-            coalesce_cap=cfg.coalesce_cap, use_kernels=use_kernels,
-            pipeline=cfg.pipeline)
-        lmem_size = axis_size(lmem)
-        all_axes = (node, lagg, lmem)
-        stats = {
-            "dropped_requests":
-                lax.psum(st["dropped_requests_rank"], all_axes)
-                + lax.psum(st["dropped_requests_agg"], all_axes)
-                // lmem_size,
-            "dropped_elems":
-                lax.psum(st["dropped_elems_rank"], all_axes)
-                + lax.psum(st["dropped_elems_agg"], all_axes)
-                // lmem_size,
-            "requests_before_coalesce": lax.psum(
-                st["requests_before_coalesce"], (node, lagg)) // lmem_size,
-            "requests_after_coalesce": lax.psum(
-                st["requests_after_coalesce"], (node, lagg)) // lmem_size,
-            "requests_at_ga": st["requests_at_ga"][None],
-        }
-        return shard[None], stats
-
-    # ---- stage 1: intra-node ----------------------------------------
-    agg_r, packed, n_before, n_after, drop_coal = _intra_node_aggregate(
-        cfg, r, data, use_kernels)
-
-    # ---- stage 2: inter-node (local aggregators only) ----------------
-    domain_len = layout.file_len // n_nodes
-    # coalescing may fuse runs across file-domain boundaries (and ranks
-    # may submit domain-spanning requests): split so each forwarded
-    # request has exactly one owning aggregator (they were silently
-    # truncated by the domain packing before)
-    agg_r = split_at_stripes(agg_r, domain_len,
-                             packed.shape[0] // domain_len + 2)
-    agg_starts = co.request_starts(agg_r)
-    dest = agg_r.offsets // domain_len
-    inter_data_cap = packed.shape[0]
-    buckets = bucket_by_dest(agg_r, agg_starts, packed, dest, n_nodes,
-                             agg_r.capacity, inter_data_cap)
-    a2a = partial(lax.all_to_all, axis_name=node, split_axis=0,
-                  concat_axis=0, tiled=True)
-    rx_off, rx_len, rx_data = (a2a(buckets.offsets), a2a(buckets.lengths),
-                               a2a(buckets.data))
-    rx_cnt = a2a(buckets.counts)
-
-    # global aggregator also hears the node's other local aggregators
-    g = partial(lax.all_gather, axis_name=lagg, axis=0, tiled=False)
-    all_off, all_len, all_cnt, all_data = (g(rx_off), g(rx_len), g(rx_cnt),
-                                           g(rx_data))
-
-    # ---- I/O step: identical to two-phase ----------------------------
-    merged, starts_m, data_flat = flatten_buckets(all_off, all_len,
-                                                  all_cnt, all_data)
-    sorted_r, starts_s = sort_with(merged, starts_m)
-    my_node = lax.axis_index(node)
-    shard = co.pack_data(sorted_r, starts_s, data_flat, domain_len,
-                         base=my_node * domain_len)
-    stats = {
-        "dropped_requests": lax.psum(
-            buckets.dropped_requests + drop_coal, (node, lagg, lmem)),
-        "dropped_elems": lax.psum(buckets.dropped_elems, (node, lagg, lmem)),
-        "requests_before_coalesce": lax.psum(n_before, (node, lagg)) //
-            axis_size(lmem),
-        "requests_after_coalesce": lax.psum(n_after, (node, lagg)) //
-            axis_size(lmem),
-        "requests_at_ga": sorted_r.count[None],
-    }
-    return shard[None], stats
+from repro.core.spmd_exec import make_spmd_executor
+from repro.core.twophase import IOConfig, plan_for
 
 
 def make_tam_write(mesh: jax.sharding.Mesh, layout: FileLayout,
@@ -168,72 +45,39 @@ def make_tam_write(mesh: jax.sharding.Mesh, layout: FileLayout,
     """Build the jit-able TAM collective write.
 
     Same signature as :func:`repro.core.twophase.make_twophase_write`;
-    P_L = mesh.shape[node] * mesh.shape[lagg] local aggregators. With
-    ``cfg.cb_buffer_size`` set, both aggregation layers run inside the
-    window loop (local-aggregator memory O(cb)); ``cfg.pipeline``
-    overlaps each round's two-layer exchange with the previous round's
-    drain; ``"auto"`` resolves the round size via
-    ``cost_model.optimal_cb``.
+    P_L = mesh.shape[node] * mesh.shape[lagg] local aggregators. Both
+    aggregation layers run inside the window loop (local-aggregator
+    memory O(cb)); ``cfg.pipeline`` runs the
+    depth-``cfg.pipeline_depth`` window ring over each round's
+    two-layer exchange; ``"auto"`` resolves the round size (and depth)
+    via the cost model at plan time.
     """
-    node, lagg, lmem = cfg.axis_names
-    n_nodes = mesh.shape[node]
-    if layout.file_len % n_nodes:
-        raise ValueError("file_len must divide evenly among aggregators")
-    cfg = resolve_cb_buffer_size(layout, n_nodes, mesh.size, cfg)
-    if cfg.cb_buffer_size is not None:  # validate the round partition now
-        rounds.RoundScheduler(layout, n_nodes, cfg.cb_buffer_size)
-    rank_spec = P((node, lagg, lmem))
-    fn = partial(_tam_write_shard_fn, layout, cfg, n_nodes, use_kernels)
-    return shard_map(
-        fn, mesh=mesh, check_vma=False,
-        in_specs=(rank_spec, rank_spec, rank_spec, rank_spec),
-        out_specs=(P(node), {"dropped_requests": P(),
-                             "dropped_elems": P(),
-                             "requests_before_coalesce": P(),
-                             "requests_after_coalesce": P(),
-                             "requests_at_ga": P(node)}),
-    )
+    node = cfg.axis_names[0]
+    plan = plan_for(layout, cfg, mesh.shape[node], mesh.size,
+                    method="tam")
+    return make_spmd_executor(mesh, plan, use_kernels=use_kernels)
 
 
 def make_tam_read(mesh: jax.sharding.Mesh, layout: FileLayout,
                   cfg: IOConfig):
-    """TAM collective read: reverse order.
+    """TAM collective read — an EXPLICIT alias of the two-phase read
+    schedule.
 
-    Global aggregators slice their domains per destination node
-    (all_to_all over ``node``), local aggregators reassemble the node's
-    span, ranks gather their own requests from the node-local image.
-    For simplicity the node-local image is the union span of the node's
-    requests bounded by per-node domain windows.
+    In MPI, TAM-read reverses the write: global aggregators send domain
+    slices to local aggregators (P_L/P_G slow-axis messages instead of
+    P/P_G), which redistribute within the node. Under SPMD there is no
+    idle rank: every rank participates in every collective hop, so the
+    slow-axis transfer lowers to the same one-window-per-round
+    broadcast either way and the two schedules are the same program —
+    the metadata/congestion saving TAM-read buys on real MPI endpoints
+    is modeled by the host path and ``cost_model``, not by HLO. The
+    plan records this as ``tam_read_fallback`` (asserted here and in
+    tests/test_plan.py) instead of silently falling back.
     """
-    node, lagg, lmem = cfg.axis_names
-    n_nodes = mesh.shape[node]
-    cfg = resolve_cb_buffer_size(layout, n_nodes, mesh.size, cfg)
-    domain_len = layout.file_len // n_nodes
-    rank_spec = P((node, lagg, lmem))
-
-    def fn(offsets, lengths, count, file_shard):
-        r = mask_invalid(RequestList(offsets.reshape(-1),
-                                     lengths.reshape(-1), count.reshape(())))
-        starts = co.request_starts(r)
-        if cfg.cb_buffer_size is not None:
-            # rounds bound the slow-axis broadcast at one window/round
-            sched = rounds.RoundScheduler(layout, n_nodes,
-                                          cfg.cb_buffer_size)
-            out = rounds.exchange_rounds_read(
-                sched, node, r, starts, file_shard.reshape(-1),
-                cfg.data_cap, pipeline=cfg.pipeline)
-            return out[None]
-        # stage 2 reversed: every node obtains the full file image only of
-        # the domains it needs; here we conservatively gather the file over
-        # the slow axis once per node (one receive per GA pair, P_L/P_G
-        # slow-axis messages as in TAM-read).
-        whole = lax.all_gather(file_shard.reshape(-1), node, axis=0,
-                               tiled=True)
-        # stage 1 reversed: node-local distribution from the local image.
-        return co.unpack_data(r, starts, whole, cfg.data_cap)[None]
-
-    return shard_map(
-        fn, mesh=mesh, check_vma=False,
-        in_specs=(rank_spec, rank_spec, rank_spec, P(node)),
-        out_specs=rank_spec,
-    )
+    node = cfg.axis_names[0]
+    plan = plan_for(layout, cfg, mesh.shape[node], mesh.size,
+                    method="tam", direction="read")
+    assert plan.tam_read_fallback, (
+        "TAM read compiles to the two-phase window broadcast under SPMD; "
+        "the plan must record the fallback explicitly")
+    return make_spmd_executor(mesh, plan)

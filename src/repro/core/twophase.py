@@ -5,6 +5,15 @@ directly to the global aggregator owning the destination file domain
 (all-to-many), aggregators merge-sort the received offset-length pairs
 and place payloads into their file-domain buffers.
 
+Since the plan/executor split (ARCHITECTURE.md) this module is a thin
+wrapper: :func:`make_twophase_write` / :func:`make_twophase_read`
+compile the schedule once (``repro.core.plan.compile_plan``) and hand
+the resulting :class:`~repro.core.plan.IOPlan` to the SPMD executor
+(``repro.core.spmd_exec``). The single-shot exchange that used to live
+here is the degenerate 1-round plan (``cb == domain_len``) — one code
+path, every capability (rounds, depth-k pipelining, auto-tuned cb)
+works identically for both schedules.
+
 Mesh layout for collective I/O (see DESIGN.md §4): a 3-D view
 ``(node, lagg, lmem)`` of the device mesh —
 
@@ -16,158 +25,35 @@ Mesh layout for collective I/O (see DESIGN.md §4): a 3-D view
 
 SPMD note (DESIGN.md §7): MPI point-to-point congestion has no literal
 XLA analogue; the all-to-many here is an ``all_to_all`` over the slow
-axis plus intra-node gathers. Congestion itself is reproduced by the
+axis plus intra-node merges. Congestion itself is reproduced by the
 host-level path (``repro.checkpoint.host_io``) and the analytical model
 (``repro.core.cost_model``).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
-from functools import partial
-from typing import Any
-
 import jax
-import jax.numpy as jnp
-from jax import lax
-from jax.sharding import PartitionSpec as P
 
-from repro.compat import shard_map
-from repro.core import coalesce as co
-from repro.core import rounds
 from repro.core.domains import FileLayout
-from repro.core.exchange import Buckets, bucket_by_dest, flatten_buckets, sort_with
-from repro.core.requests import ELEM_BYTES, RequestList, mask_invalid, split_at_stripes
+# IOConfig and the "auto" cb resolution moved into the plan IR (PR 3);
+# re-exported so existing imports keep working.
+from repro.core.plan import (IOConfig, IOPlan, compile_plan,  # noqa: F401
+                             resolve_cb_buffer_size)
+from repro.core.spmd_exec import make_spmd_executor
 
 
-@dataclass(frozen=True)
-class IOConfig:
-    """Static capacities for the SPMD collective-I/O paths.
-
-    req_cap:        per-rank request-list capacity.
-    data_cap:       per-rank payload capacity (elements).
-    coalesce_cap:   post-coalesce metadata capacity forwarded by a local
-                    aggregator (TAM stage 2). Patterns that coalesce well
-                    (BTIO/S3D-like) allow coalesce_cap << lmem * req_cap —
-                    that is TAM's inter-node metadata saving.
-    cb_buffer_size: aggregator collective-buffer elements per round
-                    (ROMIO's romio_cb_buffer_size). ``None`` keeps the
-                    single-shot exchange; setting it bounds aggregator
-                    buffering at O(cb_buffer_size) independent of the
-                    rank count (see ``repro.core.rounds``); ``"auto"``
-                    lets ``cost_model.optimal_cb`` pick the size
-                    minimizing the modeled (pipelined) total at build
-                    time (:func:`resolve_cb_buffer_size`).
-    pipeline:       double-buffer the round loop — round t+1's exchange
-                    overlaps round t's window drain (byte-identical;
-                    see ``repro.core.rounds``). Ignored by the
-                    single-shot path.
-    axis_names:     (node, lagg, lmem) mesh-axis names.
-    """
-
-    req_cap: int
-    data_cap: int
-    coalesce_cap: int | None = None
-    cb_buffer_size: int | str | None = None
-    pipeline: bool = False
-    axis_names: tuple[str, str, str] = ("node", "lagg", "lmem")
-
-
-def resolve_cb_buffer_size(layout: FileLayout, n_nodes: int, n_ranks: int,
-                           cfg: IOConfig, machine=None) -> IOConfig:
-    """Resolve ``cb_buffer_size == "auto"`` to concrete elements.
-
-    Builds the matching ``cost_model.Workload`` (byte units, one GA per
-    node) and lets :func:`repro.core.cost_model.optimal_cb` pick the
-    candidate minimizing the modeled total — pipelined when
-    ``cfg.pipeline`` — from the sizes that satisfy the
-    ``RoundScheduler`` invariants (divides ``domain_len``,
-    stripe-aligned)."""
-    if cfg.cb_buffer_size != "auto":
-        return cfg
-    from repro.core import cost_model as cm
-    dl = layout.file_len // n_nodes
-    s = layout.stripe_size
-    cands = tuple(c for c in cm.cb_candidates(dl, s)
-                  if dl % c == 0 and (c % s == 0 or s % c == 0)) or (dl,)
-    w = cm.Workload(
-        P=n_ranks, nodes=n_nodes, P_G=n_nodes, k=float(cfg.req_cap),
-        total_bytes=float(layout.file_len * ELEM_BYTES),
-        stripe_size=float(s * ELEM_BYTES),
-        overlap=1.0 if cfg.pipeline else 0.0)
-    cb_bytes, _ = cm.optimal_cb(
-        w, machine or cm.Machine(),
-        candidates=tuple(c * ELEM_BYTES for c in cands))
-    return replace(cfg, cb_buffer_size=cb_bytes // ELEM_BYTES)
-
-
-def _gather_axes(cfg: IOConfig) -> tuple[str, str]:
-    return cfg.axis_names[1], cfg.axis_names[2]
-
-
-def _squeeze(r: RequestList) -> RequestList:
-    return RequestList(r.offsets.reshape(-1), r.lengths.reshape(-1),
-                       r.count.reshape(()))
-
-
-def _twophase_shard_fn(layout: FileLayout, cfg: IOConfig, n_nodes: int,
-                       offsets, lengths, count, data):
-    node, lagg, lmem = cfg.axis_names
-    r = mask_invalid(RequestList(offsets.reshape(-1), lengths.reshape(-1),
-                                 count.reshape(())))
-    data = data.reshape(-1)
-    starts = co.request_starts(r)
-
-    if cfg.cb_buffer_size is not None:
-        # round-scheduled exchange: aggregator buffers O(cb_buffer_size)
-        sched = rounds.RoundScheduler(layout, n_nodes, cfg.cb_buffer_size)
-        shard, st = rounds.exchange_rounds_write(
-            sched, node, (lagg, lmem), r, starts, data,
-            pipeline=cfg.pipeline)
-        stats = {
-            "dropped_requests": lax.psum(st["dropped_requests"],
-                                         (node, lagg, lmem)),
-            "dropped_elems": lax.psum(st["dropped_elems"],
-                                      (node, lagg, lmem)),
-            "requests_at_ga": st["requests_at_ga"][None],
-        }
-        return shard[None], stats
-
-    # route directly to the owning global aggregator (= node id);
-    # domain-spanning requests are split at the boundary so each piece
-    # has exactly one owner (they were silently truncated before)
-    domain_len = layout.file_len // n_nodes
-    r = split_at_stripes(r, domain_len, cfg.data_cap // domain_len + 2)
-    starts = co.request_starts(r)
-    dest = r.offsets // domain_len
-    buckets = bucket_by_dest(r, starts, data, dest, n_nodes,
-                             cfg.req_cap, cfg.data_cap)
-
-    a2a = partial(lax.all_to_all, axis_name=node, split_axis=0,
-                  concat_axis=0, tiled=True)
-    rx_off, rx_len, rx_data = (a2a(buckets.offsets), a2a(buckets.lengths),
-                               a2a(buckets.data))
-    rx_cnt = a2a(buckets.counts)
-
-    # complete the all-to-many: aggregator sees every intra-node rank's
-    # bucket as well.
-    g = partial(lax.all_gather, axis_name=_gather_axes(cfg), axis=0,
-                tiled=False)
-    all_off, all_len, all_cnt, all_data = (g(rx_off), g(rx_len), g(rx_cnt),
-                                           g(rx_data))
-
-    merged, starts_m, data_flat = flatten_buckets(all_off, all_len, all_cnt,
-                                                  all_data)
-    sorted_r, starts_s = sort_with(merged, starts_m)
-    my_node = lax.axis_index(node)
-    shard = co.pack_data(sorted_r, starts_s, data_flat, domain_len,
-                         base=my_node * domain_len)
-    stats = {
-        "dropped_requests": lax.psum(buckets.dropped_requests,
-                                     (node, lagg, lmem)),
-        "dropped_elems": lax.psum(buckets.dropped_elems, (node, lagg, lmem)),
-        "requests_at_ga": sorted_r.count[None],
-    }
-    return shard[None], stats
+def plan_for(layout: FileLayout, cfg: IOConfig, n_nodes: int,
+             n_ranks: int, method: str = "twophase",
+             direction: str = "write", machine=None,
+             workload=None) -> IOPlan:
+    """Compile the schedule the SPMD entry points execute: one global
+    aggregator per node (contiguous file domains). This is the SPMD
+    side of the plan-identity contract — the host entry point
+    (``HostCollectiveIO.plan_for``) compiles the same :class:`IOPlan`
+    for the same workload (asserted by tests/test_plan.py)."""
+    return compile_plan(layout, cfg, n_aggregators=n_nodes,
+                        n_nodes=n_nodes, n_ranks=n_ranks, method=method,
+                        direction=direction, machine=machine,
+                        workload=workload)
 
 
 def make_twophase_write(mesh: jax.sharding.Mesh, layout: FileLayout,
@@ -178,66 +64,29 @@ def make_twophase_write(mesh: jax.sharding.Mesh, layout: FileLayout,
       offsets/lengths [P, req_cap], count [P], data [P, data_cap]
     Output: file [n_nodes, domain_len] sharded over ``node``; stats.
 
-    Domain-spanning requests are split at file-domain boundaries on
-    both paths (the round path additionally splits at window
-    boundaries), so each piece has exactly one owning aggregator —
+    Domain-spanning requests are split at file-domain and window
+    boundaries, so each piece has exactly one owning aggregator —
     overflow shows up in ``dropped_requests``/``dropped_elems``, never
     as silent truncation. ``cfg.cb_buffer_size == "auto"`` resolves the
-    round size via ``cost_model.optimal_cb`` at build time;
-    ``cfg.pipeline`` overlaps each round's exchange with the previous
-    round's drain.
+    round size via ``cost_model.optimal_cb`` at plan time;
+    ``cfg.pipeline`` runs the depth-``cfg.pipeline_depth`` window ring
+    (byte-identical to serial for every depth).
     """
-    node, lagg, lmem = cfg.axis_names
-    n_nodes = mesh.shape[node]
-    if layout.file_len % n_nodes:
-        raise ValueError("file_len must divide evenly among aggregators")
-    cfg = resolve_cb_buffer_size(layout, n_nodes, mesh.size, cfg)
-    if cfg.cb_buffer_size is not None:  # validate the round partition now
-        rounds.RoundScheduler(layout, n_nodes, cfg.cb_buffer_size)
-    rank_spec = P((node, lagg, lmem))
-    fn = partial(_twophase_shard_fn, layout, cfg, n_nodes)
-    return shard_map(
-        fn, mesh=mesh, check_vma=False,
-        in_specs=(rank_spec, rank_spec, rank_spec, rank_spec),
-        out_specs=(P(node), {"dropped_requests": P(), "dropped_elems": P(),
-                             "requests_at_ga": P(node, )}),
-    )
+    node = cfg.axis_names[0]
+    plan = plan_for(layout, cfg, mesh.shape[node], mesh.size)
+    return make_spmd_executor(mesh, plan)
 
 
 def make_twophase_read(mesh: jax.sharding.Mesh, layout: FileLayout,
                        cfg: IOConfig):
-    """Baseline collective read: aggregators broadcast their file domains
-    (all_gather over the slow axis), every rank gathers its own requests.
-    With ``cb_buffer_size`` set, the broadcast is one window per round
-    instead of the whole domain.
-    """
-    node, lagg, lmem = cfg.axis_names
-    n_nodes = mesh.shape[node]
-    cfg = resolve_cb_buffer_size(layout, n_nodes, mesh.size, cfg)
-    domain_len = layout.file_len // n_nodes
-    rank_spec = P((node, lagg, lmem))
-
-    def fn(offsets, lengths, count, file_shard):
-        r = mask_invalid(RequestList(offsets.reshape(-1),
-                                     lengths.reshape(-1), count.reshape(())))
-        starts = co.request_starts(r)
-        if cfg.cb_buffer_size is not None:
-            sched = rounds.RoundScheduler(layout, n_nodes,
-                                          cfg.cb_buffer_size)
-            out = rounds.exchange_rounds_read(
-                sched, node, r, starts, file_shard.reshape(-1),
-                cfg.data_cap, pipeline=cfg.pipeline)
-            return out[None]
-        whole = lax.all_gather(file_shard.reshape(-1), node, axis=0,
-                               tiled=True)
-        out = co.unpack_data(r, starts, whole, cfg.data_cap)
-        return out[None]
-
-    return shard_map(
-        fn, mesh=mesh, check_vma=False,
-        in_specs=(rank_spec, rank_spec, rank_spec, P(node)),
-        out_specs=rank_spec,
-    )
+    """Baseline collective read: aggregators broadcast their file
+    domains one ``cb`` window per round (the whole domain when
+    ``cb_buffer_size`` is None — the 1-round plan), every rank gathers
+    its own requests from the window."""
+    node = cfg.axis_names[0]
+    plan = plan_for(layout, cfg, mesh.shape[node], mesh.size,
+                    direction="read")
+    return make_spmd_executor(mesh, plan)
 
 
 def write_reference(layout: FileLayout, offsets, lengths, counts, data):

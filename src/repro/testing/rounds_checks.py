@@ -9,14 +9,18 @@ request patterns, the multi-round two-phase and TAM collective writes
 are byte-identical to BOTH the single-shot path and the
 ``write_reference`` oracle, with identical (zero) drop stats; the
 PIPELINED round loop (``IOConfig.pipeline``, prologue → steady state →
-epilogue double-buffering) is byte-identical to the serial round loop
-and the oracle at every round count; the round-scheduled reads
-(serial and pipelined) return every rank's payload; and a deliberately
-overflowed round bucket reports nonzero ``dropped_elems`` instead of
-failing silently. The spanning pattern crosses the file-domain
-boundary, exercising the single-shot split-at-domain fix (those
-requests were silently truncated before). Exits nonzero on any
-failure.
+epilogue) is byte-identical to the serial round loop and the oracle at
+every round count AND at every ring depth — the depth-k window ring
+(``IOConfig.pipeline_depth``) is swept over k in {3, 4} x all three
+round counts for two-phase and at the 5-round cb for TAM (k in {1, 2}
+are the serial/pipelined rows above; depth clamps to the round count,
+so the 1-round sweep also exercises the clamp); the round-scheduled
+reads (serial, pipelined, and depth-k) return every rank's payload;
+and a deliberately overflowed round bucket reports nonzero
+``dropped_elems`` instead of failing silently. The spanning pattern
+crosses the file-domain boundary, exercising the split-at-domain
+handling (those requests were silently truncated before PR 2). Exits
+nonzero on any failure.
 """
 import numpy as np
 import jax
@@ -28,6 +32,7 @@ FAILURES = []
 
 P_RANKS, REQ_CAP, DATA_CAP, FILE_LEN = 8, 8, 64, 320
 CBS = (160, 80, 32)   # domain_len=160 -> 1, 2, 5 rounds
+DEPTHS = (3, 4)       # ring depths beyond the serial/pipelined rows
 
 
 def check(name, ok):
@@ -143,6 +148,24 @@ def main():
     cfgp32 = replace(base, cb_buffer_size=32, pipeline=True)
     readers_p[32] = (jax.jit(make_twophase_read(mesh, layout, cfgp32)),
                      jax.jit(make_tam_read(mesh, layout, cfgp32)))
+    # depth-k ring sweep: two-phase at every round count (the 1-round
+    # config exercises the depth clamp), TAM at the 5-round cb, and a
+    # depth-k read; byte-identity is checked on the mixed + spanning
+    # patterns (the other patterns cover k in {1, 2} above)
+    deep = {}
+    for cb in CBS:
+        for k in DEPTHS:
+            cfgk = replace(base, cb_buffer_size=cb, pipeline=True,
+                           pipeline_depth=k)
+            deep[("twophase", cb, k)] = jax.jit(
+                make_twophase_write(mesh, layout, cfgk))
+    for k in DEPTHS:
+        cfgk = replace(base, cb_buffer_size=32, pipeline=True,
+                       pipeline_depth=k)
+        deep[("tam", 32, k)] = jax.jit(make_tam_write(mesh, layout, cfgk))
+    readers_k = {k: jax.jit(make_twophase_read(
+        mesh, layout, replace(base, cb_buffer_size=32, pipeline=True,
+                              pipeline_depth=k))) for k in DEPTHS}
 
     rng = np.random.default_rng(0)
     patterns = {"mixed": mixed_pattern(rng),
@@ -193,6 +216,22 @@ def main():
                                     D[p][:L[p].sum()])
                      for p in range(P_RANKS))
             check(f"{pname}/{mname}/read_pipelined_rounds5", ok)
+        if pname in ("mixed", "spanning"):
+            for (mname, cb, k), fn in deep.items():
+                f, s = fn(O, L, C, D)
+                tag = f"{pname}/{mname}/depth{k}_rounds{160 // cb}"
+                check(f"{tag}_vs_ref",
+                      np.array_equal(np.asarray(f).reshape(-1), ref))
+                check(f"{tag}_no_drops",
+                      int(s["dropped_requests"]) == 0
+                      and int(s["dropped_elems"]) == 0)
+            for k, rd in readers_k.items():
+                got = np.asarray(rd(O, L, C,
+                                    jnp.asarray(ref).reshape(2, -1)))
+                ok = all(np.array_equal(got[p][:L[p].sum()],
+                                        D[p][:L[p].sum()])
+                         for p in range(P_RANKS))
+                check(f"{pname}/twophase/read_depth{k}_rounds5", ok)
 
     # overflow observability: one rank pushes 2x identical 32-element
     # requests into one 32-element window -> 64 elems > the round

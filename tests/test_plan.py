@@ -1,0 +1,287 @@
+"""Plan IR: golden identity between the SPMD and host entry points,
+auto resolutions (cb / method / depth), depth-k byte identity on the
+host executor, and the depth-k pipeline-span model."""
+import numpy as np
+import pytest
+
+from repro.checkpoint.host_io import HostCollectiveIO
+from repro.core import twophase
+from repro.core.cost_model import (Workload, optimal_PL, optimal_depth,
+                                   pipeline_span, twophase_cost)
+from repro.core.domains import FileLayout, contiguous_layout
+from repro.core.plan import IOConfig, compile_plan
+from repro.core.rounds import peak_aggregator_buffer_elems
+from repro.io_patterns import btio_pattern, e3sm_g_pattern
+
+
+# ---------------------------------------------------------------------------
+# golden test: both entry points compile the SAME plan
+# ---------------------------------------------------------------------------
+
+def _host(n_ranks=16, n_nodes=4, stripe=1024, count=4):
+    return HostCollectiveIO(n_ranks=n_ranks, n_nodes=n_nodes,
+                            stripe_size=stripe, stripe_count=count)
+
+
+def test_plan_identity_spmd_vs_host():
+    """The SPMD planner (one GA per node) and the host planner
+    (one GA per stripe) must compile identical IOPlans for the same
+    workload — the contract that makes the two executors run one
+    schedule."""
+    layout = FileLayout(stripe_size=1024, stripe_count=4, file_len=1 << 16)
+    for cb, pipeline, depth in ((4096, True, 3), (1024, True, 2),
+                                (None, False, 2), (16384, True, 4)):
+        cfg = IOConfig(req_cap=64, data_cap=4096, cb_buffer_size=cb,
+                       pipeline=pipeline, pipeline_depth=depth)
+        p_spmd = twophase.plan_for(layout, cfg, n_nodes=4, n_ranks=16)
+        # host convention: an explicit pipeline_depth implies pipelining
+        p_host = _host().plan_for(method="twophase", cb_bytes=cb,
+                                  pipeline=pipeline,
+                                  pipeline_depth=depth if pipeline
+                                  else None,
+                                  file_len=1 << 16, req_cap=64,
+                                  data_cap=4096)
+        assert p_spmd == p_host
+        assert hash(p_spmd) == hash(p_host)   # frozen + hashable IR
+
+
+def test_plan_identity_tam():
+    layout = FileLayout(stripe_size=1024, stripe_count=4, file_len=1 << 16)
+    cfg = IOConfig(req_cap=64, data_cap=4096, coalesce_cap=32,
+                   cb_buffer_size=2048, pipeline=True)
+    p_spmd = twophase.plan_for(layout, cfg, n_nodes=4, n_ranks=16,
+                               method="tam")
+    p_host = _host().plan_for(method="tam", cb_bytes=2048, pipeline=True,
+                              file_len=1 << 16, req_cap=64, data_cap=4096,
+                              coalesce_cap=32)
+    assert p_spmd == p_host
+    assert p_spmd.method == "tam" and not p_spmd.tam_read_fallback
+
+
+# ---------------------------------------------------------------------------
+# plan semantics
+# ---------------------------------------------------------------------------
+
+def test_single_shot_is_the_one_round_plan():
+    """cb_buffer_size=None compiles to cb == domain_len, n_rounds == 1 —
+    there is no separate single-shot code path anymore."""
+    layout = contiguous_layout(320, 2)
+    plan = twophase.plan_for(layout, IOConfig(req_cap=8, data_cap=64),
+                             n_nodes=2, n_ranks=8)
+    assert plan.cb == plan.domain_len == 160
+    assert plan.n_rounds == 1
+    assert plan.pipeline_depth == 1            # pipeline off -> serial
+    assert plan.in_flight_windows == 1
+
+
+def test_depth_clamps_to_round_count():
+    layout = contiguous_layout(320, 2)
+    cfg = IOConfig(req_cap=8, data_cap=64, cb_buffer_size=80,
+                   pipeline=True, pipeline_depth=4)
+    plan = twophase.plan_for(layout, cfg, n_nodes=2, n_ranks=8)
+    assert plan.n_rounds == 2
+    assert plan.pipeline_depth == 4            # the configured ring
+    assert plan.in_flight_windows == 2         # what can actually fly
+
+
+def test_plan_validation_happens_at_compile_time():
+    with pytest.raises(ValueError):
+        twophase.plan_for(contiguous_layout(321, 2),
+                          IOConfig(req_cap=8, data_cap=64),
+                          n_nodes=2, n_ranks=8)    # uneven domains
+    with pytest.raises(ValueError):
+        twophase.plan_for(contiguous_layout(320, 2),
+                          IOConfig(req_cap=8, data_cap=64,
+                                   cb_buffer_size=33),
+                          n_nodes=2, n_ranks=8)    # 160 % 33 != 0
+
+
+def test_tam_read_fallback_is_explicit():
+    """make_tam_read's alias of the two-phase read schedule is recorded
+    in the plan, and the plans differ ONLY in the method tag."""
+    import dataclasses
+    layout = contiguous_layout(320, 2)
+    cfg = IOConfig(req_cap=8, data_cap=64, cb_buffer_size=32)
+    p_tam = twophase.plan_for(layout, cfg, n_nodes=2, n_ranks=8,
+                              method="tam", direction="read")
+    p_2ph = twophase.plan_for(layout, cfg, n_nodes=2, n_ranks=8,
+                              direction="read")
+    assert p_tam.tam_read_fallback and not p_2ph.tam_read_fallback
+    assert dataclasses.replace(p_tam, method="twophase",
+                               tam_read_fallback=False) == p_2ph
+
+
+def test_method_auto_follows_the_cost_model():
+    layout = FileLayout(stripe_size=1024, stripe_count=4, file_len=1 << 20)
+    cfg = IOConfig(req_cap=64, data_cap=4096, cb_buffer_size=None)
+    # btio-like: massive coalescing -> TAM wins by orders of magnitude
+    w_tam = Workload(P=16384, nodes=256, P_G=56, k=80000,
+                     total_bytes=200 * 2**30, coalesce_ratio=0.0176)
+    # singleton: every rank one request, nothing to coalesce, tiny file
+    w_2ph = Workload(P=8, nodes=8, P_G=8, k=1.0, total_bytes=1 << 20,
+                     coalesce_ratio=1.0)
+    for w in (w_tam, w_2ph):
+        plan = compile_plan(layout, cfg, n_aggregators=4, n_nodes=4,
+                            n_ranks=16, method="auto", workload=w)
+        expect = ("tam" if optimal_PL(w)[1].total
+                  < twophase_cost(w).total else "twophase")
+        assert plan.method == expect
+    assert compile_plan(layout, cfg, n_aggregators=4, n_nodes=4,
+                        n_ranks=16, method="auto",
+                        workload=w_tam).method == "tam"
+
+
+def test_depth_auto_uniform_model_picks_two():
+    """With the model's uniform per-round phases every depth >= 2 ties,
+    so 'auto' resolves to the cheapest ring that achieves the overlap."""
+    layout = FileLayout(stripe_size=1024, stripe_count=4, file_len=1 << 16)
+    cfg = IOConfig(req_cap=64, data_cap=4096, cb_buffer_size=1024,
+                   pipeline=True, pipeline_depth="auto")
+    plan = twophase.plan_for(layout, cfg, n_nodes=4, n_ranks=16)
+    assert plan.pipeline_depth == 2
+
+
+def test_cb_and_depth_auto_jointly():
+    layout = FileLayout(stripe_size=1024, stripe_count=4, file_len=1 << 16)
+    cfg = IOConfig(req_cap=64, data_cap=4096, cb_buffer_size="auto",
+                   pipeline=True, pipeline_depth="auto")
+    plan = twophase.plan_for(layout, cfg, n_nodes=4, n_ranks=16)
+    assert plan.domain_len % plan.cb == 0      # scheduler invariants
+    assert plan.pipeline_depth >= 1
+    plan.scheduler()                           # constructing IS the check
+
+
+# ---------------------------------------------------------------------------
+# depth-k pipeline span model
+# ---------------------------------------------------------------------------
+
+def test_pipeline_span_depth2_matches_closed_form():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        n = int(rng.integers(1, 12))
+        c, i = rng.random(n) * 10, rng.random(n) * 10
+        closed = (c[0] + sum(max(c[t], i[t - 1]) for t in range(1, n))
+                  + i[-1])
+        assert pipeline_span(c, i, 2) == pytest.approx(closed)
+
+
+def test_pipeline_span_monotone_in_depth():
+    rng = np.random.default_rng(1)
+    for _ in range(50):
+        n = int(rng.integers(2, 15))
+        c, i = rng.random(n) * 10, rng.random(n) * 10
+        spans = [pipeline_span(c, i, d) for d in (1, 2, 3, 4, 5)]
+        assert all(s2 <= s1 + 1e-12 for s1, s2 in zip(spans, spans[1:]))
+        assert spans[0] == pytest.approx(float(c.sum() + i.sum()))
+
+
+def test_optimal_depth_absorbs_multi_round_spike():
+    """A single slow exchange stalls the double buffer; a depth-3 ring
+    rides through it on pre-exchanged windows — the ROADMAP's
+    multi-round incast spike, measurable only with non-uniform
+    rounds."""
+    comm = [1.0, 1.0, 8.0, 1.0, 1.0, 1.0]
+    io = [3.0] * 6
+    spans = {d: pipeline_span(comm, io, d) for d in (1, 2, 3, 4)}
+    assert spans[3] < spans[2] < spans[1]
+    d, s = optimal_depth(round_times=(comm, io))
+    assert d == 3 and s == pytest.approx(spans[3])   # 4 ties, 3 wins
+
+
+def test_optimal_depth_uniform_prefers_smallest():
+    d, _ = optimal_depth(round_times=([2.0] * 5, [1.0] * 5))
+    assert d == 2
+    d1, _ = optimal_depth(round_times=([2.0], [1.0]))
+    assert d1 == 1                              # single round: serial
+
+
+# ---------------------------------------------------------------------------
+# host executor: depth-k byte identity (k x rounds cross), auto depth
+# ---------------------------------------------------------------------------
+
+def test_host_depth_k_byte_identity(tmp_path):
+    """k in {1, 2, 3, 4} x round counts {1, 2, 5}: the ring is
+    byte-identical to serial on the host executor for both schedules."""
+    P = 16
+    reqs = e3sm_g_pattern(P)
+    io = HostCollectiveIO(n_ranks=P, n_nodes=4, stripe_size=1024,
+                          stripe_count=2)
+    file_len = int(max((o + ln).max() for o, ln, _ in reqs if o.size))
+    plan0 = io.plan_for(rank_requests=reqs, cb_bytes=1024)
+    dom = plan0.domain_len
+    for method in ("twophase", "tam"):
+        la = 8 if method == "tam" else None
+        t0 = io.write(reqs, str(tmp_path / f"s_{method}"), method=method,
+                      local_aggregators=la)
+        ref = io.read_file(str(tmp_path / f"s_{method}"), file_len)
+        seen_rounds = set()
+        # cb sizes giving exactly 1, 2, and 5 rounds of the padded domain
+        for cb in (dom, -(-dom // 2 // 1024) * 1024,
+                   -(-dom // 5 // 1024) * 1024):
+            for k in (1, 2, 3, 4):
+                t = io.write(reqs, str(tmp_path / f"k{k}cb{cb}_{method}"),
+                             method=method, local_aggregators=la,
+                             cb_bytes=cb, pipeline_depth=k)
+                got = io.read_file(str(tmp_path / f"k{k}cb{cb}_{method}"),
+                                   file_len)
+                assert np.array_equal(got, ref), (method, cb, k)
+                assert t.pipeline_depth == min(k, t.rounds_executed)
+                assert t.total <= t0.total + t.inter_comm  # sane scale
+                seen_rounds.add(t.rounds_executed)
+        assert seen_rounds == {1, 2, 5}         # the cross was real
+
+
+def test_host_auto_depth_agrees_with_measured_sweep(tmp_path):
+    """pipeline_depth='auto' must land on the depth a brute-force sweep
+    of the measured totals picks (ties resolve to the smallest depth on
+    both sides)."""
+    P = 16
+    reqs = btio_pattern(P, n=32)
+    io = HostCollectiveIO(n_ranks=P, n_nodes=4, stripe_size=1024,
+                          stripe_count=4)
+    totals = []
+    for k in (1, 2, 3, 4):
+        t = io.write(reqs, str(tmp_path / f"k{k}"), method="tam",
+                     local_aggregators=8, cb_bytes=1024, pipeline_depth=k)
+        totals.append(t.total)
+    best = 1 + int(np.argmin(np.round(totals, 15)))
+    ta = io.write(reqs, str(tmp_path / "auto"), method="tam",
+                  local_aggregators=8, cb_bytes=1024,
+                  pipeline_depth="auto")
+    assert ta.pipeline_depth == min(best, ta.rounds_executed)
+    assert ta.total == pytest.approx(min(totals))
+
+
+def test_host_method_auto_writes_identical_bytes(tmp_path):
+    P = 16
+    reqs = e3sm_g_pattern(P)
+    io = HostCollectiveIO(n_ranks=P, n_nodes=4, stripe_size=1024,
+                          stripe_count=3)
+    file_len = int(max((o + ln).max() for o, ln, _ in reqs if o.size))
+    io.write(reqs, str(tmp_path / "t"), method="tam", local_aggregators=8)
+    ref = io.read_file(str(tmp_path / "t"), file_len)
+    ta = io.write(reqs, str(tmp_path / "a"), method="auto",
+                  local_aggregators=8)
+    assert np.array_equal(io.read_file(str(tmp_path / "a"), file_len), ref)
+    assert ta.total > 0.0
+
+
+# ---------------------------------------------------------------------------
+# k x window memory accounting
+# ---------------------------------------------------------------------------
+
+def test_peak_buffer_scales_linearly_with_depth():
+    base = peak_aggregator_buffer_elems(4096, 8, 16, 1 << 20, 8192,
+                                        pipeline_depth=1)
+    window = 8 * 4096                           # n_nodes * min(dc, cb)
+    for k in (2, 3, 4):
+        pk = peak_aggregator_buffer_elems(4096, 8, 16, 1 << 20, 8192,
+                                          pipeline_depth=k)
+        assert pk["rounds"] == base["rounds"] + (k - 1) * window
+        # stage 1 is produced and consumed inside one exchange: no k x
+        assert pk["tam_stage1_rounds"] == base["tam_stage1_rounds"]
+    # the pipeline bool stays sugar for depth 2
+    assert (peak_aggregator_buffer_elems(4096, 8, 16, 1 << 20, 8192,
+                                         pipeline=True)
+            == peak_aggregator_buffer_elems(4096, 8, 16, 1 << 20, 8192,
+                                            pipeline_depth=2))

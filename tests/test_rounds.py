@@ -153,8 +153,12 @@ def test_rounds_spmd_checks(spmd_env):
         print(proc.stderr[-3000:])
     assert proc.returncode == 0, "FAIL lines:\n" + "\n".join(
         ln for ln in proc.stdout.splitlines() if ln.startswith("FAIL"))
-    # the pipelined byte-identity and spanning-pattern checks must have
-    # actually executed (guards against silent skips in the harness)
+    # the pipelined byte-identity, spanning-pattern, and depth-k ring
+    # checks must have actually executed (guards against silent skips)
     assert "pipelined_vs_serial" in proc.stdout
     assert "spanning/" in proc.stdout
     assert "read_pipelined" in proc.stdout
+    assert "depth3_rounds5_vs_ref" in proc.stdout
+    assert "depth4_rounds1_vs_ref" in proc.stdout   # the depth clamp
+    assert "tam/depth4_rounds5_vs_ref" in proc.stdout
+    assert "read_depth4_rounds5" in proc.stdout
