@@ -16,6 +16,15 @@ and exits nonzero when:
   clamping, tie-breaking — not independent validation of
   ``optimal_depth``; the span recurrence itself is property-tested in
   tests/test_plan.py.)
+* the slow-hop codec columns fail their bounds (baseline-independent,
+  computed within the current artifact): enabling the lossless codec
+  regresses a gated workload's pipelined total by more than the
+  threshold (the codec seam + scan must stay cheap on incompressible
+  payloads); the measured sparse-checkpoint wire ratio drops to <= 2x
+  (the acceptance floor for the codec's home workload); or the modeled
+  and measured ratios disagree by more than 2x in either direction
+  (the ``"auto"`` resolution and ``optimal_cb`` discounts run on the
+  modeled ratio — if it drifts from reality the autotuning is lying).
 
 The model is deterministic, so the comparison is stable; the threshold
 exists to absorb intentional re-calibrations of ``cost_model.Machine``
@@ -70,6 +79,32 @@ def check(current: dict, baseline: dict,
                 "the cb sweep changed; regenerate "
                 "benchmarks/baselines/BENCH_pipeline_baseline.json")
         matched += wl_matched
+
+    # ---- slow-hop codec bounds (within the current artifact) ---------
+    codec = current.get("codec", {})
+    host_codec = codec.get("host", {})
+    if not host_codec:
+        errors.append("no codec on/off host entries found in the artifact")
+    for wl, entry in host_codec.items():
+        for method, e in entry.items():
+            if e["off_s"] > 0 and e["on_s"] > (1.0 + threshold) * e["off_s"]:
+                errors.append(
+                    f"codec/{wl}/{method}: lossless codec regressed the "
+                    f"pipelined total {e['on_s'] / e['off_s']:.3f}x "
+                    f"(on {e['on_s']:.4g}s vs off {e['off_s']:.4g}s)")
+    sparse = codec.get("sparse_ckpt", {})
+    if not sparse:
+        errors.append("no sparse_ckpt codec entry found in the artifact")
+    else:
+        measured, modeled = sparse["measured_ratio"], sparse["modeled_ratio"]
+        if measured <= 2.0:
+            errors.append(
+                f"codec/sparse_ckpt: measured slow-hop compression ratio "
+                f"{measured:.3f}x <= the 2x acceptance floor")
+        if not (0.5 <= modeled / max(measured, 1e-12) <= 2.0):
+            errors.append(
+                f"codec/sparse_ckpt: modeled ratio {modeled:.3f}x and "
+                f"measured ratio {measured:.3f}x disagree by more than 2x")
 
     # ---- auto depth agrees with the measured best somewhere ----------
     agreements, checked = [], []

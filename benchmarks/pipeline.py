@@ -17,6 +17,12 @@ reproduction and the paper-scale analytical model:
   the MEASURED per-round arrays) — the two must agree, which
   ``benchmarks/check_regression.py`` gates in CI.
 
+* **codec columns** — slow-hop codec on/off host totals for the gated
+  btio/e3sm_f pair (bounding the lossless codec's overhead on
+  incompressible payloads), the sparse-checkpoint wire ratio (modeled
+  vs measured, 2x agreement CI-gated), and the paper-scale modeled
+  discount rows.
+
 Emits ``BENCH_pipeline.json`` (env ``BENCH_PIPELINE_OUT`` overrides the
 path) so CI can archive the perf trajectory and diff it against the
 committed baseline, and returns the usual ``(name, us, derived)`` rows
@@ -34,6 +40,7 @@ import tempfile
 
 from repro.checkpoint.host_io import HostCollectiveIO
 from repro.core import cost_model as cm
+from repro.core import codec as codec_lib
 
 from benchmarks.workloads import (HOST_PATTERNS, MODEL_WORKLOADS,
                                   PAPER_NODES, PAPER_P, PAPER_P_L)
@@ -41,6 +48,7 @@ from benchmarks.workloads import (HOST_PATTERNS, MODEL_WORKLOADS,
 CB_MIB = (1, 4, 16, 64)
 DEPTHS = (1, 2, 3, 4)
 HOST_SET = ("e3sm_g", "btio")     # scaled host patterns (registry keys)
+CODEC_SET = ("btio", "e3sm_f")    # codec-on/off gated pair (host runs)
 
 
 def _model_sweep(blob):
@@ -134,10 +142,93 @@ def _host_measurement(blob):
     return rows
 
 
+def _codec_measurement(blob):
+    """Slow-hop codec columns: host codec-on/off pipelined totals for
+    the gated pair (btio, e3sm_f — incompressible payloads, so the gate
+    bounds the codec's own overhead) and the sparse-checkpoint wire
+    ratio, modeled vs measured (the 2x agreement gate). Model rows for
+    the paper-scale pair ride along so the artifact shows the modeled
+    discount next to the measured one."""
+    rows = []
+    n_ranks, cb = 16, 4096
+    d = tempfile.mkdtemp()
+    rle = codec_lib.get_codec("rle")
+    for pname in CODEC_SET:
+        reqs = HOST_PATTERNS[pname](n_ranks)
+        io = HostCollectiveIO(n_ranks=n_ranks, n_nodes=4,
+                              stripe_size=1024, stripe_count=4)
+        entry = {}
+        for method in ("tam", "twophase"):
+            la = 8 if method == "tam" else None
+            t_off = io.write(reqs, f"{d}/{pname}_{method}_coff",
+                             method=method, local_aggregators=la,
+                             cb_bytes=cb, pipeline_depth=2)
+            t_on = io.write(reqs, f"{d}/{pname}_{method}_con",
+                            method=method, local_aggregators=la,
+                            cb_bytes=cb, pipeline_depth=2,
+                            slow_hop_codec="rle")
+            rows.append((f"pipeline/codec/{pname}/{method}/off",
+                         t_off.total * 1e6, t_off.rounds_executed))
+            rows.append((f"pipeline/codec/{pname}/{method}/on",
+                         t_on.total * 1e6,
+                         round(t_on.slow_hop_compression_ratio, 4)))
+            entry[method] = {
+                "off_s": t_off.total, "on_s": t_on.total,
+                "measured_ratio": t_on.slow_hop_compression_ratio,
+            }
+        blob["codec"]["host"][pname] = entry
+
+    # sparse-checkpoint pages: the codec's home workload — modeled vs
+    # measured wire ratio must agree within 2x (CI-gated)
+    reqs = HOST_PATTERNS["sparse_ckpt"](n_ranks)
+    io = HostCollectiveIO(n_ranks=n_ranks, n_nodes=4,
+                          stripe_size=1024, stripe_count=4)
+    zf = codec_lib.zero_fraction(dd for _, _, dd in reqs)
+    total = float(sum(int(ln.sum()) for _, ln, _ in reqs))
+    modeled = rle.modeled_ratio(zf, total)
+    t_off = io.write(reqs, f"{d}/sparse_coff", method="tam",
+                     local_aggregators=8, cb_bytes=cb, pipeline_depth=2)
+    t_on = io.write(reqs, f"{d}/sparse_con", method="tam",
+                    local_aggregators=8, cb_bytes=cb, pipeline_depth=2,
+                    slow_hop_codec="rle")
+    rows.append(("pipeline/codec/sparse_ckpt/tam/off",
+                 t_off.total * 1e6, t_off.rounds_executed))
+    rows.append(("pipeline/codec/sparse_ckpt/tam/on", t_on.total * 1e6,
+                 round(t_on.slow_hop_compression_ratio, 4)))
+    # ratio rides in the DERIVED column (the us column stays time-only)
+    rows.append(("pipeline/codec/sparse_ckpt/modeled_ratio",
+                 0.0, round(modeled, 4)))
+    blob["codec"]["sparse_ckpt"] = {
+        "zero_fraction": zf, "modeled_ratio": modeled,
+        "measured_ratio": t_on.slow_hop_compression_ratio,
+        "off_s": t_off.total, "on_s": t_on.total,
+        "raw_bytes": t_on.slow_hop_raw_bytes,
+        "wire_bytes": t_on.slow_hop_wire_bytes,
+    }
+
+    # paper-scale model rows: the beta discount / encode cost the plan
+    # auto-resolution weighs (ratio ~1 for the incompressible pair)
+    for name in CODEC_SET:
+        w = MODEL_WORKLOADS[name](PAPER_P, PAPER_NODES)
+        ws = cm.with_overlap(
+            cm.with_measured_rounds(w, cm.rounds_for_cb(w, 4 << 20)), 1.0)
+        for method, cost in (("twophase", cm.twophase_cost),
+                             ("tam", lambda x: cm.tam_cost(x, PAPER_P_L))):
+            off = cost(ws).total
+            on = cost(cm.with_codec(ws, 4.0)).total   # ef-int8-like 4x
+            rows.append((f"pipeline/codec/model/{name}/{method}/ratio4",
+                         on * 1e6, round(off / on, 4)))
+            blob["codec"]["model"].setdefault(name, {})[method] = {
+                "off_s": off, "on_ratio4_s": on}
+    return rows
+
+
 def serial_vs_pipelined():
     blob = {"P": PAPER_P, "nodes": PAPER_NODES, "P_L": PAPER_P_L,
-            "workloads": {}, "host": {}}
-    rows = _model_sweep(blob) + _host_measurement(blob)
+            "workloads": {}, "host": {},
+            "codec": {"host": {}, "model": {}, "sparse_ckpt": {}}}
+    rows = (_model_sweep(blob) + _host_measurement(blob)
+            + _codec_measurement(blob))
     out = os.environ.get("BENCH_PIPELINE_OUT", "BENCH_pipeline.json")
     with open(out, "w") as f:
         json.dump(blob, f, indent=1, sort_keys=True)

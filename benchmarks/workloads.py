@@ -10,7 +10,8 @@ from __future__ import annotations
 
 from repro.core import cost_model as cm
 from repro.io_patterns import (btio_pattern, e3sm_f_pattern,
-                               e3sm_g_pattern, s3d_pattern)
+                               e3sm_g_pattern, s3d_pattern,
+                               sparse_checkpoint_pattern)
 
 # paper scale: P ranks / nodes / local aggregators (SV: 16384 cores,
 # 256 Haswell nodes, P_L = one LA per node)
@@ -30,6 +31,9 @@ HOST_PATTERNS = {
     "e3sm_f": e3sm_f_pattern,
     "btio": lambda P, n=32: btio_pattern(P, n=n),
     "s3d": lambda P, n=32: s3d_pattern(P, n=n),
+    # zero-dominated checkpoint pages — the slow-hop codec's workload
+    # (benchmarks/pipeline.py measures its wire ratio, CI gates it)
+    "sparse_ckpt": sparse_checkpoint_pattern,
 }
 
 

@@ -86,7 +86,8 @@ def save_checkpoint(tree, path: str | Path, *, step: int = 0,
                     local_aggregators: int | None = None,
                     cb_bytes: int | str | None = None,
                     pipeline: bool = False,
-                    pipeline_depth: int | str | None = None
+                    pipeline_depth: int | str | None = None,
+                    slow_hop_codec: str | None = None
                     ) -> tuple[dict, IOTimings]:
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
@@ -97,7 +98,8 @@ def save_checkpoint(tree, path: str | Path, *, step: int = 0,
     timings = io.write(reqs, str(path), method=method,
                        local_aggregators=local_aggregators,
                        cb_bytes=cb_bytes, pipeline=pipeline,
-                       pipeline_depth=pipeline_depth)
+                       pipeline_depth=pipeline_depth,
+                       slow_hop_codec=slow_hop_codec)
     manifest["stripe_size"] = io.stripe_size
     manifest["stripe_count"] = io.stripe_count
     (path.parent / (path.name + ".manifest.json")).write_text(
@@ -142,6 +144,9 @@ class CheckpointManager:
     pipeline: bool = False         # overlap each round's exchange/drain
     pipeline_depth: int | str | None = None  # in-flight windows (the
     # depth-k ring; None = 2 when pipeline, "auto" = measured pick)
+    slow_hop_codec: str | None = None  # lossless wire codec on the
+    # LA -> GA hop (None = off, "auto" = enable when the modeled saving
+    # beats the encode cost; sparse checkpoint pages compress well)
     keep: int = 3
 
     def save(self, tree, step: int) -> IOTimings:
@@ -151,7 +156,8 @@ class CheckpointManager:
             tree, d / f"ckpt_{step:08d}", step=step, io=self.io,
             method=self.method, local_aggregators=self.local_aggregators,
             cb_bytes=self.cb_bytes, pipeline=self.pipeline,
-            pipeline_depth=self.pipeline_depth)
+            pipeline_depth=self.pipeline_depth,
+            slow_hop_codec=self.slow_hop_codec)
         self._gc()
         return t
 

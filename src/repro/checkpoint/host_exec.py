@@ -25,6 +25,7 @@ import threading
 
 import numpy as np
 
+from repro.core.codec import get_codec
 from repro.core.cost_model import Machine, optimal_depth, pipeline_span
 from repro.core.plan import IOPlan
 
@@ -144,11 +145,21 @@ def execute_write(plan: IOPlan, machine: Machine, per_la, path: str, t,
     ``"auto"`` re-resolves against the MEASURED per-round comm/drain
     arrays via ``cost_model.optimal_depth`` (the planner's uniform
     model cannot distinguish depths > 2 — the measurement can).
+
+    With ``plan.slow_hop_codec`` set (lossless byte codecs only — the
+    payloads here are raw bytes), every slow-hop payload passes through
+    a REAL ``encode_bytes``/``decode_bytes`` round trip, the per-round
+    incast charges the ENCODED sizes against ``alpha_eff``/beta, the
+    encode+decode scan is charged at ``machine.codec_bw``, and the
+    achieved raw/wire ratio is reported
+    (``IOTimings.slow_hop_compression_ratio``).
     """
     m = machine
     stripe_count, cb = plan.n_aggregators, plan.cb
     stripe_size = plan.layout.stripe_size
     n_rounds = plan.n_rounds
+    codec = get_codec(plan.slow_hop_codec) if plan.slow_hop_codec else None
+    raw_total = wire_total = 0
 
     # ---- inter-node: local aggregators -> global aggregators ---------
     ga_inbox: list[list] = [[] for _ in range(stripe_count)]
@@ -168,13 +179,39 @@ def execute_write(plan: IOPlan, machine: Machine, per_la, path: str, t,
             pl = lens[sel]
             pd = np.concatenate([packed[s:s + l] for s, l in
                                  zip(starts[sel], pl)])
-            ga_inbox[g].append((po, pl, pd))
+            seg_starts = np.concatenate([[0], np.cumsum(pl)[:-1]])
             for r in np.unique(rnd[sel]):
                 in_r = rnd[sel] == r
                 ga_msgs[g, r] += 1       # one (re)send per round
-                ga_bytes[g, r] += (int(pl[in_r].sum())
-                                   + int(in_r.sum()) * PAIR_BYTES)
+                payload = int(pl[in_r].sum())
+                if codec is not None:
+                    # one encode per byte: round r's slice is encoded
+                    # for the wire accounting AND its decode is
+                    # scattered back in place, so the bytes the GA
+                    # sees are the ones that survived the round trip
+                    # (byte-identical for the lossless codecs this
+                    # path admits)
+                    raw = (np.concatenate(
+                        [pd[s:s + l] for s, l in zip(seg_starts[in_r],
+                                                     pl[in_r])])
+                        if payload else np.zeros(0, np.uint8))
+                    wire = codec.encode_bytes(raw)
+                    dec = codec.decode_bytes(wire)
+                    pos = 0
+                    for s, l in zip(seg_starts[in_r], pl[in_r]):
+                        pd[s:s + l] = dec[pos:pos + l]
+                        pos += l
+                    raw_total += raw.size
+                    wire_total += wire.size
+                    payload = wire.size        # the wire moves encoded
+                ga_bytes[g, r] += payload + int(in_r.sum()) * PAIR_BYTES
+            ga_inbox[g].append((po, pl, pd))
     t.rounds_executed = n_rounds
+    if codec is not None:
+        t.slow_hop_codec = codec.name
+        t.slow_hop_raw_bytes = int(raw_total)
+        t.slow_hop_wire_bytes = int(wire_total)
+        t.codec = float(raw_total + wire_total) / m.codec_bw
     t.messages_at_ga = int(ga_msgs.max(initial=0))
     # per-round incast: a receiver with S concurrent senders pays
     # alpha_eff(S) each (cost_model refinement 2, applied to the

@@ -36,10 +36,11 @@ import numpy as np
 
 from repro.checkpoint import host_exec
 from repro.checkpoint.host_exec import PAIR_BYTES  # noqa: F401 (compat)
-from repro.core.cost_model import Machine, Workload, optimal_cb
+from repro.core import codec as codec_mod
+from repro.core.cost_model import Machine, Workload, optimal_cb, with_codec
 from repro.core.domains import FileLayout
 from repro.core.plan import (IOConfig, IOPlan, compile_plan,
-                             resolve_method)
+                             resolve_method, resolve_slow_hop_codec)
 
 
 @dataclass
@@ -62,6 +63,11 @@ class IOTimings:
     overlap_fraction: float = 0.0  # overlap_saved / the hideable time
     # (the smaller of steady-state comm and io); 0 when serial or when
     # there is no steady state (single round)
+    slow_hop_codec: str | None = None  # executed wire codec (None = off)
+    slow_hop_raw_bytes: int = 0    # payload bytes offered to the codec
+    slow_hop_wire_bytes: int = 0   # payload bytes after encoding (what
+    # the per-round incast beta actually charged)
+    codec: float = 0.0             # encode+decode scan time (codec_bw)
 
     @property
     def comm(self) -> float:
@@ -71,11 +77,19 @@ class IOTimings:
     def total(self) -> float:
         return (self.intra_comm + self.intra_sort + self.intra_memcpy
                 + self.inter_comm + self.inter_sort + self.io
-                - self.overlap_saved)
+                + self.codec - self.overlap_saved)
 
     @property
     def coalesce_ratio(self) -> float:
         return self.requests_after / max(self.requests_before, 1)
+
+    @property
+    def slow_hop_compression_ratio(self) -> float:
+        """Achieved raw/wire ratio on the slow hop (1.0 = codec off or
+        nothing moved; > 1 means the wire moved fewer bytes)."""
+        if self.slow_hop_wire_bytes <= 0:
+            return 1.0
+        return self.slow_hop_raw_bytes / self.slow_hop_wire_bytes
 
 
 class HostCollectiveIO:
@@ -115,16 +129,31 @@ class HostCollectiveIO:
         return host_exec.to_domain_local(offs, self.stripe_size,
                                          self.stripe_count)
 
-    def _measured_workload(self, rank_requests,
-                           pipeline: bool = True) -> Workload:
-        """Cost-model Workload for THIS request set (byte units)."""
+    def _measured_workload(self, rank_requests, pipeline: bool = True,
+                           slow_hop_codec: str | None = None) -> Workload:
+        """Cost-model Workload for THIS request set (byte units).
+
+        With a codec requested (a name, or ``"auto"`` which weighs the
+        lossless byte codec), ``slow_hop_ratio`` is ESTIMATED from the
+        payload's measured zero fraction through THAT codec's model
+        (``codec.zero_fraction`` -> ``Codec.modeled_ratio``) — what
+        ``slow_hop_codec="auto"`` weighs against the encode cost and
+        what the CI gate compares to the achieved ratio. With no codec
+        requested the O(total_bytes) zero scan is skipped entirely and
+        the ratio stays 1.0 (codec-off model)."""
         P = self.n_ranks
         total = float(sum(int(ln.sum()) for _, ln, _ in rank_requests))
         n_req = float(sum(o.size for o, _, _ in rank_requests))
+        ratio = 1.0
+        if slow_hop_codec is not None:
+            name = "rle" if slow_hop_codec == "auto" else slow_hop_codec
+            zf = codec_mod.zero_fraction(d for _, _, d in rank_requests)
+            ratio = codec_mod.get_codec(name).modeled_ratio(zf, total)
         return Workload(P=P, nodes=self.n_nodes, P_G=self.stripe_count,
                         k=max(n_req, 1.0) / P, total_bytes=max(total, 1.0),
                         stripe_size=float(self.stripe_size),
-                        overlap=1.0 if pipeline else 0.0)
+                        overlap=1.0 if pipeline else 0.0,
+                        slow_hop_ratio=ratio)
 
     # ------------------------------------------------------------------
     def plan_for(self, *, method: str = "twophase",
@@ -134,7 +163,8 @@ class HostCollectiveIO:
                  file_len: int | None = None, rank_requests=None,
                  local_aggregators: int | None = None,
                  req_cap: int = 0, data_cap: int = 0,
-                 coalesce_cap: int | None = None) -> IOPlan:
+                 coalesce_cap: int | None = None,
+                 slow_hop_codec: str | None = None) -> IOPlan:
         """Compile this writer's schedule — the host side of the
         plan-identity contract: given the same layout/config, this and
         the SPMD ``twophase.plan_for`` produce the SAME
@@ -153,8 +183,28 @@ class HostCollectiveIO:
         are advisory here.
         """
         pipe = pipeline or pipeline_depth is not None
-        workload = (self._measured_workload(rank_requests, pipe)
+        # the ratio estimate costs an O(total_bytes) zero scan — only
+        # pay it when something consumes it: the codec's own "auto"
+        # resolution, or a named codec whose discount must feed another
+        # auto knob (method / cb / depth)
+        any_auto = (method == "auto" or cb_bytes == "auto"
+                    or pipeline_depth == "auto")
+        ratio_codec = (slow_hop_codec
+                       if slow_hop_codec == "auto"
+                       or (slow_hop_codec is not None and any_auto)
+                       else None)
+        workload = (self._measured_workload(rank_requests, pipe,
+                                            ratio_codec)
                     if rank_requests is not None else None)
+        # codec resolves before any other auto: its beta discount /
+        # encode cost must be visible to the method and cb tuners, and
+        # a codec-off plan must not keep the measured ratio estimate
+        if workload is not None:
+            if slow_hop_codec == "auto":
+                slow_hop_codec = resolve_slow_hop_codec(workload,
+                                                        self.machine)
+            if slow_hop_codec is None and workload.slow_hop_ratio != 1.0:
+                workload = with_codec(workload, 1.0)
         if method == "auto" and workload is not None:
             method = resolve_method(workload, self.machine)
         if cb_bytes == "auto":
@@ -181,7 +231,8 @@ class HostCollectiveIO:
             req_cap=req_cap, data_cap=data_cap, coalesce_cap=coalesce_cap,
             cb_buffer_size=cb_bytes, pipeline=pipe,
             pipeline_depth=(pipeline_depth if pipeline_depth is not None
-                            else 2))
+                            else 2),
+            slow_hop_codec=slow_hop_codec)
         return compile_plan(
             FileLayout(stripe_size=self.stripe_size,
                        stripe_count=self.stripe_count, file_len=file_len),
@@ -195,7 +246,8 @@ class HostCollectiveIO:
               failed_aggregators: set[int] | None = None,
               cb_bytes: int | str | None = None,
               pipeline: bool = False,
-              pipeline_depth: int | str | None = None) -> IOTimings:
+              pipeline_depth: int | str | None = None,
+              slow_hop_codec: str | None = None) -> IOTimings:
         """rank_requests: list of (offsets[int64], lengths[int64],
         payload[uint8]) per rank, offsets element=byte units here.
         method: "tam" | "twophase" | "auto" (cost-model pick at plan
@@ -223,6 +275,15 @@ class HostCollectiveIO:
         the classic double buffer (k=2); ``pipeline_depth="auto"``
         re-resolves k against the MEASURED per-round arrays. Output
         bytes are identical to the serial path for every k.
+
+        slow_hop_codec: per-round wire codec on the LA -> GA hop
+        (``core.codec``). Only LOSSLESS byte codecs are admitted here —
+        the payloads are raw bytes, so a lossy codec would corrupt the
+        file. ``"auto"`` enables the codec when the modeled saving
+        (from the payload's measured zero fraction) beats the encode
+        cost. Encoded sizes are what the per-round incast charges, and
+        the achieved ratio is reported
+        (``IOTimings.slow_hop_compression_ratio``).
         """
         failed_aggregators = failed_aggregators or set()
         plan = self.plan_for(
@@ -230,7 +291,14 @@ class HostCollectiveIO:
             pipeline_depth=(2 if pipeline_depth == "auto"
                             else pipeline_depth),
             rank_requests=rank_requests,
-            local_aggregators=local_aggregators)
+            local_aggregators=local_aggregators,
+            slow_hop_codec=slow_hop_codec)
+        if plan.slow_hop_codec is not None and \
+                not codec_mod.get_codec(plan.slow_hop_codec).lossless:
+            raise ValueError(
+                f"slow_hop_codec={plan.slow_hop_codec!r} is lossy; the "
+                "host write path moves raw bytes — use a lossless codec "
+                f"({codec_mod.lossless_codecs()})")
         m = self.machine
         t = IOTimings()
         P, nodes = self.n_ranks, self.n_nodes

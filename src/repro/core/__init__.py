@@ -9,6 +9,10 @@ from repro.core.coalesce import (  # noqa: F401
 )
 from repro.core.plan import (  # noqa: F401
     IOConfig, IOPlan, RoundScheduler, compile_plan, resolve_cb_buffer_size,
+    resolve_slow_hop_codec,
+)
+from repro.core.codec import (  # noqa: F401
+    Codec, available_codecs, get_codec, lossless_codecs,
 )
 from repro.core.twophase import make_twophase_write, plan_for  # noqa: F401
 from repro.core.tam import make_tam_write  # noqa: F401
@@ -19,7 +23,8 @@ from repro.core.rounds import peak_aggregator_buffer_elems  # noqa: F401
 from repro.core.cost_model import (  # noqa: F401
     Machine, Workload, cb_candidates, optimal_PL, optimal_cb,
     optimal_cb_and_depth, optimal_depth, pipeline_span, rounds_for_cb,
-    tam_cost, twophase_cost, with_measured_rounds, with_overlap,
+    slow_hop_codec_gain, tam_cost, twophase_cost, with_codec,
+    with_measured_rounds, with_overlap,
 )
 from repro.core.hierarchical import (  # noqa: F401
     compressed_psum, two_layer_all_to_all, two_layer_psum,

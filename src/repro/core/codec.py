@@ -1,0 +1,356 @@
+"""Pluggable slow-hop codec registry (the per-round wire transform).
+
+The paper's 29x win shrinks the NUMBER of endpoints and requests on the
+slow (inter-node) hop; the next-order term is the BYTES per hop. This
+module is the one place those bytes are transformed: a registry of
+codecs with an ``encode -> wire`` / ``decode -> payload`` contract,
+consumed by
+
+* the round engine (``core.rounds``): the ``exchange`` closure encodes
+  each round's per-destination payload buckets before the slow-axis
+  ``all_to_all`` and the ``drain`` closure decodes them — one wrap
+  covers both schedules (two-phase + TAM stage 2), both directions,
+  every ring depth, and the serial and pipelined loops;
+* the host executor (``checkpoint.host_exec``): per-message numpy byte
+  encoding, with the encoded size charged against the alpha-beta model
+  and the achieved compression ratio reported in ``IOTimings``;
+* ``hierarchical.compressed_psum``: the error-feedback int8 slow-hop
+  compression that motivated the seam is now a consumer of the same
+  ``ef-int8`` codec (the arithmetic moved here from
+  ``hierarchical._int8_encode/_decode``).
+
+Two codec families:
+
+* **lossless byte codecs** (``lossless = True``) — ``identity`` and
+  ``rle`` (zero-run encoding for sparse checkpoint pages). Byte-exact:
+  every byte-identity harness must pass unchanged with these enabled.
+  The SPMD realization is static-shape (XLA needs fixed buffers), so
+  ``rle`` lowers to a zero-skipping compaction ``(values, positions)``
+  of the same capacity — the wire VOLUME saving is modeled (and
+  measured on the host path), the transform itself is exact.
+* **lossy error-feedback codecs** (``lossless = False``) — ``ef-int8``
+  quantizes float payloads to int8 with a per-row scale and feeds the
+  quantization error back into the next round's send (EF-SGD,
+  Karimireddy et al. 2019). The residual is codec STATE: it rides the
+  round engine's pipeline ring exactly like the in-flight ``rx``
+  windows do (``jax_encode(data, state) -> (wire, state)``).
+
+Adding a codec: subclass :class:`Codec`, implement the four hooks, and
+``register()`` it — the plan IR (``IOPlan.slow_hop_codec``), both
+executors, and the cost model pick it up by name.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# Wire-format constants of the zero-run byte codec: a u32 raw-length
+# header, then (u32 literal_len, u32 zero_len, literal bytes) records.
+_HDR = np.dtype("<u4")
+RLE_HEADER_BYTES = 4
+RLE_RECORD_BYTES = 8
+RLE_MIN_RUN = 16      # zero runs shorter than a record header stay literal
+
+
+class Codec:
+    """One slow-hop wire transform.
+
+    name:      registry key (``IOPlan.slow_hop_codec`` value).
+    lossless:  byte-exact round trip — the byte-identity harnesses run
+               with these enabled; lossy codecs are rejected by the
+               host write path (its payloads are raw bytes).
+    stateful:  carries residual state through the round loop
+               (``state`` argument of :meth:`jax_encode`).
+
+    The numpy hooks (:meth:`encode_bytes` / :meth:`decode_bytes`) move
+    REAL bytes on the host executor; the jax hooks
+    (:meth:`jax_encode` / :meth:`jax_decode`) transform the static-shape
+    per-destination payload buckets around the SPMD ``all_to_all``.
+    """
+
+    name: str = "abstract"
+    lossless: bool = True
+    stateful: bool = False
+    # static wire size of one jax-encoded payload element, in UNITS OF
+    # the payload element (XLA buffers cannot shrink, so the ring
+    # carries this much per element regardless of achieved
+    # compression); rounds.peak_aggregator_buffer_elems charges it
+    jax_wire_overhead: float = 1.0
+
+    # ---- host (numpy) side: real byte movement -----------------------
+    def encode_bytes(self, buf: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    def decode_bytes(self, wire: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    # ---- SPMD (jax) side: static-shape window transform --------------
+    def jax_init_state(self, shape, dtype):
+        """Residual state carried through the round loop (stateless
+        codecs carry the empty pytree)."""
+        return ()
+
+    def jax_encode(self, data, state):
+        """``data [..., cap] -> (wire_parts tuple, new_state)``. Every
+        wire part keeps the leading (destination) axis so the round
+        engine can ``all_to_all`` each part."""
+        raise NotImplementedError
+
+    def jax_decode(self, parts):
+        """Inverse of :meth:`jax_encode`'s wire tuple."""
+        raise NotImplementedError
+
+    # ---- modeling ----------------------------------------------------
+    def modeled_ratio(self, zero_fraction: float,
+                      total_bytes: float) -> float:
+        """Expected raw/wire ratio for a payload with the given zero
+        fraction (drives the cost model's slow-hop discount and the
+        ``"auto"`` codec resolution)."""
+        return 1.0
+
+
+class IdentityCodec(Codec):
+    """Passthrough — the codec seam with zero transform (useful to
+    measure the seam's own overhead and as the registry default)."""
+
+    name = "identity"
+    lossless = True
+
+    def encode_bytes(self, buf):
+        return np.asarray(buf, np.uint8)
+
+    def decode_bytes(self, wire):
+        return np.asarray(wire, np.uint8)
+
+    def jax_encode(self, data, state):
+        return (data,), state
+
+    def jax_decode(self, parts):
+        (data,) = parts
+        return data
+
+
+class RleCodec(Codec):
+    """Zero-run byte codec for sparse checkpoint pages.
+
+    Host wire format (byte-exact for ARBITRARY input, including empty
+    and all-zero): a little-endian u32 raw length, then records of
+    ``(u32 literal_len, u32 zero_len, literal bytes)``. Only zero runs
+    of at least ``RLE_MIN_RUN`` bytes are collapsed — shorter runs ride
+    inside literals, so incompressible payloads pay only the constant
+    header + one record (never a blow-up proportional to content).
+
+    SPMD realization: XLA buffers are static, so the jax hooks perform
+    the zero-SKIPPING form of the same codec — per destination row the
+    nonzero elements are compacted to the front with their positions
+    (``(values, positions)``, both at bucket capacity). The transform
+    is exact for every dtype (the byte-identity harnesses assert it at
+    every ring depth); the wire-volume saving it stands for is what the
+    cost model discounts and the host path measures.
+    """
+
+    name = "rle"
+    lossless = True
+    jax_wire_overhead = 2.0      # (values, int32 positions) per element
+
+    def encode_bytes(self, buf):
+        buf = np.ascontiguousarray(np.asarray(buf, np.uint8))
+        n = buf.size
+        header = np.array([n], _HDR).view(np.uint8)
+        if n == 0:
+            return header.copy()
+        z = buf == 0
+        d = np.diff(z.astype(np.int8))
+        starts = np.flatnonzero(d == 1) + 1
+        ends = np.flatnonzero(d == -1) + 1
+        if z[0]:
+            starts = np.concatenate([[0], starts])
+        if z[-1]:
+            ends = np.concatenate([ends, [n]])
+        runlen = ends - starts
+        keep = runlen >= RLE_MIN_RUN
+        gs, ge, gl = starts[keep], ends[keep], runlen[keep]
+        lit_starts = np.concatenate([[0], ge])
+        lit_ends = np.concatenate([gs, [n]])
+        zero_lens = np.concatenate([gl, [0]])
+        chunks = [header]
+        for ls, le, zl in zip(lit_starts, lit_ends, zero_lens):
+            if le == ls and zl == 0:
+                continue              # empty trailing record
+            chunks.append(np.array([le - ls, zl], _HDR).view(np.uint8))
+            chunks.append(buf[ls:le])
+        return np.concatenate(chunks)
+
+    def decode_bytes(self, wire):
+        wire = np.ascontiguousarray(np.asarray(wire, np.uint8))
+        n = int(wire[:4].view(_HDR)[0])
+        out = np.zeros(n, np.uint8)
+        pos, w = 0, 4
+        while pos < n:
+            nlit, nzero = (int(v) for v in wire[w:w + 8].view(_HDR))
+            w += 8
+            out[pos:pos + nlit] = wire[w:w + nlit]
+            w += nlit
+            pos += nlit + nzero
+        return out
+
+    def jax_encode(self, data, state):
+        import jax.numpy as jnp
+        nz = data != 0
+        # stable argsort of (zero-ness) compacts nonzeros to the front
+        # in position order
+        order = jnp.argsort(jnp.where(nz, 0, 1).astype(jnp.int32),
+                            axis=-1, stable=True)
+        vals = jnp.take_along_axis(data, order, axis=-1)
+        live = jnp.take_along_axis(nz, order, axis=-1)
+        pos = jnp.where(live, order, -1).astype(jnp.int32)
+        vals = jnp.where(live, vals, jnp.zeros((), data.dtype))
+        return (vals, pos), state
+
+    def jax_decode(self, parts):
+        import jax.numpy as jnp
+        vals, pos = parts
+        cap = vals.shape[-1]
+        lead = vals.shape[:-1]
+        v2 = vals.reshape(-1, cap)
+        p2 = pos.reshape(-1, cap)
+        rows = jnp.arange(v2.shape[0], dtype=jnp.int32)[:, None]
+        idx = jnp.where(p2 >= 0, p2, cap)        # invalid -> pad slot
+        out = jnp.zeros((v2.shape[0], cap + 1), vals.dtype)
+        out = out.at[rows, idx].set(v2)
+        return out[:, :cap].reshape(*lead, cap)
+
+    def modeled_ratio(self, zero_fraction, total_bytes):
+        total = max(float(total_bytes), 1.0)
+        zf = min(max(float(zero_fraction), 0.0), 1.0)
+        wire = (total * (1.0 - zf)
+                + RLE_HEADER_BYTES + 2 * RLE_RECORD_BYTES)
+        return max(total / wire, 1e-9)
+
+
+def int8_encode(x):
+    """Error-feedback int8 quantization over the LAST axis: per-row
+    symmetric scale ``max|x| / 127``. Returns ``(q int8, scale)`` with
+    ``scale`` shaped like ``x`` minus its last axis. The flat (1-D)
+    form is what ``hierarchical.compressed_psum`` always used — the
+    arithmetic moved here so the round engine and the psum share one
+    implementation."""
+    import jax.numpy as jnp
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def int8_decode(q, scale):
+    import jax.numpy as jnp
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+class EfInt8Codec(Codec):
+    """Error-feedback int8 for float payloads (lossy).
+
+    Each round's send is quantized to int8 with a per-destination-row
+    scale; the quantization error ``x - decode(encode(x))`` is the
+    codec's STATE, added to the next round's send before quantizing
+    (EF-SGD). The round engine carries that residual through its
+    pipeline ring exactly like the in-flight ``rx`` windows, so the
+    error SUMMED over the stream telescopes to a single round's
+    quantization error (tests/test_codec.py asserts the 5e-2 band
+    ``spmd_checks`` uses for ``compressed_psum``) instead of growing
+    with the round count. 4x fewer slow-hop bytes plus one f32 scale
+    per destination row.
+
+    What feedback buys depends on the consumer. For ACCUMULATION
+    semantics (``hierarchical.compressed_psum``: the same gradient
+    stream is reduced step after step) the telescoping is the
+    convergence guarantee. For a pure WRITE (each element lands once,
+    rounds cover disjoint windows) nothing downstream sums the stream:
+    element-wise the file sees ``x + r_t - r_{t+1}`` — bounded at ~2x
+    the residual-free quantization step, never compensated. The
+    residual still rides the ring because that is the codec contract
+    (state advances in round order at every depth); a lossy write is a
+    caller's explicit accuracy trade either way.
+    """
+
+    name = "ef-int8"
+    lossless = False
+    stateful = True
+    jax_wire_overhead = 0.3      # int8 codes (1/4 of f32) + per-row
+    # scale + the f32 residual rides OUTSIDE the ring count (one copy,
+    # not one per in-flight window)
+
+    def encode_bytes(self, buf):   # pragma: no cover - guarded by host
+        raise TypeError(
+            "ef-int8 is a lossy float codec; the host write path moves "
+            "raw bytes — use a lossless codec ('identity', 'rle')")
+
+    decode_bytes = encode_bytes
+
+    def jax_init_state(self, shape, dtype):
+        import jax.numpy as jnp
+        if not jnp.issubdtype(dtype, jnp.floating):
+            raise TypeError(
+                f"slow_hop_codec='ef-int8' quantizes float payloads; "
+                f"got dtype {np.dtype(dtype)}")
+        return jnp.zeros(shape, jnp.float32)
+
+    def jax_encode(self, data, state):
+        import jax.numpy as jnp
+        x = data.astype(jnp.float32)
+        if not isinstance(state, tuple):   # residual rides along
+            x = x + state
+        q, scale = int8_encode(x)
+        decoded = int8_decode(q, scale)
+        new_state = state if isinstance(state, tuple) else x - decoded
+        return (q, scale), new_state
+
+    def jax_decode(self, parts):
+        q, scale = parts
+        return int8_decode(q, scale)
+
+    def modeled_ratio(self, zero_fraction, total_bytes):
+        return 4.0      # f32 -> int8 (+ one scale per row, amortized)
+
+
+_REGISTRY: dict[str, Codec] = {}
+
+
+def register(codec: Codec) -> Codec:
+    """Add a codec to the registry (last registration of a name wins —
+    deliberate, so tests/experiments can shadow a builtin)."""
+    _REGISTRY[codec.name] = codec
+    return codec
+
+
+def get_codec(name: str) -> Codec:
+    """Look up a codec by name; raises ``ValueError`` with the known
+    names so a typo dies at plan time, not mid-exchange."""
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown slow_hop_codec {name!r}; "
+            f"registered: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def available_codecs() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def lossless_codecs() -> tuple[str, ...]:
+    return tuple(sorted(n for n, c in _REGISTRY.items() if c.lossless))
+
+
+register(IdentityCodec())
+register(RleCodec())
+register(EfInt8Codec())
+
+
+def zero_fraction(bufs) -> float:
+    """Fraction of zero bytes across an iterable of uint8 payloads —
+    the measurable statistic behind ``rle``'s modeled ratio (sparse
+    checkpoint pages are zero-dominated)."""
+    total = zeros = 0
+    for b in bufs:
+        b = np.asarray(b)
+        total += b.size
+        zeros += int((b == 0).sum())
+    return zeros / total if total else 0.0

@@ -23,6 +23,12 @@ measurements exhibit:
    sum; ``Workload.overlap`` models the hidden fraction and
    :func:`optimal_cb` picks the collective-buffer size minimizing the
    pipelined total, the way :func:`optimal_PL` picks P_L.
+5. **Slow-hop codec.** With ``Workload.slow_hop_ratio > 1`` (the
+   ``core.codec`` wire transform enabled at a measured/modeled
+   raw/wire ratio) the inter-node beta volume divides by the ratio and
+   an encode+decode scan ``bytes * (1 + 1/ratio) / codec_bw`` is
+   charged; :func:`slow_hop_codec_gain` is the break-even the planner's
+   ``slow_hop_codec="auto"`` resolves against.
 
 Message-count facts (paper SIV-D):
   two-phase:  P/P_G receives per GA per round;
@@ -56,6 +62,9 @@ class Machine:
     incast_knee: float = 2048     # senders beyond which queues collapse
     memcpy_bw: float = 5e9        # B/s local packing
     io_bw: float = 5.5e9          # aggregate file-system bandwidth (B/s)
+    codec_bw: float = 50e9        # B/s slow-hop codec throughput (a
+    # byte-scan like zero-run RLE or int8 quantization runs at memory
+    # bandwidth; charged on raw bytes in + wire bytes out)
 
     @staticmethod
     def tpu_v5e() -> "Machine":
@@ -63,7 +72,8 @@ class Machine:
         return Machine(alpha_inter=5.0e-6, alpha_intra=1.0e-6,
                        beta_inter=1.0 / 25e9, beta_intra=1.0 / 50e9,
                        sort_per_cmp=1.0e-9, req_proc=5.0e-8,
-                       incast_knee=512, memcpy_bw=100e9, io_bw=20e9)
+                       incast_knee=512, memcpy_bw=100e9, io_bw=20e9,
+                       codec_bw=150e9)
 
     def alpha_eff(self, senders: float) -> float:
         return self.alpha_inter * (1.0 + senders / self.incast_knee)
@@ -92,6 +102,11 @@ class Workload:
     # the model's uniform per-round phases every depth >= 2 hides the
     # same amount, so the depth only matters through pipeline_span /
     # optimal_depth when measured per-round times are supplied).
+    slow_hop_ratio: float = 1.0   # slow-hop codec raw/wire ratio: the
+    # inter-node beta term is divided by this (volume discount) and an
+    # encode+decode term bytes*(1 + 1/ratio)/codec_bw is charged
+    # (refinement 5 — core.codec). 1.0 = codec off; set via with_codec
+    # (measured zero fraction -> Codec.modeled_ratio on the host path).
 
     @property
     def q(self) -> int:
@@ -128,6 +143,7 @@ class CostBreakdown:
     inter_sort: float = 0.0
     io: float = 0.0
     overlap_saved: float = 0.0    # time hidden by pipelining rounds
+    codec: float = 0.0            # slow-hop encode+decode time
 
     @property
     def comm(self) -> float:
@@ -137,7 +153,7 @@ class CostBreakdown:
     def total(self) -> float:
         return (self.intra_comm + self.intra_sort + self.intra_memcpy
                 + self.inter_comm + self.inter_req_proc + self.inter_sort
-                + self.io - self.overlap_saved)
+                + self.io + self.codec - self.overlap_saved)
 
 
 def _log2(x: float) -> float:
@@ -145,15 +161,21 @@ def _log2(x: float) -> float:
 
 
 def _inter_phase(w: Workload, m: Machine, endpoints: float,
-                 requests: float) -> tuple[float, float, float]:
-    """(comm, req_proc, sort) for an exchange from ``endpoints`` senders
-    holding ``requests`` total offset-length pairs, into P_G GAs."""
+                 requests: float) -> tuple[float, float, float, float]:
+    """(comm, req_proc, sort, codec) for an exchange from ``endpoints``
+    senders holding ``requests`` total offset-length pairs, into P_G
+    GAs. ``slow_hop_ratio > 1`` divides the beta byte volume (the codec
+    discount, refinement 5) and charges the encode+decode scan."""
     senders = w.senders_per_stripe(endpoints, requests)
+    ratio = max(w.slow_hop_ratio, 1e-9)
+    bytes_per_ga = w.total_bytes / w.P_G
     comm = (w.rounds * m.alpha_eff(senders) * senders
-            + m.beta_inter * (w.total_bytes / w.P_G))
+            + m.beta_inter * bytes_per_ga / ratio)
     req_proc = m.req_proc * (requests / w.P_G)
     sort = m.sort_per_cmp * (requests / w.P_G) * _log2(endpoints)
-    return comm, req_proc, sort
+    codec = (bytes_per_ga * (1.0 + 1.0 / ratio) / m.codec_bw
+             if ratio != 1.0 else 0.0)
+    return comm, req_proc, sort, codec
 
 
 def _overlap_saved(w: Workload, inter_comm: float, io: float) -> float:
@@ -176,10 +198,10 @@ def _overlap_saved(w: Workload, inter_comm: float, io: float) -> float:
 
 def twophase_cost(w: Workload, m: Machine = Machine()) -> CostBreakdown:
     """Original two-phase I/O: all P ranks -> P_G aggregators."""
-    comm, rp, sort = _inter_phase(w, m, w.P, w.P * w.k)
+    comm, rp, sort, codec = _inter_phase(w, m, w.P, w.P * w.k)
     io = w.total_bytes / m.io_bw
     return CostBreakdown(inter_comm=comm, inter_req_proc=rp,
-                         inter_sort=sort, io=io,
+                         inter_sort=sort, io=io, codec=codec,
                          overlap_saved=_overlap_saved(w, comm, io))
 
 
@@ -196,12 +218,12 @@ def tam_cost(w: Workload, P_L: int, m: Machine = Machine()) -> CostBreakdown:
     intra_sort = m.sort_per_cmp * (w.P * w.k / P_L) * _log2(w.P / P_L)
     intra_memcpy = bytes_per_la / m.memcpy_bw
     k_prime = w.P * w.k * w.coalesce_ratio
-    comm, rp, sort = _inter_phase(w, m, P_L, k_prime)
+    comm, rp, sort, codec = _inter_phase(w, m, P_L, k_prime)
     # GA sort merges P_L pre-sorted streams: log factor is P_L not P
     sort = m.sort_per_cmp * (k_prime / w.P_G) * _log2(P_L)
     io = w.total_bytes / m.io_bw
     return CostBreakdown(intra_comm, intra_sort, intra_memcpy,
-                         comm, rp, sort, io=io,
+                         comm, rp, sort, io=io, codec=codec,
                          overlap_saved=_overlap_saved(w, comm, io))
 
 
@@ -245,6 +267,31 @@ def with_overlap(w: Workload, overlap: float = 1.0,
     import dataclasses
     return dataclasses.replace(w, overlap=float(overlap),
                                pipeline_depth=int(depth))
+
+
+def with_codec(w: Workload, ratio: float) -> Workload:
+    """Model the slow-hop codec at a raw/wire ``ratio`` (refinement 5):
+    the inter-node beta volume divides by it and the encode+decode scan
+    ``bytes * (1 + 1/ratio) / codec_bw`` is charged. ``ratio = 1``
+    restores the codec-off model. The measured estimate comes from the
+    payload zero fraction (``codec.zero_fraction`` +
+    ``Codec.modeled_ratio`` — the host path wires this)."""
+    import dataclasses
+    return dataclasses.replace(w, slow_hop_ratio=float(ratio))
+
+
+def slow_hop_codec_gain(w: Workload, m: Machine = Machine(),
+                        ratio: float | None = None) -> float:
+    """Modeled seconds SAVED per global aggregator by enabling the
+    slow-hop codec at ``ratio`` (default: the workload's) — the beta
+    volume discount minus the encode+decode cost. Positive means the
+    codec pays for itself; ``compile_plan``'s ``slow_hop_codec="auto"``
+    enables the codec exactly when this is positive."""
+    r = max(float(ratio if ratio is not None else w.slow_hop_ratio), 1e-9)
+    bytes_per_ga = w.total_bytes / w.P_G
+    saving = m.beta_inter * bytes_per_ga * (1.0 - 1.0 / r)
+    cost = bytes_per_ga * (1.0 + 1.0 / r) / m.codec_bw
+    return saving - cost
 
 
 def pipeline_span(comm_rounds, io_rounds, depth: int) -> float:
@@ -429,7 +476,7 @@ def optimal_cb_and_depth(w: Workload, m: Machine = Machine(),
         cost = tam_cost(wc, P_L, m) if P_L is not None else \
             twophase_cost(wc, m)
         fixed = (cost.intra_comm + cost.intra_sort + cost.intra_memcpy
-                 + cost.inter_req_proc + cost.inter_sort)
+                 + cost.inter_req_proc + cost.inter_sort + cost.codec)
         d, span = optimal_depth(wc, m, P_L=P_L, depths=depths)
         total = fixed + span
         if best is None or total < best[0] - 1e-15:

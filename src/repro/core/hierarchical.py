@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.compat import axis_size
+from repro.core import codec as codec_mod
 
 
 def _pad_to(x: jax.Array, mult: int) -> tuple[jax.Array, int]:
@@ -60,14 +61,16 @@ class ErrorFeedbackState:
         return jnp.zeros_like(x)
 
 
+# The int8 arithmetic moved to the shared slow-hop codec subsystem
+# (``core.codec``, the "ef-int8" registry entry) so the collective-I/O
+# round engine and this module compress the slow hop the same way; the
+# old private names stay as aliases for callers that reached in.
 def _int8_encode(x: jax.Array) -> tuple[jax.Array, jax.Array]:
-    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30) / 127.0
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    return q, scale
+    return codec_mod.int8_encode(x)
 
 
 def _int8_decode(q: jax.Array, scale: jax.Array) -> jax.Array:
-    return q.astype(jnp.float32) * scale
+    return codec_mod.int8_decode(q, scale)
 
 
 def compressed_psum(x: jax.Array, residual: jax.Array, fast_axis: str,
@@ -79,7 +82,12 @@ def compressed_psum(x: jax.Array, residual: jax.Array, fast_axis: str,
     from the schedule). The quantization error is fed back into
     ``residual`` and reapplied next step, preserving convergence
     (Karimireddy et al., 2019). Returns (psum_result, new_residual).
+
+    Consumes the registry's ``ef-int8`` codec — the same encode/decode
+    (and the same residual-riding contract) the round engine applies to
+    the collective-I/O slow hop (``IOPlan.slow_hop_codec``).
     """
+    ef = codec_mod.get_codec("ef-int8")
     orig_shape = x.shape
     q = axis_size(fast_axis)
     flat, n = _pad_to(x.reshape(-1), q)
@@ -88,10 +96,8 @@ def compressed_psum(x: jax.Array, residual: jax.Array, fast_axis: str,
     res_flat, _ = _pad_to(residual.reshape(-1), q)
     res_shard = lax.dynamic_slice_in_dim(
         res_flat, lax.axis_index(fast_axis) * shard.shape[0], shard.shape[0])
-    to_send = shard + res_shard
-    code, scale = _int8_encode(to_send)
-    decoded = _int8_decode(code, scale)
-    new_res_shard = to_send - decoded
+    wire, new_res_shard = ef.jax_encode(shard, res_shard)
+    decoded = ef.jax_decode(wire)
     reduced = lax.psum(decoded, slow_axis)
     full = lax.all_gather(shard * 0 + reduced, fast_axis, axis=0, tiled=True)
     new_res = lax.all_gather(new_res_shard, fast_axis, axis=0, tiled=True)

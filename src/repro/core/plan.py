@@ -75,6 +75,12 @@ class IOConfig:
                     window memory; ``"auto"`` picks depth jointly with
                     cb via ``cost_model.optimal_cb_and_depth``.
     axis_names:     (node, lagg, lmem) mesh-axis names.
+    slow_hop_codec: per-round wire transform of the slow-axis payload
+                    (``core.codec`` registry: "identity", "rle",
+                    "ef-int8"). ``None`` = no transform; ``"auto"``
+                    enables the lossless byte codec when the modeled
+                    slow-hop saving beats the encode cost
+                    (``cost_model.slow_hop_codec_gain``).
     """
 
     req_cap: int
@@ -84,6 +90,7 @@ class IOConfig:
     pipeline: bool = False
     pipeline_depth: int | str = 2
     axis_names: tuple[str, str, str] = ("node", "lagg", "lmem")
+    slow_hop_codec: str | None = None
 
 
 @dataclass(frozen=True)
@@ -158,6 +165,11 @@ class IOPlan:
         broadcast as the two-phase read — the plan records the fallback
         EXPLICITLY instead of silently aliasing (``make_tam_read``
         asserts it; see that docstring for why the paths coincide).
+    slow_hop_codec: resolved per-round wire codec (never "auto" here;
+        ``None`` = no transform). Both executors read it — the round
+        engine wraps the ``exchange``/``drain`` pair, the host
+        executor charges encoded bytes — so one plan field governs the
+        wire format everywhere (ARCHITECTURE.md § slow-hop codec).
     """
 
     layout: FileLayout
@@ -172,6 +184,7 @@ class IOPlan:
     coalesce_cap: int | None
     axis_names: tuple[str, str, str]
     tam_read_fallback: bool = False
+    slow_hop_codec: str | None = None
 
     @property
     def domain_len(self) -> int:
@@ -225,6 +238,22 @@ def resolve_method(workload, machine=None) -> str:
             else "twophase")
 
 
+def resolve_slow_hop_codec(workload, machine=None) -> str | None:
+    """``slow_hop_codec="auto"``: enable the lossless byte codec when
+    the modeled slow-hop saving beats the encode cost
+    (``cost_model.slow_hop_codec_gain`` at the workload's measured
+    ``slow_hop_ratio`` — the host path estimates it from the payload's
+    zero fraction). Auto never picks a LOSSY codec: losing bits is a
+    caller decision (``slow_hop_codec="ef-int8"`` explicitly), not a
+    tuning knob. Shared by :func:`compile_plan` and the host planner."""
+    from repro.core import cost_model as cm
+    machine = machine or cm.Machine()
+    if workload.slow_hop_ratio <= 1.0:
+        return None
+    gain = cm.slow_hop_codec_gain(workload, machine)
+    return "rle" if gain > 0.0 else None
+
+
 def _legal_cb_candidates(domain_len: int, stripe: int, unit_bytes: int):
     """RoundScheduler-legal cb sizes in BYTES for the autotuner."""
     from repro.core import cost_model as cm
@@ -275,6 +304,20 @@ def compile_plan(layout: FileLayout, cfg: IOConfig, *,
     w = workload if workload is not None else _default_workload(
         layout, cfg, n_aggregators, n_nodes, n_ranks, unit_bytes)
 
+    # ---- slow-hop wire codec ------------------------------------------
+    # Resolved FIRST: the codec's beta discount / encode cost feed every
+    # later auto resolution (method, cb, depth) through the workload.
+    from repro.core import codec as codec_mod
+    slow_hop_codec = cfg.slow_hop_codec
+    if slow_hop_codec == "auto":
+        slow_hop_codec = resolve_slow_hop_codec(w, machine)
+    if slow_hop_codec is not None:
+        c = codec_mod.get_codec(slow_hop_codec)    # typo dies here
+        if w.slow_hop_ratio == 1.0 and not c.lossless:
+            w = cm.with_codec(w, c.modeled_ratio(0.0, w.total_bytes))
+    elif w.slow_hop_ratio != 1.0:
+        w = cm.with_codec(w, 1.0)    # codec off: no discount, no cost
+
     # ---- aggregation topology -----------------------------------------
     if method == "auto":
         method = resolve_method(w, machine)
@@ -314,7 +357,8 @@ def compile_plan(layout: FileLayout, cfg: IOConfig, *,
         n_rounds=sched.n_rounds, method=method, direction=direction,
         pipeline_depth=depth, req_cap=cfg.req_cap, data_cap=cfg.data_cap,
         coalesce_cap=cfg.coalesce_cap, axis_names=cfg.axis_names,
-        tam_read_fallback=tam_read_fallback)
+        tam_read_fallback=tam_read_fallback,
+        slow_hop_codec=slow_hop_codec)
 
 
 def resolve_cb_buffer_size(layout: FileLayout, n_nodes: int, n_ranks: int,

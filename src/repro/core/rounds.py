@@ -115,6 +115,7 @@ balancing incast latency, memory, and round count.
 """
 from __future__ import annotations
 
+import math
 from functools import partial
 
 import jax
@@ -122,12 +123,36 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import coalesce as co
+from repro.core import codec as codec_mod
 from repro.core.exchange import (bucket_by_dest, flatten_buckets,
                                  repack_sorted, sort_with)
 # RoundScheduler folded into the plan IR (PR 3); re-exported here so
 # ``from repro.core.rounds import RoundScheduler`` keeps working.
 from repro.core.plan import RoundScheduler  # noqa: F401
 from repro.core.requests import PAD_OFFSET, RequestList, split_at_stripes
+
+
+def _codec_hooks(slow_hop_codec: str | None, dtype, state_shape):
+    """(encode, decode, state0) for the slow-hop wire transform.
+
+    ``encode(data, state) -> (wire_parts, state)`` runs inside the
+    ``exchange`` closure BEFORE the slow-axis collective;
+    ``decode(wire_parts) -> data`` runs inside the drain. ``state0`` is
+    the codec's residual (error feedback) — the empty pytree for
+    stateless codecs — and is threaded through the round loop by
+    ``_run_rounds`` exactly like the in-flight ``rx`` windows. A lossy
+    codec on a non-float payload dies here, at trace time.
+    """
+    if slow_hop_codec is None:
+        return (lambda data, st: ((data,), st),
+                lambda parts: parts[0], ())
+    c = codec_mod.get_codec(slow_hop_codec)
+    if not c.lossless and not jnp.issubdtype(dtype, jnp.floating):
+        raise TypeError(
+            f"slow_hop_codec={c.name!r} is lossy (float payloads only) "
+            f"but the payload dtype is {jnp.dtype(dtype)}")
+    state0 = c.jax_init_state(state_shape, dtype) if c.stateful else ()
+    return c.jax_encode, c.jax_decode, state0
 
 
 def _effective_depth(pipeline: bool, depth: int | None) -> int:
@@ -156,14 +181,19 @@ def _lowest(dtype) -> jax.Array:
     return jnp.array(jnp.iinfo(dtype).min, dtype)
 
 
-def _make_drain(base0, cb: int, merge_axes: tuple[str, ...], dtype):
+def _make_drain(base0, cb: int, merge_axes: tuple[str, ...], dtype,
+                decode=None):
     """Drain closure: merge one round's received buckets into the
-    carried domain buffer (flatten → sort → pack window → masked pmax
-    merge → accumulate at ``t * cb``)."""
+    carried domain buffer (decode wire → flatten → sort → pack window →
+    masked pmax merge → accumulate at ``t * cb``). ``rx`` is
+    ``(offsets, lengths, counts, *wire_parts)``; ``decode`` inverts the
+    slow-hop codec's encode (identity when no codec is planned)."""
     low = _lowest(dtype)
 
     def drain(t, buf, rx):
-        merged, starts_m, data_flat = flatten_buckets(*rx)
+        data = rx[3] if decode is None else decode(rx[3:]).astype(dtype)
+        merged, starts_m, data_flat = flatten_buckets(rx[0], rx[1],
+                                                      rx[2], data)
         sorted_r, starts_s = sort_with(merged, starts_m)
         base = base0 + t * cb
         win = co.pack_data(sorted_r, starts_s, data_flat, cb, base=base)
@@ -179,11 +209,14 @@ def _make_drain(base0, cb: int, merge_axes: tuple[str, ...], dtype):
 
 
 def _run_rounds(n_rounds: int, domain_len: int, dtype, exchange, drain,
-                n_ex_stats: int, n_dr_stats: int, depth: int):
+                n_ex_stats: int, n_dr_stats: int, depth: int,
+                codec_state=()):
     """Drive the round loop: serial (depth 1) or a depth-k window ring.
 
-    ``exchange(t) -> (rx, ex_stats)`` produces round t's received
-    buckets; ``drain(t, buf, rx) -> (buf, dr_stats)`` merges them into
+    ``exchange(t, cstate) -> (rx, ex_stats, cstate)`` produces round
+    t's received buckets and the advanced codec state (the slow-hop
+    codec's residual — the empty pytree when stateless);
+    ``drain(t, buf, rx) -> (buf, dr_stats)`` merges the buckets into
     the domain buffer. Stats tuples are accumulated elementwise.
     Ring schedule (depth k, clamped to the round count): the prologue
     exchanges rounds 0..k-2 into the ring (statically unrolled); the
@@ -191,7 +224,9 @@ def _run_rounds(n_rounds: int, domain_len: int, dtype, exchange, drain,
     oldest carried window, round t-(k-1); the epilogue drains the
     remaining k-1 windows. Every round is drained exactly once, in
     order, through the identical drain — byte-identical to serial for
-    every k.
+    every k. The codec state rides the same loop carry as the ring:
+    exchanges always run in round order, so error feedback sees rounds
+    0, 1, 2, ... at every depth.
     """
     zeros = tuple(jnp.int32(0) for _ in range(n_ex_stats + n_dr_stats))
 
@@ -203,30 +238,33 @@ def _run_rounds(n_rounds: int, domain_len: int, dtype, exchange, drain,
     d = max(1, min(depth, n_rounds))
     if d == 1:
         def body(t, carry):
-            buf, acc = carry
-            rx, ex = exchange(t)
+            buf, cst, acc = carry
+            rx, ex, cst = exchange(t, cst)
             buf, dr = drain(t, buf, rx)
-            return buf, add(acc, ex, 0) + add(acc, dr, n_ex_stats)
+            return buf, cst, add(acc, ex, 0) + add(acc, dr, n_ex_stats)
 
-        buf, acc = lax.fori_loop(0, n_rounds, body, (buf0, zeros))
+        buf, _, acc = lax.fori_loop(0, n_rounds, body,
+                                    (buf0, codec_state, zeros))
         return buf, acc[:n_ex_stats], acc[n_ex_stats:]
 
     ring: list = []                              # prologue: fill the ring
     acc = zeros
+    cst = codec_state
     for i in range(d - 1):
-        rx, ex = exchange(i)
+        rx, ex, cst = exchange(i, cst)
         ring.append(rx)
         acc = add(acc, ex, 0) + acc[n_ex_stats:]
 
     def body(t, carry):
-        buf, ring, acc = carry
-        rx_new, ex = exchange(t)                 # refill the freed buffer …
+        buf, ring, cst, acc = carry
+        rx_new, ex, cst = exchange(t, cst)       # refill the freed buffer …
         buf, dr = drain(t - (d - 1), buf, ring[0])   # … drain the oldest
         ring = ring[1:] + (rx_new,)
-        return buf, ring, add(acc, ex, 0) + add(acc, dr, n_ex_stats)
+        return (buf, ring, cst,
+                add(acc, ex, 0) + add(acc, dr, n_ex_stats))
 
-    buf, ring, acc = lax.fori_loop(d - 1, n_rounds, body,
-                                   (buf0, tuple(ring), acc))
+    buf, ring, _, acc = lax.fori_loop(d - 1, n_rounds, body,
+                                      (buf0, tuple(ring), cst, acc))
     for j in range(d - 1):                       # epilogue: drain the ring
         buf, dr = drain(n_rounds - (d - 1) + j, buf, ring[j])
         acc = acc[:n_ex_stats] + add(acc, dr, n_ex_stats)
@@ -237,16 +275,21 @@ def exchange_rounds_write(sched: RoundScheduler, node_axis: str,
                           merge_axes: tuple[str, ...], r: RequestList,
                           starts: jax.Array, data: jax.Array,
                           pipeline: bool = False,
-                          depth: int | None = None):
+                          depth: int | None = None,
+                          slow_hop_codec: str | None = None):
     """Round loop of the collective write (runs inside a shard_map body).
 
     r/starts/data: this sender's offset-sorted requests, the payload
     start of each request inside ``data``, and the packed payload.
     ``depth=k`` runs the depth-k window ring (k in-flight windows;
     byte-identical to the serial loop for every k — see the module
-    docstring); ``pipeline=True`` is sugar for depth 2. Returns
-    (domain shard [domain_len], stats dict); ``requests_at_ga`` is
-    already summed over ``merge_axes`` (replicated at the node).
+    docstring); ``pipeline=True`` is sugar for depth 2.
+    ``slow_hop_codec`` names a ``core.codec`` transform applied to each
+    round's payload buckets around the slow-axis ``all_to_all``
+    (lossless codecs keep byte identity; ``ef-int8``'s residual rides
+    the loop carry). Returns (domain shard [domain_len], stats dict);
+    ``requests_at_ga`` is already summed over ``merge_axes``
+    (replicated at the node).
     """
     n_dest, cb, dl = sched.n_aggregators, sched.cb, sched.domain_len
     data_cap = data.shape[0]
@@ -259,21 +302,25 @@ def exchange_rounds_write(sched: RoundScheduler, node_axis: str,
     base0 = lax.axis_index(node_axis) * dl
     a2a = partial(lax.all_to_all, axis_name=node_axis, split_axis=0,
                   concat_axis=0, tiled=True)
+    enc, dec, cstate0 = _codec_hooks(slow_hop_codec, data.dtype,
+                                     (n_dest, round_data_cap))
 
-    def exchange(t):
+    def exchange(t, cst):
         active = split.valid_mask() & (window == t)
         act_r, act_starts, act_dest = _compact_active(split, s_starts,
                                                       dest, active)
         act_data = repack_sorted(act_r, act_starts, data, data_cap)
         b = bucket_by_dest(act_r, co.request_starts(act_r), act_data,
                            act_dest, n_dest, round_req_cap, round_data_cap)
-        rx = (a2a(b.offsets), a2a(b.lengths), a2a(b.counts), a2a(b.data))
-        return rx, (b.dropped_requests, b.dropped_elems)
+        wire, cst = enc(b.data, cst)
+        rx = ((a2a(b.offsets), a2a(b.lengths), a2a(b.counts))
+              + tuple(a2a(p) for p in wire))
+        return rx, (b.dropped_requests, b.dropped_elems), cst
 
-    drain = _make_drain(base0, cb, merge_axes, data.dtype)
+    drain = _make_drain(base0, cb, merge_axes, data.dtype, decode=dec)
     buf, (drop_r, drop_e), (reqs_rx,) = _run_rounds(
         sched.n_rounds, dl, data.dtype, exchange, drain, 2, 1,
-        _effective_depth(pipeline, depth))
+        _effective_depth(pipeline, depth), codec_state=cstate0)
     return buf, {
         "dropped_requests": drop_r,
         "dropped_elems": drop_e,
@@ -288,7 +335,8 @@ def exchange_rounds_write_tam(sched: RoundScheduler, node_axis: str,
                               coalesce_cap: int | None = None,
                               use_kernels: bool = False,
                               pipeline: bool = False,
-                              depth: int | None = None):
+                              depth: int | None = None,
+                              slow_hop_codec: str | None = None):
     """Fused TAM round loop: BOTH aggregation layers run per window.
 
     Per round t, stage 1 gathers only the window's requests over
@@ -319,8 +367,16 @@ def exchange_rounds_write_tam(sched: RoundScheduler, node_axis: str,
                   concat_axis=0, tiled=True)
     g = partial(lax.all_gather, axis_name=lmem_axis, axis=0, tiled=False)
     idx = jnp.arange(split.capacity, dtype=jnp.int32)
+    # the codec wraps ONLY the slow-axis hop (stage 2): the intra-node
+    # gather stays raw — exactly the paper's asymmetry (compress where
+    # the fabric is slow), mirroring hierarchical.compressed_psum
+    from repro.compat import axis_size
+    lmem_size = axis_size(lmem_axis)
+    enc, dec, cstate0 = _codec_hooks(
+        slow_hop_codec, data.dtype,
+        (n_dest, min(lmem_size * rdcap, cb)))
 
-    def exchange(t):
+    def exchange(t, cst):
         # ---- stage 1: window-bounded intra-node aggregation ---------
         active = split.valid_mask() & (window == t)
         act_r, act_starts, _ = _compact_active(split, s_starts, dest0,
@@ -362,15 +418,17 @@ def exchange_rounds_write_tam(sched: RoundScheduler, node_axis: str,
         b = bucket_by_dest(agg, co.request_starts(agg), packed, dest,
                            n_dest, min(agg.capacity, cb),
                            min(m * rdcap, cb))
-        rx = (a2a(b.offsets), a2a(b.lengths), a2a(b.counts), a2a(b.data))
+        wire, cst = enc(b.data, cst)
+        rx = ((a2a(b.offsets), a2a(b.lengths), a2a(b.counts))
+              + tuple(a2a(p) for p in wire))
         return rx, (drop_rank_r, drop_rank_e,
                     b.dropped_requests + drop_agg_r, b.dropped_elems,
-                    merged.count, agg.count)
+                    merged.count, agg.count), cst
 
-    drain = _make_drain(base0, cb, (lagg_axis,), data.dtype)
+    drain = _make_drain(base0, cb, (lagg_axis,), data.dtype, decode=dec)
     buf, ex_acc, dr_acc = _run_rounds(
         sched.n_rounds, dl, data.dtype, exchange, drain, 6, 1,
-        _effective_depth(pipeline, depth))
+        _effective_depth(pipeline, depth), codec_state=cstate0)
     (drop_rank_r, drop_rank_e, drop_agg_r, drop_agg_e,
      n_before, n_after) = ex_acc
     return buf, {
@@ -388,13 +446,18 @@ def exchange_rounds_read(sched: RoundScheduler, node_axis: str,
                          r: RequestList, starts: jax.Array,
                          file_shard: jax.Array, data_cap: int,
                          pipeline: bool = False,
-                         depth: int | None = None) -> jax.Array:
+                         depth: int | None = None,
+                         slow_hop_codec: str | None = None) -> jax.Array:
     """Round loop of the collective read: per round, aggregators
     broadcast one ``cb``-sized window over the slow axis and every rank
     gathers the elements of its requests falling in that window. Peak
     per-rank buffering is ``n_nodes * cb`` instead of ``file_len``.
     ``depth=k`` / ``pipeline=True`` run the window ring: the broadcast
     of window t overlaps the scatters of the k-1 carried older windows.
+    ``slow_hop_codec`` encodes each aggregator's window before the
+    slow-axis broadcast and decodes after (per-window, residual-free:
+    a broadcast repeats nothing, so error feedback has nothing to
+    correct — ``ef-int8`` here is plain per-window quantization).
     """
     n_dest, cb, dl = sched.n_aggregators, sched.cb, sched.domain_len
     cap = r.capacity
@@ -406,9 +469,20 @@ def exchange_rounds_read(sched: RoundScheduler, node_axis: str,
     fpos = jnp.where(live, fpos, 0)
     dest, wloc = fpos // dl, fpos % dl
 
+    enc, dec, _ = _codec_hooks(slow_hop_codec, file_shard.dtype, (cb,))
+
     def fetch(t):
         win = lax.dynamic_slice_in_dim(file_shard, t * cb, cb)
-        return lax.all_gather(win, node_axis, axis=0, tiled=True)
+        if slow_hop_codec is None:
+            return lax.all_gather(win, node_axis, axis=0, tiled=True)
+        parts, _ = enc(win, ())      # broadcast: no residual to carry
+        gathered = tuple(
+            lax.all_gather(p, node_axis, axis=0, tiled=False)
+            if p.ndim == 0 else
+            lax.all_gather(p, node_axis, axis=0,
+                           tiled=True).reshape(n_dest, *p.shape)
+            for p in parts)
+        return (dec(gathered).astype(file_shard.dtype).reshape(-1))
 
     def scatter(t, out, allw):
         active = live & (wloc // cb == t)
@@ -441,7 +515,8 @@ def peak_aggregator_buffer_elems(data_cap: int, n_nodes: int,
                                  ranks_per_node: int, domain_len: int,
                                  cb_buffer_size: int | None,
                                  pipeline: bool = False,
-                                 pipeline_depth: int | None = None) -> dict:
+                                 pipeline_depth: int | None = None,
+                                 slow_hop_codec: str | None = None) -> dict:
     """Static receive-side buffer sizes (elements) of the write paths.
 
     ``single_shot`` is the flattened payload stack after the slow-axis
@@ -460,11 +535,19 @@ def peak_aggregator_buffer_elems(data_cap: int, n_nodes: int,
     of ``data_cap``. Stage 1 is NOT multiplied by the ring depth: the
     gather is produced and consumed inside one exchange step, so only
     one is ever live — only the post-``all_to_all`` carry rings.
+    ``slow_hop_codec`` scales the in-flight a2a windows by the codec's
+    static wire width (``Codec.jax_wire_overhead`` — e.g. rle rings
+    values AND int32 positions, 2x; XLA buffers cannot shrink, so the
+    RING memory pays the wire format even though the WIRE volume the
+    cost model discounts is smaller).
     """
+    wire = (codec_mod.get_codec(slow_hop_codec).jax_wire_overhead
+            if slow_hop_codec is not None else 1.0)
     single = n_nodes * ranks_per_node * data_cap + domain_len
     cb = cb_buffer_size if cb_buffer_size is not None else domain_len
     in_flight = _effective_depth(pipeline, pipeline_depth)
-    rounds = n_nodes * min(data_cap, cb) * in_flight + cb + domain_len
+    rounds = (math.ceil(n_nodes * min(data_cap, cb) * wire)
+              * in_flight + cb + domain_len)
     return {
         "single_shot": single,
         "rounds": rounds,

@@ -22,9 +22,10 @@ is a 1-round schedule and runs through the same ring (the round engine
 with one window IS the single shot — asserted byte-identical by
 ``repro/testing/rounds_checks.py`` long before the paths merged).
 
-Adding a per-round transform (e.g. the ROADMAP's slow-hop compression)
-means wrapping the ``exchange`` closure inside ``core.rounds`` — both
-schedules and every depth inherit it; see ARCHITECTURE.md.
+The slow-hop codec (``plan.slow_hop_codec``, ``core.codec``) is such a
+per-round transform, wrapped around the ``exchange``/``drain`` pair
+inside ``core.rounds`` — both schedules and every depth inherit it;
+see ARCHITECTURE.md § "The slow-hop codec".
 """
 from __future__ import annotations
 
@@ -63,7 +64,8 @@ def _write_shard_fn(plan: IOPlan, use_kernels: bool,
         shard, st = rounds.exchange_rounds_write_tam(
             sched, node, lagg, lmem, r, starts, data,
             coalesce_cap=plan.coalesce_cap, use_kernels=use_kernels,
-            depth=plan.pipeline_depth)
+            depth=plan.pipeline_depth,
+            slow_hop_codec=plan.slow_hop_codec)
         lmem_size = axis_size(lmem)
         all_axes = (node, lagg, lmem)
         stats = {
@@ -85,7 +87,8 @@ def _write_shard_fn(plan: IOPlan, use_kernels: bool,
 
     shard, st = rounds.exchange_rounds_write(
         sched, node, (lagg, lmem), r, starts, data,
-        depth=plan.pipeline_depth)
+        depth=plan.pipeline_depth,
+        slow_hop_codec=plan.slow_hop_codec)
     stats = {
         "dropped_requests": lax.psum(st["dropped_requests"],
                                      (node, lagg, lmem)),
@@ -102,7 +105,8 @@ def _read_shard_fn(plan: IOPlan, offsets, lengths, count, file_shard):
     starts = co.request_starts(r)
     out = rounds.exchange_rounds_read(
         plan.scheduler(), node, r, starts, file_shard.reshape(-1),
-        plan.data_cap, depth=plan.pipeline_depth)
+        plan.data_cap, depth=plan.pipeline_depth,
+        slow_hop_codec=plan.slow_hop_codec)
     return out[None]
 
 

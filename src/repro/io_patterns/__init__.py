@@ -1,3 +1,4 @@
 from repro.io_patterns.generators import (  # noqa: F401
     btio_pattern, e3sm_f_pattern, e3sm_g_pattern, s3d_pattern,
+    sparse_checkpoint_pattern,
 )

@@ -73,6 +73,34 @@ def btio_pattern(n_ranks: int, n: int = 64, vars_: int = 4, seed: int = 2):
     return out
 
 
+def sparse_checkpoint_pattern(n_ranks: int, pages_per_rank: int = 8,
+                              page_bytes: int = 2048,
+                              zero_page_fraction: float = 0.75,
+                              seed: int = 7):
+    """Sparse checkpoint pages: each rank owns a contiguous run of
+    fixed-size pages of which ``zero_page_fraction`` are ENTIRELY zero
+    (pruned weights, zero-initialized optimizer slots, padding) — the
+    workload the slow-hop zero-run codec exists for. The zero pages are
+    page-aligned runs far longer than ``codec.RLE_MIN_RUN``, so the
+    achieved wire ratio tracks ``1 / (1 - zero_page_fraction)`` and the
+    modeled-vs-measured agreement is CI-gated
+    (``benchmarks/check_regression.py``)."""
+    rng0 = np.random.default_rng(seed)
+    out = []
+    for r in range(n_ranks):
+        offs = ((np.arange(pages_per_rank, dtype=np.int64)
+                 + r * pages_per_rank) * page_bytes)
+        lens = np.full(pages_per_rank, page_bytes, np.int64)
+        pages = np.zeros((pages_per_rank, page_bytes), np.uint8)
+        live = rng0.random(pages_per_rank) >= zero_page_fraction
+        n_live = int(live.sum())
+        if n_live:
+            pages[live] = rng0.integers(
+                1, 255, size=(n_live, page_bytes), dtype=np.uint8)
+        out.append((offs, lens, pages.reshape(-1)))
+    return out
+
+
 def s3d_pattern(n_ranks: int, n: int = 32, seed: int = 3):
     """Block-block-block 3D partition; 4 checkpoint variables."""
     side = int(round(n_ranks ** (1 / 3)))

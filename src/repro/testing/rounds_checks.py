@@ -19,8 +19,14 @@ reads (serial, pipelined, and depth-k) return every rank's payload;
 and a deliberately overflowed round bucket reports nonzero
 ``dropped_elems`` instead of failing silently. The spanning pattern
 crosses the file-domain boundary, exercising the split-at-domain
-handling (those requests were silently truncated before PR 2). Exits
-nonzero on any failure.
+handling (those requests were silently truncated before PR 2).
+
+Slow-hop codec: with ``slow_hop_codec="rle"`` (the lossless zero-run
+wire transform wrapped around the slow-axis ``all_to_all`` inside the
+round engine) the SAME byte-identity must hold — swept over ring
+depths {1, 2, 4} x round counts {1, 2, 5} for two-phase, at the
+5-round cb for TAM, plus an rle read — because a lossless codec may
+change the wire, never the file. Exits nonzero on any failure.
 """
 import numpy as np
 import jax
@@ -166,6 +172,23 @@ def main():
     readers_k = {k: jax.jit(make_twophase_read(
         mesh, layout, replace(base, cb_buffer_size=32, pipeline=True,
                               pipeline_depth=k))) for k in DEPTHS}
+    # slow-hop codec sweep: rle across depths {1, 2, 4} x all three
+    # round counts for two-phase, TAM at the 5-round cb, one rle read
+    CODEC_DEPTHS = (1, 2, 4)
+    coded = {}
+    for cb in CBS:
+        for k in CODEC_DEPTHS:
+            cfgc = replace(base, cb_buffer_size=cb, pipeline=k > 1,
+                           pipeline_depth=k, slow_hop_codec="rle")
+            coded[("twophase", cb, k)] = jax.jit(
+                make_twophase_write(mesh, layout, cfgc))
+    for k in CODEC_DEPTHS:
+        cfgc = replace(base, cb_buffer_size=32, pipeline=k > 1,
+                       pipeline_depth=k, slow_hop_codec="rle")
+        coded[("tam", 32, k)] = jax.jit(make_tam_write(mesh, layout, cfgc))
+    reader_rle = jax.jit(make_twophase_read(
+        mesh, layout, replace(base, cb_buffer_size=32, pipeline=True,
+                              pipeline_depth=2, slow_hop_codec="rle")))
 
     rng = np.random.default_rng(0)
     patterns = {"mixed": mixed_pattern(rng),
@@ -232,6 +255,20 @@ def main():
                                         D[p][:L[p].sum()])
                          for p in range(P_RANKS))
                 check(f"{pname}/twophase/read_depth{k}_rounds5", ok)
+            for (mname, cb, k), fn in coded.items():
+                f, s = fn(O, L, C, D)
+                tag = f"{pname}/{mname}/rle_depth{k}_rounds{160 // cb}"
+                check(f"{tag}_vs_ref",
+                      np.array_equal(np.asarray(f).reshape(-1), ref))
+                check(f"{tag}_no_drops",
+                      int(s["dropped_requests"]) == 0
+                      and int(s["dropped_elems"]) == 0)
+            got = np.asarray(reader_rle(O, L, C,
+                                        jnp.asarray(ref).reshape(2, -1)))
+            ok = all(np.array_equal(got[p][:L[p].sum()],
+                                    D[p][:L[p].sum()])
+                     for p in range(P_RANKS))
+            check(f"{pname}/twophase/read_rle_rounds5", ok)
 
     # overflow observability: one rank pushes 2x identical 32-element
     # requests into one 32-element window -> 64 elems > the round

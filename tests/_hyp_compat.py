@@ -2,7 +2,20 @@
 ``given``/``settings``/``st`` are re-exported; when it is missing the
 property tests are skipped individually while the plain unit tests in
 the same module keep running (the seed suite failed collection on this
-import)."""
+import).
+
+The stub's ``given`` both ATTACHES a skip mark and RAISES
+``pytest.skip`` at call time. The mark alone is fragile: it lives in
+function attributes, so any later decorator that re-wraps the function
+without copying them silently drops it and the test body runs with
+``None`` strategy arguments — typically "passing" without testing
+anything, which is exactly the local/CI discrepancy this shim must
+keep visible (CI asserts hypothesis is importable and fails on any
+"hypothesis not installed" skip; locally the same tests must say
+SKIPPED with that reason, never PASSED).
+"""
+import functools
+
 import pytest
 
 try:
@@ -10,6 +23,7 @@ try:
     HAVE_HYPOTHESIS = True
 except ImportError:  # pragma: no cover - depends on environment
     HAVE_HYPOTHESIS = False
+    _REASON = "hypothesis not installed"
 
     class _Strategies:
         def __getattr__(self, name):
@@ -18,7 +32,17 @@ except ImportError:  # pragma: no cover - depends on environment
     st = _Strategies()
 
     def given(*_a, **_k):
-        return pytest.mark.skip(reason="hypothesis not installed")
+        def deco(f):
+            @functools.wraps(f)
+            def skipper(*args, **kwargs):
+                pytest.skip(_REASON)
+            # wraps() copies __wrapped__, which would make pytest
+            # introspect the ORIGINAL signature and demand fixtures
+            # named after the hypothesis arguments — drop it so the
+            # stub collects as a plain zero-fixture test
+            del skipper.__wrapped__
+            return pytest.mark.skip(reason=_REASON)(skipper)
+        return deco
 
     def settings(*_a, **_k):
         return lambda f: f

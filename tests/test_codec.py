@@ -1,0 +1,274 @@
+"""Slow-hop codec subsystem: byte-exact round trips for every lossless
+codec (hypothesis property + pinned edge cases), the error-feedback
+int8 convergence bound, registry/plan wiring, the cost-model discount,
+and the host executor's measured compression ratio on the
+sparse-checkpoint workload (the acceptance floor CI also gates)."""
+import numpy as np
+import pytest
+
+from _hyp_compat import given, settings, st
+
+from repro.checkpoint.host_io import HostCollectiveIO
+from repro.core import codec as codec_mod
+from repro.core import cost_model as cm
+from repro.core import twophase
+from repro.core.codec import get_codec, lossless_codecs, zero_fraction
+from repro.core.domains import FileLayout
+from repro.core.plan import (IOConfig, compile_plan,
+                             resolve_slow_hop_codec)
+from repro.io_patterns import sparse_checkpoint_pattern
+
+
+# ---------------------------------------------------------------------------
+# lossless byte codecs: exact round trip
+# ---------------------------------------------------------------------------
+
+EDGE_WINDOWS = (
+    b"",                                   # empty
+    b"\x00",                               # single zero
+    b"\x07",                               # single literal
+    b"\x00" * 4096,                        # all-zero page
+    bytes(range(1, 256)) * 4,              # no zeros at all
+    b"\x00" * 3 + b"abc" + b"\x00" * 100,  # short + long zero runs
+    (b"\x00" * codec_mod.RLE_MIN_RUN + b"x") * 7,   # runs at threshold
+    (b"\x00" * (codec_mod.RLE_MIN_RUN - 1) + b"x") * 7,  # just below
+)
+
+
+@pytest.mark.parametrize("name", lossless_codecs())
+@pytest.mark.parametrize("window", EDGE_WINDOWS, ids=range(len(EDGE_WINDOWS)))
+def test_lossless_roundtrip_edges(name, window):
+    c = get_codec(name)
+    buf = np.frombuffer(window, np.uint8)
+    assert np.array_equal(c.decode_bytes(c.encode_bytes(buf)), buf)
+
+
+@settings(max_examples=120, deadline=None)
+@given(st.binary(min_size=0, max_size=4096), st.integers(0, 100))
+def test_lossless_roundtrip_property(blob, zero_pct):
+    """EVERY lossless codec round-trips arbitrary uint8 windows —
+    including hypothesis-found adversarial zero-run placements
+    (``zero_pct`` rewrites a prefix of the blob to zeros so all-zero
+    and zero-dominated windows are routinely hit)."""
+    for name in lossless_codecs():
+        c = get_codec(name)
+        buf = np.frombuffer(blob, np.uint8).copy()
+        buf[:buf.size * zero_pct // 100] = 0
+        wire = c.encode_bytes(buf)
+        assert np.array_equal(c.decode_bytes(wire), buf), name
+
+
+def test_rle_compresses_sparse_and_bounds_incompressible():
+    rle = get_codec("rle")
+    sparse = np.zeros(1 << 16, np.uint8)
+    sparse[::997] = 7                       # isolated literals
+    assert sparse.size / rle.encode_bytes(sparse).size > 2.0
+    dense = np.random.default_rng(0).integers(1, 256, 1 << 16,
+                                              dtype=np.uint8)
+    overhead = rle.encode_bytes(dense).size - dense.size
+    assert overhead <= codec_mod.RLE_HEADER_BYTES + codec_mod.RLE_RECORD_BYTES
+
+
+def test_rle_jax_roundtrip_exact():
+    import jax.numpy as jnp
+    rle = get_codec("rle")
+    rng = np.random.default_rng(3)
+    for dtype in (np.int32, np.float32):
+        data = rng.integers(0, 4, size=(6, 37)).astype(dtype)
+        parts, st_ = rle.jax_encode(jnp.asarray(data), ())
+        out = rle.jax_decode(parts)
+        assert st_ == ()
+        assert np.array_equal(np.asarray(out), data)
+    # 1-D (the read-path window shape)
+    w = jnp.asarray(rng.integers(0, 3, size=41).astype(np.float32))
+    parts, _ = rle.jax_encode(w, ())
+    assert np.array_equal(np.asarray(rle.jax_decode(parts)),
+                          np.asarray(w))
+
+
+# ---------------------------------------------------------------------------
+# error-feedback int8: convergence
+# ---------------------------------------------------------------------------
+
+def test_ef_int8_accumulated_error_bounded():
+    """EF telescopes: sum_t decode_t == sum_t x_t - residual_T, so the
+    accumulated decode error over many rounds stays bounded by ONE
+    round's quantization error (the 5e-2 relative band spmd_checks uses
+    for compressed_psum) instead of growing with the round count."""
+    import jax.numpy as jnp
+    ef = get_codec("ef-int8")
+    rng = np.random.default_rng(11)
+    rounds = 64
+    xs = rng.normal(size=(rounds, 4, 33)).astype(np.float32)
+    res = ef.jax_init_state(xs[0].shape, jnp.float32)
+    sent = np.zeros_like(xs[0])
+    for t in range(rounds):
+        wire, res = ef.jax_encode(jnp.asarray(xs[t]), res)
+        sent += np.asarray(ef.jax_decode(wire))
+    err = np.abs(sent - xs.sum(0)).max()
+    scale = np.abs(xs.sum(0)).max()
+    assert err / scale < 5e-2
+    # and the bound really is ONE round's worth: the residual equals
+    # the missing mass exactly
+    assert np.allclose(sent + np.asarray(res), xs.sum(0), atol=1e-4)
+
+
+def test_ef_int8_requires_float():
+    ef = get_codec("ef-int8")
+    with pytest.raises(TypeError):
+        ef.jax_init_state((4, 8), np.int32)
+    with pytest.raises(TypeError):
+        ef.encode_bytes(np.zeros(8, np.uint8))
+
+
+def test_compressed_psum_consumes_the_codec(monkeypatch):
+    """hierarchical._int8_encode/_decode are now aliases of the codec's
+    arithmetic — one implementation, two consumers."""
+    import jax.numpy as jnp
+    from repro.core import hierarchical as h
+    x = jnp.asarray(np.random.default_rng(0)
+                    .normal(size=17).astype(np.float32))
+    q, scale = h._int8_encode(x)
+    q2, scale2 = codec_mod.int8_encode(x)
+    assert np.array_equal(np.asarray(q), np.asarray(q2))
+    assert np.allclose(np.asarray(h._int8_decode(q, scale)),
+                       np.asarray(codec_mod.int8_decode(q2, scale2)))
+
+
+# ---------------------------------------------------------------------------
+# registry + plan wiring
+# ---------------------------------------------------------------------------
+
+def test_registry_unknown_codec_dies_at_plan_time():
+    with pytest.raises(ValueError, match="registered"):
+        get_codec("lz77")
+    layout = FileLayout(stripe_size=1024, stripe_count=4, file_len=1 << 16)
+    cfg = IOConfig(req_cap=64, data_cap=4096, slow_hop_codec="lz77")
+    with pytest.raises(ValueError, match="registered"):
+        compile_plan(layout, cfg, n_aggregators=4, n_nodes=4, n_ranks=16)
+
+
+def test_plan_carries_resolved_codec_and_identity_holds():
+    layout = FileLayout(stripe_size=1024, stripe_count=4, file_len=1 << 16)
+    cfg = IOConfig(req_cap=64, data_cap=4096, cb_buffer_size=4096,
+                   slow_hop_codec="rle")
+    p_spmd = twophase.plan_for(layout, cfg, n_nodes=4, n_ranks=16)
+    assert p_spmd.slow_hop_codec == "rle"
+    host = HostCollectiveIO(n_ranks=16, n_nodes=4, stripe_size=1024,
+                            stripe_count=4)
+    p_host = host.plan_for(method="twophase", cb_bytes=4096,
+                           file_len=1 << 16, req_cap=64, data_cap=4096,
+                           slow_hop_codec="rle")
+    assert p_spmd == p_host          # codec is part of the plan identity
+    assert hash(p_spmd) == hash(p_host)
+
+
+def test_auto_resolution_follows_the_modeled_gain():
+    # compressible workload, big file: saving >> encode cost -> on
+    w_on = cm.Workload(P=1024, nodes=64, P_G=56, k=100.0,
+                       total_bytes=float(64 << 30), slow_hop_ratio=4.0)
+    assert resolve_slow_hop_codec(w_on) == "rle"
+    assert cm.slow_hop_codec_gain(w_on) > 0
+    # incompressible: ratio ~1 -> off, whatever the size
+    w_off = cm.with_codec(w_on, 1.0)
+    assert resolve_slow_hop_codec(w_off) is None
+    # ratio > 1 but the scan costs more than the wire saves -> off
+    slow_codec = cm.Machine(codec_bw=1e6)
+    assert cm.slow_hop_codec_gain(w_on, slow_codec) < 0
+    assert resolve_slow_hop_codec(w_on, slow_codec) is None
+    layout = FileLayout(stripe_size=1 << 20, stripe_count=56,
+                        file_len=56 << 20)
+    cfg = IOConfig(req_cap=64, data_cap=4096, slow_hop_codec="auto")
+    plan = compile_plan(layout, cfg, n_aggregators=56, n_nodes=64,
+                        n_ranks=1024, workload=w_on)
+    assert plan.slow_hop_codec == "rle"
+    plan_off = compile_plan(layout, cfg, n_aggregators=56, n_nodes=64,
+                            n_ranks=1024, workload=w_off)
+    assert plan_off.slow_hop_codec is None
+
+
+def test_peak_buffer_charges_the_wire_width():
+    """The ring memory bound pays the codec's static wire format (XLA
+    buffers cannot shrink): rle rings values + int32 positions (2x),
+    ef-int8 rings less than raw f32."""
+    from repro.core.rounds import peak_aggregator_buffer_elems
+    kw = dict(data_cap=4096, n_nodes=8, ranks_per_node=16,
+              domain_len=1 << 20, cb_buffer_size=8192, pipeline_depth=3)
+    base = peak_aggregator_buffer_elems(**kw)
+    rle = peak_aggregator_buffer_elems(**kw, slow_hop_codec="rle")
+    ef = peak_aggregator_buffer_elems(**kw, slow_hop_codec="ef-int8")
+    window = 8 * 4096 * 3                       # n_nodes * min(dc,cb) * k
+    assert rle["rounds"] == base["rounds"] + window          # 2x wire
+    assert ef["rounds"] < base["rounds"]                     # int8 wire
+    assert rle["tam_stage1_rounds"] == base["tam_stage1_rounds"]  # raw
+
+
+def test_cost_model_discount_and_charge():
+    w = cm.Workload(P=1024, nodes=64, P_G=56, k=100.0,
+                    total_bytes=float(8 << 30))
+    base = cm.twophase_cost(w)
+    on = cm.twophase_cost(cm.with_codec(w, 4.0))
+    assert base.codec == 0.0 and on.codec > 0.0
+    assert on.inter_comm < base.inter_comm      # beta volume discount
+    # the discount reaches the joint cb/depth tuner's totals — on a
+    # COMM-bound machine (fast disks): when io dominates the pipelined
+    # span hides the comm saving and the model rightly reports no win
+    fast_io = cm.Machine(io_bw=1e12)
+    _, _, tot_b = cm.optimal_cb_and_depth(w, fast_io)
+    _, _, tot_o = cm.optimal_cb_and_depth(cm.with_codec(w, 4.0), fast_io)
+    assert tot_o < tot_b
+
+
+# ---------------------------------------------------------------------------
+# host executor: measured ratio + byte identity (the acceptance floor)
+# ---------------------------------------------------------------------------
+
+def _sparse_io(P=16):
+    return HostCollectiveIO(n_ranks=P, n_nodes=4, stripe_size=1024,
+                            stripe_count=4)
+
+
+def test_host_sparse_checkpoint_ratio_above_two(tmp_path):
+    P = 16
+    reqs = sparse_checkpoint_pattern(P)
+    io = _sparse_io(P)
+    file_len = int(max((o + ln).max() for o, ln, _ in reqs))
+    t_off = io.write(reqs, str(tmp_path / "off"), method="tam",
+                     local_aggregators=8, cb_bytes=2048, pipeline_depth=2)
+    t_on = io.write(reqs, str(tmp_path / "on"), method="tam",
+                    local_aggregators=8, cb_bytes=2048, pipeline_depth=2,
+                    slow_hop_codec="rle")
+    # byte identity: the codec changes the wire, never the file
+    assert np.array_equal(io.read_file(str(tmp_path / "off"), file_len),
+                          io.read_file(str(tmp_path / "on"), file_len))
+    assert t_on.slow_hop_codec == "rle"
+    assert t_on.slow_hop_compression_ratio > 2.0
+    assert t_on.slow_hop_wire_bytes < t_on.slow_hop_raw_bytes
+    assert t_on.codec > 0.0
+    assert t_off.slow_hop_codec is None
+    assert t_off.slow_hop_compression_ratio == 1.0
+    # modeled vs measured ratio agreement (the CI gate's bound)
+    zf = zero_fraction(d for _, _, d in reqs)
+    modeled = get_codec("rle").modeled_ratio(
+        zf, sum(int(ln.sum()) for _, ln, _ in reqs))
+    assert 0.5 <= modeled / t_on.slow_hop_compression_ratio <= 2.0
+
+
+def test_host_auto_enables_on_sparse_disables_on_dense(tmp_path):
+    P = 16
+    io = _sparse_io(P)
+    t = io.write(sparse_checkpoint_pattern(P), str(tmp_path / "a"),
+                 method="tam", local_aggregators=8, cb_bytes=2048,
+                 slow_hop_codec="auto")
+    assert t.slow_hop_codec == "rle"
+    from repro.io_patterns import e3sm_g_pattern
+    t2 = io.write(e3sm_g_pattern(P), str(tmp_path / "b"), method="tam",
+                  local_aggregators=8, slow_hop_codec="auto")
+    assert t2.slow_hop_codec is None
+
+
+def test_host_rejects_lossy_codec(tmp_path):
+    io = _sparse_io()
+    with pytest.raises(ValueError, match="lossy"):
+        io.write(sparse_checkpoint_pattern(16), str(tmp_path / "x"),
+                 slow_hop_codec="ef-int8")

@@ -199,9 +199,12 @@ def test_optimal_depth_uniform_prefers_smallest():
 # host executor: depth-k byte identity (k x rounds cross), auto depth
 # ---------------------------------------------------------------------------
 
-def test_host_depth_k_byte_identity(tmp_path):
+@pytest.mark.parametrize("slow_hop_codec", [None, "rle"])
+def test_host_depth_k_byte_identity(tmp_path, slow_hop_codec):
     """k in {1, 2, 3, 4} x round counts {1, 2, 5}: the ring is
-    byte-identical to serial on the host executor for both schedules."""
+    byte-identical to serial on the host executor for both schedules —
+    with and without the lossless slow-hop codec (a codec changes the
+    wire, never the file)."""
     P = 16
     reqs = e3sm_g_pattern(P)
     io = HostCollectiveIO(n_ranks=P, n_nodes=4, stripe_size=1024,
@@ -221,12 +224,14 @@ def test_host_depth_k_byte_identity(tmp_path):
             for k in (1, 2, 3, 4):
                 t = io.write(reqs, str(tmp_path / f"k{k}cb{cb}_{method}"),
                              method=method, local_aggregators=la,
-                             cb_bytes=cb, pipeline_depth=k)
+                             cb_bytes=cb, pipeline_depth=k,
+                             slow_hop_codec=slow_hop_codec)
                 got = io.read_file(str(tmp_path / f"k{k}cb{cb}_{method}"),
                                    file_len)
                 assert np.array_equal(got, ref), (method, cb, k)
                 assert t.pipeline_depth == min(k, t.rounds_executed)
                 assert t.total <= t0.total + t.inter_comm  # sane scale
+                assert t.slow_hop_codec == slow_hop_codec
                 seen_rounds.add(t.rounds_executed)
         assert seen_rounds == {1, 2, 5}         # the cross was real
 
