@@ -25,6 +25,16 @@ and exits nonzero when:
   and measured ratios disagree by more than 2x in either direction
   (the ``"auto"`` resolution and ``optimal_cb`` discounts run on the
   modeled ratio — if it drifts from reality the autotuning is lying).
+* the session columns fail their bounds (baseline-independent): the
+  steady-state write COST (modeled total + real planning time) must be
+  strictly below the first write's (plan compile amortized — the whole
+  point of a session), the steady-state MODELED total must never
+  exceed the first write's (the session reverts trials that measured
+  worse, so feedback can only help), the steady state must actually
+  reuse a cached plan, and ``placement="auto"`` must never be
+  modeled-worse than ``spread``/``packed``/placement-off by more than
+  5% on any gated workload (auto is an argmin over the measured
+  node-byte matrix — if it loses, the wiring broke).
 
 The model is deterministic, so the comparison is stable; the threshold
 exists to absorb intentional re-calibrations of ``cost_model.Machine``
@@ -105,6 +115,37 @@ def check(current: dict, baseline: dict,
             errors.append(
                 f"codec/sparse_ckpt: modeled ratio {modeled:.3f}x and "
                 f"measured ratio {measured:.3f}x disagree by more than 2x")
+
+    # ---- session bounds (within the current artifact) ----------------
+    session = current.get("session", {})
+    if not session:
+        errors.append("no session entries found in the artifact")
+    for wl, e in session.items():
+        if e["steady_cost_s"] >= e["first_cost_s"]:
+            errors.append(
+                f"session/{wl}: steady-state cost {e['steady_cost_s']:.4g}s "
+                f"does not beat the first write's {e['first_cost_s']:.4g}s "
+                "(plan compile no longer amortized)")
+        if e["steady_total_s"] > e["first_total_s"] * (1 + 1e-9):
+            errors.append(
+                f"session/{wl}: steady-state modeled total "
+                f"{e['steady_total_s']:.4g}s exceeds the first write's "
+                f"{e['first_total_s']:.4g}s — measured feedback made it "
+                "WORSE (the revert-losing-trials arbiter broke)")
+        if not e.get("plan_reused"):
+            errors.append(
+                f"session/{wl}: steady-state write did not reuse a "
+                f"cached plan (source {e['writes'][-1]['source']!r})")
+        pc = e.get("placement", {})
+        if pc:
+            bound = min(pc["spread"], pc["packed"], pc["off"]) * 1.05
+            if pc["auto"] > bound:
+                errors.append(
+                    f"session/{wl}: placement='auto' "
+                    f"({pc['auto']:.4g}s) is worse than the best of "
+                    f"spread/packed/off ({bound / 1.05:.4g}s) by > 5%")
+        else:
+            errors.append(f"session/{wl}: no placement columns")
 
     # ---- auto depth agrees with the measured best somewhere ----------
     agreements, checked = [], []

@@ -87,7 +87,9 @@ def save_checkpoint(tree, path: str | Path, *, step: int = 0,
                     cb_bytes: int | str | None = None,
                     pipeline: bool = False,
                     pipeline_depth: int | str | None = None,
-                    slow_hop_codec: str | None = None
+                    slow_hop_codec: str | None = None,
+                    placement=None,
+                    session=None
                     ) -> tuple[dict, IOTimings]:
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
@@ -99,7 +101,8 @@ def save_checkpoint(tree, path: str | Path, *, step: int = 0,
                        local_aggregators=local_aggregators,
                        cb_bytes=cb_bytes, pipeline=pipeline,
                        pipeline_depth=pipeline_depth,
-                       slow_hop_codec=slow_hop_codec)
+                       slow_hop_codec=slow_hop_codec,
+                       placement=placement, session=session)
     manifest["stripe_size"] = io.stripe_size
     manifest["stripe_count"] = io.stripe_count
     (path.parent / (path.name + ".manifest.json")).write_text(
@@ -147,6 +150,12 @@ class CheckpointManager:
     slow_hop_codec: str | None = None  # lossless wire codec on the
     # LA -> GA hop (None = off, "auto" = enable when the modeled saving
     # beats the encode cost; sparse checkpoint pages compress well)
+    placement: str | tuple | None = None  # aggregator placement policy
+    # / permutation / "auto" (core.placement); None = off
+    session: object | None = None  # IOSession (core.session): repeated
+    # saves of the same state shape reuse the compiled plan and feed
+    # measured timings back into the "auto" knobs — the manager holds
+    # it so the cross-write loop survives across save() calls
     keep: int = 3
 
     def save(self, tree, step: int) -> IOTimings:
@@ -157,7 +166,8 @@ class CheckpointManager:
             method=self.method, local_aggregators=self.local_aggregators,
             cb_bytes=self.cb_bytes, pipeline=self.pipeline,
             pipeline_depth=self.pipeline_depth,
-            slow_hop_codec=self.slow_hop_codec)
+            slow_hop_codec=self.slow_hop_codec,
+            placement=self.placement, session=self.session)
         self._gc()
         return t
 

@@ -25,6 +25,7 @@ import threading
 
 import numpy as np
 
+from repro.core import placement as placement_mod
 from repro.core.codec import get_codec
 from repro.core.cost_model import Machine, optimal_depth, pipeline_span
 from repro.core.plan import IOPlan
@@ -127,7 +128,8 @@ def write_segment(path: str, seg: np.ndarray, cb_bytes: int | None,
 
 
 def execute_write(plan: IOPlan, machine: Machine, per_la, path: str, t,
-                  depth_request=None):
+                  depth_request=None, sender_nodes=None,
+                  n_nodes: int | None = None):
     """Run the inter-node exchange + I/O step of a write plan.
 
     per_la: the stage-1 output — per local aggregator (per rank for
@@ -153,6 +155,19 @@ def execute_write(plan: IOPlan, machine: Machine, per_la, path: str, t,
     encode+decode scan is charged at ``machine.codec_bw``, and the
     achieved raw/wire ratio is reported
     (``IOTimings.slow_hop_compression_ratio``).
+
+    sender_nodes: per ``per_la`` entry, the compute node the sender
+    lives on. When given (the placement-aware path — the caller
+    requested a ``placement``), the per-round incast is charged against
+    the PLACEMENT-INDUCED sender sets: a message whose sender shares
+    the serving aggregator's node (``plan.placement`` through the
+    canonical slot->node map, ``core.placement.node_of_slot``) moves at
+    the fast intra rates (``alpha_intra``/``beta_intra``, no incast
+    knee); the rest pay ``alpha_eff``/``beta_inter`` as before. The
+    measured per-(domain, sender-node) byte matrix is reported
+    (``IOTimings.node_bytes``) so a session can re-resolve
+    ``placement="auto"`` exactly. ``None`` keeps the legacy all-inter
+    accounting (bit-identical timings to the pre-placement executor).
     """
     m = machine
     stripe_count, cb = plan.n_aggregators, plan.cb
@@ -160,14 +175,27 @@ def execute_write(plan: IOPlan, machine: Machine, per_la, path: str, t,
     n_rounds = plan.n_rounds
     codec = get_codec(plan.slow_hop_codec) if plan.slow_hop_codec else None
     raw_total = wire_total = 0
+    ga_nodes = None
+    if sender_nodes is not None:
+        if n_nodes is None:
+            n_nodes = int(max(sender_nodes, default=0)) + 1
+        perm = (plan.placement if plan.placement is not None
+                else tuple(range(stripe_count)))
+        ga_nodes = [placement_mod.node_of_slot(perm[g], stripe_count,
+                                               n_nodes)
+                    for g in range(stripe_count)]
+        node_bytes = np.zeros((stripe_count, n_nodes), np.int64)
 
     # ---- inter-node: local aggregators -> global aggregators ---------
     ga_inbox: list[list] = [[] for _ in range(stripe_count)]
     ga_msgs = np.zeros((stripe_count, n_rounds), np.int64)
     ga_bytes = np.zeros((stripe_count, n_rounds), np.int64)
-    for offs, lens, packed in per_la:
+    ga_msgs_fast = np.zeros((stripe_count, n_rounds), np.int64)
+    ga_bytes_fast = np.zeros((stripe_count, n_rounds), np.int64)
+    for sender, (offs, lens, packed) in enumerate(per_la):
         if offs.size == 0:
             continue
+        s_node = sender_nodes[sender] if sender_nodes is not None else None
         owner = (offs // stripe_size) % stripe_count
         rnd = to_domain_local(offs, stripe_size, stripe_count) // cb
         starts = np.concatenate([[0], np.cumsum(lens)[:-1]])
@@ -175,14 +203,17 @@ def execute_write(plan: IOPlan, machine: Machine, per_la, path: str, t,
             sel = owner == g
             if not sel.any():
                 continue
+            fast = s_node is not None and ga_nodes[g] == s_node
             po = offs[sel]
             pl = lens[sel]
             pd = np.concatenate([packed[s:s + l] for s, l in
                                  zip(starts[sel], pl)])
             seg_starts = np.concatenate([[0], np.cumsum(pl)[:-1]])
+            if s_node is not None:
+                node_bytes[g, s_node] += int(pl.sum())
             for r in np.unique(rnd[sel]):
                 in_r = rnd[sel] == r
-                ga_msgs[g, r] += 1       # one (re)send per round
+                (ga_msgs_fast if fast else ga_msgs)[g, r] += 1
                 payload = int(pl[in_r].sum())
                 if codec is not None:
                     # one encode per byte: round r's slice is encoded
@@ -204,7 +235,8 @@ def execute_write(plan: IOPlan, machine: Machine, per_la, path: str, t,
                     raw_total += raw.size
                     wire_total += wire.size
                     payload = wire.size        # the wire moves encoded
-                ga_bytes[g, r] += payload + int(in_r.sum()) * PAIR_BYTES
+                (ga_bytes_fast if fast else ga_bytes)[g, r] += \
+                    payload + int(in_r.sum()) * PAIR_BYTES
             ga_inbox[g].append((po, pl, pd))
     t.rounds_executed = n_rounds
     if codec is not None:
@@ -212,13 +244,23 @@ def execute_write(plan: IOPlan, machine: Machine, per_la, path: str, t,
         t.slow_hop_raw_bytes = int(raw_total)
         t.slow_hop_wire_bytes = int(wire_total)
         t.codec = float(raw_total + wire_total) / m.codec_bw
-    t.messages_at_ga = int(ga_msgs.max(initial=0))
-    # per-round incast: a receiver with S concurrent senders pays
+    t.messages_at_ga = int((ga_msgs + ga_msgs_fast).max(initial=0))
+    if ga_nodes is not None:
+        t.placement = plan.placement
+        t.slow_hop_fast_bytes = int(ga_bytes_fast.sum())
+        t.slow_hop_slow_bytes = int(ga_bytes.sum())
+        t.node_bytes = tuple(tuple(int(b) for b in row)
+                             for row in node_bytes)
+    # per-round incast: a receiver with S concurrent SLOW senders pays
     # alpha_eff(S) each (cost_model refinement 2, applied to the
-    # single-shot exchange too so the timings are comparable);
-    # rounds serialize unless pipelined (accounted below).
-    alpha = np.vectorize(m.alpha_eff)(ga_msgs) * ga_msgs
-    comm_rounds = (alpha + m.beta_inter * ga_bytes).max(axis=0, initial=0)
+    # single-shot exchange too so the timings are comparable); the
+    # placement-induced FAST senders (same node as the serving
+    # aggregator) pay alpha_intra/beta_intra instead — no incast knee
+    # inside a node. Rounds serialize unless pipelined (below).
+    alpha = np.vectorize(m.alpha_eff)(ga_msgs) * ga_msgs \
+        + m.alpha_intra * ga_msgs_fast
+    comm_rounds = (alpha + m.beta_inter * ga_bytes
+                   + m.beta_intra * ga_bytes_fast).max(axis=0, initial=0)
     t.inter_comm = float(comm_rounds.sum())
 
     # ---- pipeline depth: the plan's pick, or re-resolved against the
@@ -245,6 +287,11 @@ def execute_write(plan: IOPlan, machine: Machine, per_la, path: str, t,
     if depth_request == "auto" and multi_window:
         depth, _ = optimal_depth(round_times=(comm_rounds, io_rounds))
     t.pipeline_depth = max(1, min(depth, n_rounds))  # executed in-flight
+    # measured per-round arrays: what a session feeds back into the
+    # next write's "auto" resolutions (cost_model.optimal_depth runs
+    # on exactly these)
+    t.comm_rounds = tuple(float(c) for c in comm_rounds)
+    t.io_rounds = tuple(float(i) for i in io_rounds)
 
     for g in range(stripe_count):
         write_segment(f"{path}.seg{g}", segs[g],

@@ -30,6 +30,7 @@ Cray.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 
 import numpy as np
@@ -41,6 +42,7 @@ from repro.core.cost_model import Machine, Workload, optimal_cb, with_codec
 from repro.core.domains import FileLayout
 from repro.core.plan import (IOConfig, IOPlan, compile_plan,
                              resolve_method, resolve_slow_hop_codec)
+from repro.core.session import IOSession  # noqa: F401 (re-export)
 
 
 @dataclass
@@ -68,6 +70,19 @@ class IOTimings:
     slow_hop_wire_bytes: int = 0   # payload bytes after encoding (what
     # the per-round incast beta actually charged)
     codec: float = 0.0             # encode+decode scan time (codec_bw)
+    placement: tuple | None = None  # executed aggregator placement
+    # (plan.placement; None = placement-off legacy accounting)
+    slow_hop_fast_bytes: int = 0   # slow-hop bytes that stayed on the
+    # serving aggregator's node under the placement (charged intra)
+    slow_hop_slow_bytes: int = 0   # slow-hop bytes that crossed nodes
+    node_bytes: tuple = ()         # measured per-(domain, sender-node)
+    # payload matrix — what a session feeds resolve_placement("auto")
+    comm_rounds: tuple = ()        # measured per-round exchange times
+    io_rounds: tuple = ()          # measured per-round drain times
+    plan_seconds: float = 0.0      # REAL wall-clock planning time (the
+    # cost a session amortizes; every other field is modeled seconds)
+    plan_source: str = "compiled"  # "compiled" | "session-hit" |
+    # "session-trial" (a measured-feedback replan being tried out)
 
     @property
     def comm(self) -> float:
@@ -101,11 +116,15 @@ class HostCollectiveIO:
     """
 
     def __init__(self, n_ranks: int, n_nodes: int, stripe_size: int,
-                 stripe_count: int, machine: Machine | None = None):
+                 stripe_count: int, machine: Machine | None = None,
+                 session: "IOSession | None" = None):
         assert n_ranks % n_nodes == 0
         self.n_ranks, self.n_nodes = n_ranks, n_nodes
         self.stripe_size, self.stripe_count = stripe_size, stripe_count
         self.machine = machine or Machine()
+        # cross-write plan cache + measured-feedback tuner; every write
+        # may also pass its own (write(session=...) overrides)
+        self.session = session
 
     # ------------------------------------------------------------------
     def _split_stripes(self, offs, lens, data):
@@ -156,6 +175,54 @@ class HostCollectiveIO:
                         slow_hop_ratio=ratio)
 
     # ------------------------------------------------------------------
+    def _ratio_codec(self, method, cb_bytes, pipeline_depth,
+                     slow_hop_codec):
+        """Which codec (if any) the measured-ratio zero scan should
+        model: the codec's own ``"auto"`` resolution, or a named codec
+        whose discount must feed another auto knob — otherwise the
+        O(total_bytes) scan is skipped entirely."""
+        any_auto = (method == "auto" or cb_bytes == "auto"
+                    or pipeline_depth == "auto")
+        return (slow_hop_codec
+                if slow_hop_codec == "auto"
+                or (slow_hop_codec is not None and any_auto)
+                else None)
+
+    @staticmethod
+    def _extent(rank_requests, default: int = 0) -> int:
+        """Last written byte of a request set (the layout fingerprint
+        everything extent-derived shares: the session key, the cb
+        candidate sweep, and the plan's file_len padding)."""
+        return max((int((o + ln).max()) for o, ln, _ in rank_requests
+                    if o.size), default=default)
+
+    def _cb_candidates(self, rank_requests) -> tuple[int, ...]:
+        """Stripe-aligned cb candidates for THIS request set's extent
+        (what ``auto_cb_bytes`` sweeps; a session stores them so a
+        measured re-resolution never re-derives the extent)."""
+        ext = self._extent(rank_requests, self.stripe_size)
+        n_str = -(-ext // self.stripe_size)
+        dom_bytes = -(-n_str // self.stripe_count) * self.stripe_size
+        cands, c = [], self.stripe_size
+        while c < dom_bytes:
+            cands.append(c)
+            c *= 2
+        cands.append(dom_bytes)
+        return tuple(cands)
+
+    def workload_for(self, rank_requests, *, method: str = "twophase",
+                     cb_bytes=None, pipeline: bool = False,
+                     pipeline_depth=None,
+                     slow_hop_codec: str | None = None) -> Workload:
+        """The measured workload a write with these knobs would resolve
+        its autos against (what a session stores alongside the plan)."""
+        pipe = pipeline or pipeline_depth is not None
+        return self._measured_workload(
+            rank_requests, pipe,
+            self._ratio_codec(method, cb_bytes, pipeline_depth,
+                              slow_hop_codec))
+
+    # ------------------------------------------------------------------
     def plan_for(self, *, method: str = "twophase",
                  cb_bytes: int | str | None = None,
                  pipeline: bool = False,
@@ -164,7 +231,9 @@ class HostCollectiveIO:
                  local_aggregators: int | None = None,
                  req_cap: int = 0, data_cap: int = 0,
                  coalesce_cap: int | None = None,
-                 slow_hop_codec: str | None = None) -> IOPlan:
+                 slow_hop_codec: str | None = None,
+                 placement=None, workload: Workload | None = None
+                 ) -> IOPlan:
         """Compile this writer's schedule — the host side of the
         plan-identity contract: given the same layout/config, this and
         the SPMD ``twophase.plan_for`` produce the SAME
@@ -184,18 +253,14 @@ class HostCollectiveIO:
         """
         pipe = pipeline or pipeline_depth is not None
         # the ratio estimate costs an O(total_bytes) zero scan — only
-        # pay it when something consumes it: the codec's own "auto"
-        # resolution, or a named codec whose discount must feed another
-        # auto knob (method / cb / depth)
-        any_auto = (method == "auto" or cb_bytes == "auto"
-                    or pipeline_depth == "auto")
-        ratio_codec = (slow_hop_codec
-                       if slow_hop_codec == "auto"
-                       or (slow_hop_codec is not None and any_auto)
-                       else None)
-        workload = (self._measured_workload(rank_requests, pipe,
-                                            ratio_codec)
-                    if rank_requests is not None else None)
+        # pay it when something consumes it (see _ratio_codec); a
+        # caller-supplied workload (the session's stored measurement)
+        # skips the scan entirely
+        if workload is None and rank_requests is not None:
+            workload = self._measured_workload(
+                rank_requests, pipe,
+                self._ratio_codec(method, cb_bytes, pipeline_depth,
+                                  slow_hop_codec))
         # codec resolves before any other auto: its beta discount /
         # encode cost must be visible to the method and cb tuners, and
         # a codec-off plan must not keep the measured ratio estimate
@@ -215,13 +280,16 @@ class HostCollectiveIO:
                 rank_requests, method=method,
                 local_aggregators=local_aggregators, pipeline=pipe,
                 workload=workload)
-        if cb_bytes is not None and cb_bytes % self.stripe_size:
-            raise ValueError("cb_bytes must be a stripe_size multiple")
+        if cb_bytes is not None and cb_bytes % self.stripe_size \
+                and self.stripe_size % cb_bytes:
+            # RoundScheduler's alignment rule: whole-stripe multiples
+            # or exact sub-stripe divisors (windows never straddle a
+            # stripe boundary either way)
+            raise ValueError("cb_bytes must align with stripe_size")
         if file_len is None:
             ext = self.stripe_size
             if rank_requests is not None:
-                ext = max((int((o + ln).max()) for o, ln, _ in rank_requests
-                           if o.size), default=self.stripe_size)
+                ext = self._extent(rank_requests, self.stripe_size)
             n_str = -(-ext // self.stripe_size)
             dom = -(-n_str // self.stripe_count) * self.stripe_size
             if cb_bytes is not None:       # whole number of windows
@@ -232,7 +300,10 @@ class HostCollectiveIO:
             cb_buffer_size=cb_bytes, pipeline=pipe,
             pipeline_depth=(pipeline_depth if pipeline_depth is not None
                             else 2),
-            slow_hop_codec=slow_hop_codec)
+            slow_hop_codec=slow_hop_codec,
+            placement=(tuple(placement)
+                       if isinstance(placement, (list, tuple))
+                       else placement))
         return compile_plan(
             FileLayout(stripe_size=self.stripe_size,
                        stripe_count=self.stripe_count, file_len=file_len),
@@ -247,7 +318,9 @@ class HostCollectiveIO:
               cb_bytes: int | str | None = None,
               pipeline: bool = False,
               pipeline_depth: int | str | None = None,
-              slow_hop_codec: str | None = None) -> IOTimings:
+              slow_hop_codec: str | None = None,
+              placement=None,
+              session: "IOSession | None" = None) -> IOTimings:
         """rank_requests: list of (offsets[int64], lengths[int64],
         payload[uint8]) per rank, offsets element=byte units here.
         method: "tam" | "twophase" | "auto" (cost-model pick at plan
@@ -284,15 +357,99 @@ class HostCollectiveIO:
         cost. Encoded sizes are what the per-round incast charges, and
         the achieved ratio is reported
         (``IOTimings.slow_hop_compression_ratio``).
+
+        placement: aggregator placement (``core.placement``): a policy
+        name ("packed" / "spread" / "node_balanced"), an explicit
+        permutation, or ``"auto"`` (cost-model argmin; a session
+        re-resolves it against the MEASURED per-(domain, sender-node)
+        byte matrix). With a placement, the per-round incast charges
+        the placement-induced sender sets: same-node messages move at
+        the intra rates, the rest pay ``alpha_eff``/``beta_inter`` —
+        bytes written are identical either way. ``None`` = off (legacy
+        all-inter accounting).
+
+        session: an :class:`~repro.core.session.IOSession` (defaults to
+        the writer's own). Repeated writes of the same (layout, config)
+        reuse the compiled plan (``IOTimings.plan_seconds`` ~ 0,
+        ``plan_source="session-hit"``) and every ``"auto"`` knob is
+        re-resolved ONCE against the previous write's measurements
+        (``plan_source="session-trial"``); thereafter the best plan by
+        measured total wins.
         """
         failed_aggregators = failed_aggregators or set()
-        plan = self.plan_for(
-            method=method, cb_bytes=cb_bytes, pipeline=pipeline,
-            pipeline_depth=(2 if pipeline_depth == "auto"
-                            else pipeline_depth),
-            rank_requests=rank_requests,
-            local_aggregators=local_aggregators,
-            slow_hop_codec=slow_hop_codec)
+        plan_t0 = time.perf_counter()
+        session = session if session is not None else self.session
+        plan, source, skey = None, "compiled", None
+        if session is not None:
+            extent = self._extent(rank_requests)
+            total = sum(int(ln.sum()) for _, ln, _ in rank_requests)
+            n_req = sum(int(o.size) for o, _, _ in rank_requests)
+            # sampled payload fingerprint: O(ranks) strided probe of
+            # zero-ness + content so same-shape payloads with different
+            # sparsity (the dimension slow_hop_codec="auto" tunes on)
+            # land in different entries instead of cross-contaminating
+            # one entry's measured feedback
+            fp = 0
+            for _, _, dd in rank_requests:
+                if dd.size:
+                    probe = dd[::max(1, dd.size // 16)][:17]
+                    fp = (fp * 1000003
+                          + int((probe == 0).sum()) * 8191
+                          + int(probe.astype(np.int64).sum())) \
+                        & 0xFFFFFFFFFFFF
+            # the Machine is part of the key: a shared session serving
+            # writers with different calibrations must not hand one
+            # writer a plan whose autos resolved under the other's
+            skey = (self.n_ranks, self.n_nodes, self.stripe_size,
+                    self.stripe_count, self.machine, extent, total,
+                    n_req, fp, method,
+                    cb_bytes, pipeline, pipeline_depth, slow_hop_codec,
+                    tuple(placement) if isinstance(placement,
+                                                   (list, tuple))
+                    else placement, local_aggregators)
+            kind, payload = session.begin_write(skey,
+                                                machine=self.machine)
+            if kind == "hit":
+                plan, source = payload, "session-hit"
+            elif kind == "trial":
+                plan = self.plan_for(
+                    method=payload["method"], cb_bytes=payload["cb_bytes"],
+                    pipeline=pipeline or payload["pipeline_depth"] > 1,
+                    pipeline_depth=payload["pipeline_depth"],
+                    rank_requests=rank_requests,
+                    local_aggregators=local_aggregators,
+                    slow_hop_codec=payload["slow_hop_codec"],
+                    placement=payload["placement"])
+                session.register_trial(skey, plan)
+                source = "session-trial"
+        if plan is None:
+            workload = (self.workload_for(
+                rank_requests, method=method, cb_bytes=cb_bytes,
+                pipeline=pipeline, pipeline_depth=pipeline_depth,
+                slow_hop_codec=slow_hop_codec)
+                if session is not None else None)
+            plan = self.plan_for(
+                method=method, cb_bytes=cb_bytes, pipeline=pipeline,
+                pipeline_depth=(2 if pipeline_depth == "auto"
+                                else pipeline_depth),
+                rank_requests=rank_requests,
+                local_aggregators=local_aggregators,
+                slow_hop_codec=slow_hop_codec, placement=placement,
+                workload=workload)
+            if session is not None:
+                session.register(
+                    skey, plan,
+                    requested={"method": method, "cb_bytes": cb_bytes,
+                               "pipeline_depth": pipeline_depth,
+                               "slow_hop_codec": slow_hop_codec,
+                               "placement": placement},
+                    workload=workload,
+                    cb_candidates=(self._cb_candidates(rank_requests)
+                                   if cb_bytes == "auto" else ()),
+                    P_L=((local_aggregators or self.n_nodes * 4)
+                         if plan.method == "tam" else None),
+                    n_nodes=self.n_nodes,
+                    n_aggregators=self.stripe_count)
         if plan.slow_hop_codec is not None and \
                 not codec_mod.get_codec(plan.slow_hop_codec).lossless:
             raise ValueError(
@@ -301,19 +458,27 @@ class HostCollectiveIO:
                 f"({codec_mod.lossless_codecs()})")
         m = self.machine
         t = IOTimings()
+        t.plan_seconds = time.perf_counter() - plan_t0
+        t.plan_source = source
         P, nodes = self.n_ranks, self.n_nodes
         q = P // nodes
         split = [self._split_stripes(*r) for r in rank_requests]
         t.requests_before = sum(s[0].size for s in split)
+        placement_on = plan.placement is not None
+        sender_nodes = None
 
         # ---- stage 1: intra-node aggregation (plan.method) -----------
         if plan.method == "twophase":
             per_la = split                  # every rank speaks for itself
+            if placement_on:
+                sender_nodes = [r // q for r in range(P)]
         else:
             P_L = local_aggregators or nodes * 4
             assert P_L % nodes == 0
             c = P_L // nodes                # local aggs per node
             per_la = []
+            if placement_on:
+                sender_nodes = []
             for node in range(nodes):
                 node_ranks = range(node * q, (node + 1) * q)
                 groups = np.array_split(np.array(list(node_ranks)), c)
@@ -336,6 +501,8 @@ class HostCollectiveIO:
                     offs, lens, packed = self._split_stripes(
                         offs, lens, packed)
                     per_la.append((offs, lens, packed))
+                    if placement_on:
+                        sender_nodes.append(node)
                     # intra-node timing: many-to-one receives + sort + copy
                     bytes_in = sum(int(split[r][1].sum()) +
                                    split[r][0].size * PAIR_BYTES for r in g)
@@ -350,9 +517,13 @@ class HostCollectiveIO:
         t.requests_after = sum(la[0].size for la in per_la)
 
         # ---- inter-node exchange + I/O: the host executor ------------
-        return host_exec.execute_write(
+        t = host_exec.execute_write(
             plan, m, per_la, path, t,
-            depth_request="auto" if pipeline_depth == "auto" else None)
+            depth_request="auto" if pipeline_depth == "auto" else None,
+            sender_nodes=sender_nodes, n_nodes=nodes)
+        if session is not None:
+            session.observe(skey, plan, t)
+        return t
 
     # ------------------------------------------------------------------
     def auto_cb_bytes(self, rank_requests, method: str = "tam",
@@ -363,21 +534,12 @@ class HostCollectiveIO:
         total (pipelined when ``pipeline``) for the measured workload
         shape (P, nodes, P_G = stripe_count, request count, bytes).
         Pass ``workload`` to reuse an already-measured one."""
-        ext = max((int((o + ln).max()) for o, ln, _ in rank_requests
-                   if o.size), default=self.stripe_size)
-        n_str = -(-ext // self.stripe_size)
-        dom_bytes = -(-n_str // self.stripe_count) * self.stripe_size
-        cands, c = [], self.stripe_size
-        while c < dom_bytes:
-            cands.append(c)
-            c *= 2
-        cands.append(dom_bytes)
+        cands = self._cb_candidates(rank_requests)
         w = workload if workload is not None else \
             self._measured_workload(rank_requests, pipeline)
         P_L = ((local_aggregators or self.n_nodes * 4)
                if method == "tam" else None)
-        cb, _ = optimal_cb(w, self.machine, P_L=P_L,
-                           candidates=tuple(cands))
+        cb, _ = optimal_cb(w, self.machine, P_L=P_L, candidates=cands)
         return cb
 
     # ------------------------------------------------------------------

@@ -14,6 +14,11 @@ from repro.core.plan import (  # noqa: F401
 from repro.core.codec import (  # noqa: F401
     Codec, available_codecs, get_codec, lossless_codecs,
 )
+from repro.core.placement import (  # noqa: F401
+    PLACEMENT_POLICIES, node_of_slot, resolve_placement,
+    validate_placement,
+)
+from repro.core.session import IOSession  # noqa: F401
 from repro.core.twophase import make_twophase_write, plan_for  # noqa: F401
 from repro.core.tam import make_tam_write  # noqa: F401
 from repro.core.spmd_exec import (  # noqa: F401
@@ -22,9 +27,9 @@ from repro.core.spmd_exec import (  # noqa: F401
 from repro.core.rounds import peak_aggregator_buffer_elems  # noqa: F401
 from repro.core.cost_model import (  # noqa: F401
     Machine, Workload, cb_candidates, optimal_PL, optimal_cb,
-    optimal_cb_and_depth, optimal_depth, pipeline_span, rounds_for_cb,
-    slow_hop_codec_gain, tam_cost, twophase_cost, with_codec,
-    with_measured_rounds, with_overlap,
+    optimal_cb_and_depth, optimal_depth, pipeline_span, placement_cost,
+    rounds_for_cb, slow_hop_codec_gain, tam_cost, twophase_cost,
+    with_codec, with_locality, with_measured_rounds, with_overlap,
 )
 from repro.core.hierarchical import (  # noqa: F401
     compressed_psum, two_layer_all_to_all, two_layer_psum,

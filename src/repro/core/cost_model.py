@@ -107,6 +107,14 @@ class Workload:
     # encode+decode term bytes*(1 + 1/ratio)/codec_bw is charged
     # (refinement 5 — core.codec). 1.0 = codec off; set via with_codec
     # (measured zero fraction -> Codec.modeled_ratio on the host path).
+    locality: float | None = None  # fraction of each domain's bytes that
+    # originate on the domain's HOME node (the node the canonical
+    # packed placement serves it from — core.placement.node_of_slot).
+    # None = uniform (1/nodes): every node contributes equally to every
+    # domain, in which case aggregator placement cannot matter and
+    # placement_cost ties for every permutation (refinement 6). Set via
+    # with_locality, or superseded entirely by a measured per-(domain,
+    # sender-node) byte matrix (the session's feedback loop).
 
     @property
     def q(self) -> int:
@@ -278,6 +286,88 @@ def with_codec(w: Workload, ratio: float) -> Workload:
     ``Codec.modeled_ratio`` — the host path wires this)."""
     import dataclasses
     return dataclasses.replace(w, slow_hop_ratio=float(ratio))
+
+
+def with_locality(w: Workload, locality: float) -> Workload:
+    """Model sender locality (refinement 6 — core.placement): a
+    ``locality`` fraction of every domain's bytes originates on the
+    domain's home node; :func:`placement_cost` charges the fast
+    (intra-node) rates for the bytes a placement keeps home-matched.
+    ``1/nodes`` restores the uniform (placement-indifferent) model."""
+    import dataclasses
+    return dataclasses.replace(w, locality=float(locality))
+
+
+def placement_cost(w: Workload, m: Machine = Machine(),
+                   placement=None, n_nodes: int | None = None, *,
+                   domain_bytes=None, node_bytes=None) -> float:
+    """Modeled seconds of the inter phase under an aggregator placement
+    (refinement 6): the per-node MAKESPAN of the slow-hop exchange when
+    domain ``g`` is served by slot ``placement[g]`` (canonical
+    slot->node map, ``core.placement.node_of_slot``).
+
+    Two effects the flat model cannot see:
+
+    * **fast-hop/slow-hop split** — bytes whose sender sits on the
+      serving slot's node move at the intra rates (``alpha_intra`` /
+      ``beta_intra``); the rest pay the inter rates with the incast
+      knee (``alpha_eff``) and the slow-hop codec discount. The split
+      comes from ``node_bytes`` (the measured per-(domain, sender-node)
+      matrix the session feeds back) or, absent a measurement, from
+      ``w.locality`` (``None`` = uniform = placement-indifferent).
+    * **per-node load balance** — each domain's exchange cost lands on
+      its serving node; the returned value is the max over nodes, so a
+      placement that packs the heavy (or the only active) domains onto
+      one node is charged for the pileup. ``domain_bytes`` supplies
+      measured per-domain loads (default: uniform split).
+
+    ``placement=None`` means the identity (placement off). The
+    ``"auto"`` policy resolves by argmin of this function, so auto is
+    never modeled-worse than any named policy — the invariant
+    ``benchmarks/check_regression.py`` gates.
+    """
+    nodes = int(n_nodes if n_nodes is not None else w.nodes)
+    if placement is None:
+        P_G = w.P_G
+        placement = tuple(range(P_G))
+    else:
+        placement = tuple(int(p) for p in placement)
+        P_G = len(placement)
+    nodes = max(nodes, 1)
+    if node_bytes is not None:
+        nb = [[float(b) for b in row] for row in node_bytes]
+    else:
+        if domain_bytes is None:
+            domain_bytes = [w.total_bytes / P_G] * P_G
+        loc = w.locality if w.locality is not None else 1.0 / nodes
+        loc = min(max(float(loc), 0.0), 1.0)
+        nb = []
+        for g in range(P_G):
+            home = g * nodes // P_G
+            db = float(domain_bytes[g])
+            if nodes == 1:
+                nb.append([db])
+                continue
+            row = [db * (1.0 - loc) / (nodes - 1)] * nodes
+            row[home] = db * loc
+            nb.append(row)
+    ratio = max(w.slow_hop_ratio, 1e-9)
+    S = w.senders_per_stripe(w.P, w.P * w.k)
+    node_load = [0.0] * nodes
+    for g in range(P_G):
+        serving = placement[g] * nodes // P_G      # node_of_slot
+        total_g = sum(nb[g])
+        if total_g <= 0.0:
+            continue
+        fast = nb[g][serving]
+        slow = total_g - fast
+        s_slow = S * slow / total_g
+        s_fast = S - s_slow
+        comm_g = (w.rounds * (m.alpha_eff(s_slow) * s_slow
+                              + m.alpha_intra * s_fast)
+                  + m.beta_inter * slow / ratio + m.beta_intra * fast)
+        node_load[serving] += comm_g
+    return max(node_load)
 
 
 def slow_hop_codec_gain(w: Workload, m: Machine = Machine(),

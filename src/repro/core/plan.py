@@ -81,6 +81,12 @@ class IOConfig:
                     enables the lossless byte codec when the modeled
                     slow-hop saving beats the encode cost
                     (``cost_model.slow_hop_codec_gain``).
+    placement:      aggregator placement (``core.placement``): which
+                    slot serves each file domain, as a policy name
+                    ("packed", "spread", "node_balanced"), an explicit
+                    permutation tuple, or ``"auto"`` (argmin of
+                    ``cost_model.placement_cost``). ``None`` = off —
+                    the legacy identity path.
     """
 
     req_cap: int
@@ -91,6 +97,7 @@ class IOConfig:
     pipeline_depth: int | str = 2
     axis_names: tuple[str, str, str] = ("node", "lagg", "lmem")
     slow_hop_codec: str | None = None
+    placement: str | tuple[int, ...] | None = None
 
 
 @dataclass(frozen=True)
@@ -170,6 +177,14 @@ class IOPlan:
         engine wraps the ``exchange``/``drain`` pair, the host
         executor charges encoded bytes — so one plan field governs the
         wire format everywhere (ARCHITECTURE.md § slow-hop codec).
+    placement: resolved aggregator placement (never "auto" or a policy
+        name here): ``placement[g]`` is the slot serving domain ``g``
+        (``core.placement``), or ``None`` when placement is off. Both
+        executors read it — the SPMD round engine routes destinations
+        through the permutation and permutes the domain shards back,
+        the host executor charges the fast-hop/slow-hop split the
+        placement induces — so one plan field governs where aggregation
+        lands everywhere (ARCHITECTURE.md § sessions and placement).
     """
 
     layout: FileLayout
@@ -185,6 +200,7 @@ class IOPlan:
     axis_names: tuple[str, str, str]
     tam_read_fallback: bool = False
     slow_hop_codec: str | None = None
+    placement: tuple[int, ...] | None = None
 
     @property
     def domain_len(self) -> int:
@@ -325,6 +341,15 @@ def compile_plan(layout: FileLayout, cfg: IOConfig, *,
         raise ValueError(f"unknown method {method!r}")
     tam_read_fallback = method == "tam" and direction == "read"
 
+    # ---- aggregator placement -----------------------------------------
+    # Resolved from the same workload the other autos see; an explicit
+    # permutation is validated here (a non-bijection is a bad schedule
+    # and dies at compile time like any other).
+    from repro.core import placement as placement_mod
+    placement = placement_mod.resolve_placement(
+        cfg.placement, n_aggregators, n_nodes, workload=w,
+        machine=machine)
+
     # ---- round window schedule + pipeline depth -----------------------
     cb = cfg.cb_buffer_size
     depth: int | str = cfg.pipeline_depth if cfg.pipeline else 1
@@ -358,7 +383,7 @@ def compile_plan(layout: FileLayout, cfg: IOConfig, *,
         pipeline_depth=depth, req_cap=cfg.req_cap, data_cap=cfg.data_cap,
         coalesce_cap=cfg.coalesce_cap, axis_names=cfg.axis_names,
         tam_read_fallback=tam_read_fallback,
-        slow_hop_codec=slow_hop_codec)
+        slow_hop_codec=slow_hop_codec, placement=placement)
 
 
 def resolve_cb_buffer_size(layout: FileLayout, n_nodes: int, n_ranks: int,

@@ -124,6 +124,7 @@ from jax import lax
 
 from repro.core import coalesce as co
 from repro.core import codec as codec_mod
+from repro.core import placement as placement_mod
 from repro.core.exchange import (bucket_by_dest, flatten_buckets,
                                  repack_sorted, sort_with)
 # RoundScheduler folded into the plan IR (PR 3); re-exported here so
@@ -153,6 +154,42 @@ def _codec_hooks(slow_hop_codec: str | None, dtype, state_shape):
             f"but the payload dtype is {jnp.dtype(dtype)}")
     state0 = c.jax_init_state(state_shape, dtype) if c.stateful else ()
     return c.jax_encode, c.jax_decode, state0
+
+
+def _placement_hooks(placement, n_dest: int, dl: int, node_axis: str):
+    """(to_slot, base0, unpermute) for an aggregator placement.
+
+    ``to_slot(domain_idx)`` maps each request's destination DOMAIN to
+    the SLOT serving it (``plan.placement``); ``base0`` is this slot's
+    served domain's base offset (slot s serves domain ``inv[s]``); and
+    ``unpermute(x)`` ppermutes the finished domain shards (and their
+    per-aggregator stats) back into domain order — slot s holds domain
+    ``inv[s]`` after the rounds, and sending it to slot ``inv[s]``
+    leaves every slot holding its own domain, so the OUTPUT is
+    byte-identical to the identity placement (the permutation moves
+    where the aggregation work happens, never what lands in the file).
+    The identity placement compiles the placement machinery away
+    entirely.
+    """
+    if placement_mod.is_identity(placement):
+        return (lambda d: d,
+                lax.axis_index(node_axis) * dl,
+                lambda x: x)
+    perm = placement_mod.validate_placement(placement, n_dest)
+    inv = placement_mod.inverse_placement(perm)
+    perm_arr = jnp.asarray(perm, jnp.int32)
+    inv_arr = jnp.asarray(inv, jnp.int32)
+
+    def to_slot(domain_idx):
+        return perm_arr[jnp.clip(domain_idx, 0, n_dest - 1)]
+
+    base0 = inv_arr[lax.axis_index(node_axis)] * dl
+    pairs = [(s, inv[s]) for s in range(n_dest)]
+
+    def unpermute(x):
+        return lax.ppermute(x, node_axis, pairs)
+
+    return to_slot, base0, unpermute
 
 
 def _effective_depth(pipeline: bool, depth: int | None) -> int:
@@ -276,7 +313,8 @@ def exchange_rounds_write(sched: RoundScheduler, node_axis: str,
                           starts: jax.Array, data: jax.Array,
                           pipeline: bool = False,
                           depth: int | None = None,
-                          slow_hop_codec: str | None = None):
+                          slow_hop_codec: str | None = None,
+                          placement=None):
     """Round loop of the collective write (runs inside a shard_map body).
 
     r/starts/data: this sender's offset-sorted requests, the payload
@@ -287,19 +325,24 @@ def exchange_rounds_write(sched: RoundScheduler, node_axis: str,
     ``slow_hop_codec`` names a ``core.codec`` transform applied to each
     round's payload buckets around the slow-axis ``all_to_all``
     (lossless codecs keep byte identity; ``ef-int8``'s residual rides
-    the loop carry). Returns (domain shard [domain_len], stats dict);
-    ``requests_at_ga`` is already summed over ``merge_axes``
-    (replicated at the node).
+    the loop carry). ``placement`` is the plan's aggregator permutation
+    (``core.placement``): requests route to the slot SERVING their
+    domain and the finished shards ppermute back into domain order, so
+    the output is byte-identical for every placement. Returns
+    (domain shard [domain_len], stats dict); ``requests_at_ga`` is
+    already summed over ``merge_axes`` (replicated at the node) and
+    reported in DOMAIN order whatever the placement.
     """
     n_dest, cb, dl = sched.n_aggregators, sched.cb, sched.domain_len
     data_cap = data.shape[0]
     split = split_at_stripes(r, cb, sched.max_spans(data_cap))
     s_starts = co.request_starts(split)
-    dest = (split.offsets // dl).astype(jnp.int32)
+    to_slot, base0, unpermute = _placement_hooks(placement, n_dest, dl,
+                                                 node_axis)
+    dest = to_slot((split.offsets // dl).astype(jnp.int32))
     window = sched.window_of(split.offsets)
     round_req_cap = min(split.capacity, cb)
     round_data_cap = min(data_cap, cb)
-    base0 = lax.axis_index(node_axis) * dl
     a2a = partial(lax.all_to_all, axis_name=node_axis, split_axis=0,
                   concat_axis=0, tiled=True)
     enc, dec, cstate0 = _codec_hooks(slow_hop_codec, data.dtype,
@@ -321,10 +364,10 @@ def exchange_rounds_write(sched: RoundScheduler, node_axis: str,
     buf, (drop_r, drop_e), (reqs_rx,) = _run_rounds(
         sched.n_rounds, dl, data.dtype, exchange, drain, 2, 1,
         _effective_depth(pipeline, depth), codec_state=cstate0)
-    return buf, {
+    return unpermute(buf), {
         "dropped_requests": drop_r,
         "dropped_elems": drop_e,
-        "requests_at_ga": lax.psum(reqs_rx, merge_axes),
+        "requests_at_ga": unpermute(lax.psum(reqs_rx, merge_axes)),
     }
 
 
@@ -336,7 +379,8 @@ def exchange_rounds_write_tam(sched: RoundScheduler, node_axis: str,
                               use_kernels: bool = False,
                               pipeline: bool = False,
                               depth: int | None = None,
-                              slow_hop_codec: str | None = None):
+                              slow_hop_codec: str | None = None,
+                              placement=None):
     """Fused TAM round loop: BOTH aggregation layers run per window.
 
     Per round t, stage 1 gathers only the window's requests over
@@ -362,7 +406,10 @@ def exchange_rounds_write_tam(sched: RoundScheduler, node_axis: str,
     window = sched.window_of(split.offsets)
     rcap = min(split.capacity, cb)       # stage-1 requests/rank/round
     rdcap = min(data_cap, cb)            # stage-1 payload/rank/round
-    base0 = lax.axis_index(node_axis) * dl
+    # placement routes only the SLOW hop (stage 2): the intra-node
+    # gather is placement-blind, mirroring the codec's asymmetry
+    to_slot, base0, unpermute = _placement_hooks(placement, n_dest, dl,
+                                                 node_axis)
     a2a = partial(lax.all_to_all, axis_name=node_axis, split_axis=0,
                   concat_axis=0, tiled=True)
     g = partial(lax.all_gather, axis_name=lmem_axis, axis=0, tiled=False)
@@ -414,7 +461,7 @@ def exchange_rounds_write_tam(sched: RoundScheduler, node_axis: str,
         # each forwarded request has exactly one owner
         agg = split_at_stripes(agg, dl, m * rdcap // dl + 2)
         # ---- stage 2: slow-axis exchange of the coalesced window ----
-        dest = (agg.offsets // dl).astype(jnp.int32)
+        dest = to_slot((agg.offsets // dl).astype(jnp.int32))
         b = bucket_by_dest(agg, co.request_starts(agg), packed, dest,
                            n_dest, min(agg.capacity, cb),
                            min(m * rdcap, cb))
@@ -431,14 +478,14 @@ def exchange_rounds_write_tam(sched: RoundScheduler, node_axis: str,
         _effective_depth(pipeline, depth), codec_state=cstate0)
     (drop_rank_r, drop_rank_e, drop_agg_r, drop_agg_e,
      n_before, n_after) = ex_acc
-    return buf, {
+    return unpermute(buf), {
         "dropped_requests_rank": drop_rank_r,
         "dropped_elems_rank": drop_rank_e,
         "dropped_requests_agg": drop_agg_r,
         "dropped_elems_agg": drop_agg_e,
         "requests_before_coalesce": n_before,
         "requests_after_coalesce": n_after,
-        "requests_at_ga": lax.psum(dr_acc[0], (lagg_axis,)),
+        "requests_at_ga": unpermute(lax.psum(dr_acc[0], (lagg_axis,))),
     }
 
 
@@ -447,7 +494,8 @@ def exchange_rounds_read(sched: RoundScheduler, node_axis: str,
                          file_shard: jax.Array, data_cap: int,
                          pipeline: bool = False,
                          depth: int | None = None,
-                         slow_hop_codec: str | None = None) -> jax.Array:
+                         slow_hop_codec: str | None = None,
+                         placement=None) -> jax.Array:
     """Round loop of the collective read: per round, aggregators
     broadcast one ``cb``-sized window over the slow axis and every rank
     gathers the elements of its requests falling in that window. Peak
@@ -458,9 +506,21 @@ def exchange_rounds_read(sched: RoundScheduler, node_axis: str,
     slow-axis broadcast and decodes after (per-window, residual-free:
     a broadcast repeats nothing, so error feedback has nothing to
     correct — ``ef-int8`` here is plain per-window quantization).
+    ``placement`` permutes which slot SERVES (broadcasts) each domain:
+    the file shards ppermute to their serving slots up front and ranks
+    index the gathered windows through the permutation — the returned
+    payloads are byte-identical for every placement.
     """
     n_dest, cb, dl = sched.n_aggregators, sched.cb, sched.domain_len
     cap = r.capacity
+    if not placement_mod.is_identity(placement):
+        perm = placement_mod.validate_placement(placement, n_dest)
+        # slot perm[g] serves domain g: hand it the domain's shard
+        file_shard = lax.ppermute(file_shard, node_axis,
+                                  [(s, perm[s]) for s in range(n_dest)])
+        slot_of = jnp.asarray(perm, jnp.int32)
+    else:
+        slot_of = None
     eidx = jnp.arange(data_cap, dtype=jnp.int32)
     req_of = jnp.repeat(jnp.arange(cap, dtype=jnp.int32), r.lengths,
                         total_repeat_length=data_cap)
@@ -486,7 +546,8 @@ def exchange_rounds_read(sched: RoundScheduler, node_axis: str,
 
     def scatter(t, out, allw):
         active = live & (wloc // cb == t)
-        src = dest * cb + (wloc - t * cb)
+        slot = dest if slot_of is None else slot_of[dest]
+        src = slot * cb + (wloc - t * cb)
         vals = allw[jnp.clip(src, 0, n_dest * cb - 1)]
         return jnp.where(active, vals, out)
 

@@ -1,0 +1,248 @@
+"""Persistent collective-I/O sessions: plan reuse + measured feedback.
+
+Production checkpoint loops repeat the SAME I/O pattern hundreds of
+times, yet the planner re-paid the expensive part of every write —
+measuring the workload (an O(total_bytes) zero scan when a codec is
+weighed), sweeping the cb candidates, re-deriving the topology — on
+every call. An :class:`IOSession` is the cross-write memory that
+amortizes it:
+
+* **Plan cache.** Compiled :class:`~repro.core.plan.IOPlan`\\ s are
+  cached under a key derived from (layout, config): the writer's shape
+  (ranks, nodes, striping), the request set's fingerprint (extent,
+  total bytes, request count), and every requested knob *as requested*
+  (``"auto"`` included). An identical write is a cache hit — the plan
+  is reused as-is, planning cost ~0. A changed layout or config is a
+  different key and compiles fresh. The cache-key contract is exactly
+  plan determinism: ``compile_plan`` is a pure function of its inputs
+  (property-tested in tests/test_plan_property.py), so a cached plan
+  IS the plan a recompile would produce.
+
+* **Measured feedback.** After each write the session ingests the
+  executor's measurements (:class:`IOTimings`): executed rounds, the
+  per-round comm/drain arrays, the achieved slow-hop compression
+  ratio, and the per-(domain, sender-node) byte matrix. On the next
+  write of the same key, every knob the caller left ``"auto"`` is
+  re-resolved against the MEASUREMENT instead of the model's
+  assumptions — ``rounds_override`` for cb, ``optimal_depth`` over the
+  measured round times, ``resolve_slow_hop_codec`` at the measured
+  ratio, ``resolve_placement`` over the measured node-byte matrix —
+  the ``Workload.rounds_override`` measured-beats-assumed pattern
+  promoted to a cross-write loop.
+
+* **Replan only when it pays.** A re-resolution that produces new
+  knobs runs ONCE as a trial; from then on every write executes the
+  best plan BY MEASURED TOTAL seen so far (ties keep the incumbent).
+  The executed total is the final arbiter, so the steady state is
+  monotone: it never runs a plan that measured worse than the first
+  write's (asserted by tests/test_session.py and gated in
+  ``benchmarks/check_regression.py``).
+
+``HostCollectiveIO(session=...)`` / ``write(session=...)`` and
+``CheckpointManager(session=...)`` consume this; the SPMD side can use
+:meth:`IOSession.compile` as a caching front-end to ``compile_plan``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core import cost_model as cm
+from repro.core import placement as placement_mod
+from repro.core.plan import (IOPlan, compile_plan, resolve_method,
+                             resolve_slow_hop_codec)
+
+
+def _knobs_of(plan: IOPlan) -> tuple:
+    """The tuning-relevant fingerprint of a compiled plan (what a
+    refinement can change; two plans with equal knobs execute — and
+    therefore measure — identically, the model being deterministic)."""
+    return (plan.method, plan.cb, plan.pipeline_depth,
+            plan.slow_hop_codec, plan.placement)
+
+
+@dataclass
+class _Entry:
+    plan: IOPlan                      # first-compiled plan
+    requested: dict                   # knobs as the caller spelled them
+    workload: object | None           # measured cost_model.Workload
+    cb_candidates: tuple = ()
+    P_L: int | None = None
+    n_nodes: int = 1
+    n_aggregators: int = 1
+    plans: dict = field(default_factory=dict)    # knobs -> IOPlan
+    totals: dict = field(default_factory=dict)   # knobs -> measured total
+    best_knobs: tuple | None = None
+    feedback: dict = field(default_factory=dict)
+    writes: int = 0
+    refined: bool = False
+
+    def best_plan(self) -> IOPlan:
+        if self.best_knobs is not None and self.best_knobs in self.plans:
+            return self.plans[self.best_knobs]
+        return self.plan
+
+
+class IOSession:
+    """Cross-write plan cache + measured-feedback tuner (see module
+    docstring). One session serves any number of distinct workloads —
+    each (layout, config) key gets its own entry — so a single session
+    can back a whole checkpoint manager."""
+
+    def __init__(self, machine=None):
+        self.machine = machine or cm.Machine()
+        self._entries: dict = {}
+        self._compiled: dict = {}     # compile() front-end cache
+        self.hits = 0
+        self.misses = 0
+        self.replans = 0
+
+    # ------------------------------------------------------------------
+    # generic plan-compile cache (the SPMD-side entry point)
+    # ------------------------------------------------------------------
+    def compile(self, layout, cfg, **kwargs) -> IOPlan:
+        """Caching front-end to :func:`repro.core.plan.compile_plan`:
+        identical (layout, cfg, kwargs) return the SAME plan object
+        without recompiling — sound because ``compile_plan`` is
+        deterministic (the session-cache-key contract,
+        tests/test_plan_property.py)."""
+        key = (layout, cfg, tuple(sorted(
+            (k, v if not isinstance(v, list) else tuple(v))
+            for k, v in kwargs.items() if k not in ("machine", "workload"))))
+        extra = {k: kwargs[k] for k in ("machine", "workload")
+                 if k in kwargs}
+        if extra:     # unhashable inputs: compile through, no caching
+            return compile_plan(layout, cfg, **kwargs)
+        if key in self._compiled:
+            self.hits += 1
+            return self._compiled[key]
+        self.misses += 1
+        plan = compile_plan(layout, cfg, **kwargs)
+        self._compiled[key] = plan
+        return plan
+
+    # ------------------------------------------------------------------
+    # the write-path protocol (HostCollectiveIO.write drives this)
+    # ------------------------------------------------------------------
+    def begin_write(self, key, machine=None) -> tuple[str, object]:
+        """Start a write under ``key``. Returns one of:
+
+        * ``("miss", None)`` — no entry: compile a fresh plan and hand
+          it back through :meth:`register`;
+        * ``("trial", knobs_dict)`` — measured feedback re-resolved the
+          ``"auto"`` knobs to something untried: compile a plan with
+          these CONCRETE knobs (cheap — nothing left to sweep) and
+          register it with :meth:`register_trial`;
+        * ``("hit", plan)`` — reuse the best measured plan as-is.
+
+        ``machine`` is the WRITER's calibration — refinements must
+        resolve under the same machine the first write's autos did, not
+        this session's default.
+        """
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            return "miss", None
+        self.hits += 1
+        if entry.feedback and not entry.refined:
+            entry.refined = True
+            knobs = self._refine(entry, machine or self.machine)
+            if knobs is not None:
+                tried = set(entry.totals) | {_knobs_of(entry.plan)}
+                as_tuple = (knobs["method"], knobs["cb_bytes"],
+                            knobs["pipeline_depth"],
+                            knobs["slow_hop_codec"], knobs["placement"])
+                if as_tuple not in tried:
+                    self.replans += 1
+                    return "trial", knobs
+        return "hit", entry.best_plan()
+
+    def register(self, key, plan: IOPlan, *, requested: dict,
+                 workload=None, cb_candidates=(), P_L=None,
+                 n_nodes: int = 1, n_aggregators: int = 1) -> None:
+        """Record the first-compiled plan for ``key`` (the miss path).
+        ``workload`` is the measured ``cost_model.Workload`` the autos
+        resolved against — stored so refinements never re-pay the
+        measurement."""
+        self._entries[key] = _Entry(
+            plan=plan, requested=dict(requested), workload=workload,
+            cb_candidates=tuple(cb_candidates), P_L=P_L,
+            n_nodes=n_nodes, n_aggregators=n_aggregators)
+        self._entries[key].plans[_knobs_of(plan)] = plan
+
+    def register_trial(self, key, plan: IOPlan) -> None:
+        entry = self._entries[key]
+        entry.plans[_knobs_of(plan)] = plan
+
+    def observe(self, key, plan: IOPlan, timings) -> None:
+        """Feed one write's measurements back: the executed total
+        decides the incumbent (strictly-better wins, ties keep), and
+        the per-round arrays / ratio / node-byte matrix become the next
+        refinement's inputs."""
+        entry = self._entries.get(key)
+        if entry is None:
+            return
+        entry.writes += 1
+        knobs = _knobs_of(plan)
+        entry.plans.setdefault(knobs, plan)
+        entry.totals[knobs] = float(timings.total)
+        if (entry.best_knobs is None
+                or entry.totals[knobs]
+                < entry.totals[entry.best_knobs] - 1e-15):
+            entry.best_knobs = knobs
+        fb = entry.feedback
+        fb["rounds"] = int(getattr(timings, "rounds_executed", 1))
+        if getattr(timings, "comm_rounds", ()):
+            fb["round_times"] = (tuple(timings.comm_rounds),
+                                 tuple(timings.io_rounds))
+        if getattr(timings, "slow_hop_codec", None) is not None:
+            fb["ratio"] = float(timings.slow_hop_compression_ratio)
+        if getattr(timings, "node_bytes", ()):
+            fb["node_bytes"] = tuple(tuple(row)
+                                     for row in timings.node_bytes)
+
+    def entry(self, key) -> _Entry | None:
+        return self._entries.get(key)
+
+    # ------------------------------------------------------------------
+    def _refine(self, entry: _Entry, machine=None) -> dict | None:
+        """Re-resolve the requested ``"auto"`` knobs against the
+        measurement (measured-beats-assumed, across writes). Returns a
+        concrete knob dict, or ``None`` when nothing was auto or no
+        measurement informs a change."""
+        req = entry.requested
+        autos = [k for k in ("method", "cb_bytes", "pipeline_depth",
+                             "slow_hop_codec", "placement")
+                 if req.get(k) == "auto"]
+        if not autos or entry.workload is None:
+            return None
+        m = machine or self.machine
+        fb = entry.feedback
+        base = entry.best_plan()
+        w = cm.with_measured_rounds(entry.workload,
+                                    fb.get("rounds", base.n_rounds))
+        if "ratio" in fb and base.slow_hop_codec is not None:
+            # the achieved wire ratio replaces the zero-scan estimate
+            w = cm.with_codec(w, max(fb["ratio"], 1.0))
+
+        codec = base.slow_hop_codec
+        if "slow_hop_codec" in autos:
+            codec = resolve_slow_hop_codec(w, m)
+        method = base.method
+        if "method" in autos:
+            method = resolve_method(w, m)
+        P_L = entry.P_L if method == "tam" else None
+        cb = base.cb
+        if "cb_bytes" in autos and entry.cb_candidates:
+            cb, _ = cm.optimal_cb(w, m, P_L=P_L,
+                                  candidates=entry.cb_candidates)
+        depth = base.pipeline_depth
+        if "pipeline_depth" in autos and "round_times" in fb:
+            depth, _ = cm.optimal_depth(round_times=fb["round_times"])
+        placement = base.placement
+        if "placement" in autos and "node_bytes" in fb:
+            placement = placement_mod.resolve_placement(
+                "auto", entry.n_aggregators, entry.n_nodes, workload=w,
+                machine=m, node_bytes=fb["node_bytes"])
+        return {"method": method, "cb_bytes": cb,
+                "pipeline_depth": depth, "slow_hop_codec": codec,
+                "placement": placement}

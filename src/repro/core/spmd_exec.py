@@ -65,7 +65,8 @@ def _write_shard_fn(plan: IOPlan, use_kernels: bool,
             sched, node, lagg, lmem, r, starts, data,
             coalesce_cap=plan.coalesce_cap, use_kernels=use_kernels,
             depth=plan.pipeline_depth,
-            slow_hop_codec=plan.slow_hop_codec)
+            slow_hop_codec=plan.slow_hop_codec,
+            placement=plan.placement)
         lmem_size = axis_size(lmem)
         all_axes = (node, lagg, lmem)
         stats = {
@@ -88,7 +89,8 @@ def _write_shard_fn(plan: IOPlan, use_kernels: bool,
     shard, st = rounds.exchange_rounds_write(
         sched, node, (lagg, lmem), r, starts, data,
         depth=plan.pipeline_depth,
-        slow_hop_codec=plan.slow_hop_codec)
+        slow_hop_codec=plan.slow_hop_codec,
+        placement=plan.placement)
     stats = {
         "dropped_requests": lax.psum(st["dropped_requests"],
                                      (node, lagg, lmem)),
@@ -106,7 +108,8 @@ def _read_shard_fn(plan: IOPlan, offsets, lengths, count, file_shard):
     out = rounds.exchange_rounds_read(
         plan.scheduler(), node, r, starts, file_shard.reshape(-1),
         plan.data_cap, depth=plan.pipeline_depth,
-        slow_hop_codec=plan.slow_hop_codec)
+        slow_hop_codec=plan.slow_hop_codec,
+        placement=plan.placement)
     return out[None]
 
 

@@ -27,6 +27,22 @@ round engine) the SAME byte-identity must hold — swept over ring
 depths {1, 2, 4} x round counts {1, 2, 5} for two-phase, at the
 5-round cb for TAM, plus an rle read — because a lossless codec may
 change the wire, never the file. Exits nonzero on any failure.
+
+Placement: an aggregator placement is a pure permutation of which slot
+serves which domain (``core.placement``), so byte identity must hold
+under it too: the handcrafted patterns run the two-phase and TAM
+writers (and a read) with the swapped placement ``(1, 0)`` at the
+5-round cb, and the FUZZ section below sweeps it properly.
+
+Cross-executor fuzz: seeded random patterns (disjoint random extents
+with offset-derived payloads, occasional deterministic identical-data
+overlaps, and natural domain-/window-boundary spanners) are run
+through BOTH executors — the SPMD writers under placement {identity,
+swapped} x codec {None, rle} x depth {1, 2}, and the host executor
+(byte units, same striping) under placement {off, spread, swapped} x
+codec {None, rle} x depth {1, 2} — and every single run must
+reproduce the ``write_reference`` oracle bytes exactly, so the two
+backends are compared on inputs nobody hand-picked.
 """
 import numpy as np
 import jax
@@ -125,11 +141,72 @@ def spanning_pattern(rng):
     return O, L, C, D
 
 
+def _fill_sorted(O, L, C, D, p, segs):
+    """Install rank p's segments sorted by offset, payload derived from
+    the absolute offset (so any overlap is identical-data, the only
+    deterministic kind)."""
+    segs = sorted(segs)
+    pos = 0
+    for i, (o, ln) in enumerate(segs):
+        O[p, i], L[p, i] = o, ln
+        D[p, pos:pos + ln] = (np.arange(o, o + ln) * 7 + 3) % 251 + 1
+        pos += ln
+    C[p] = len(segs)
+
+
+def random_pattern(rng):
+    """Seeded random request pattern: the file is cut at random points
+    and the pieces are dealt to random ranks (bounded by the caps),
+    with offset-derived payloads; ~1 in 4 patterns duplicates one
+    piece onto a second rank (identical bytes — the deterministic
+    overlap), and pieces freely straddle domain and window boundaries
+    (the spanning case)."""
+    O = np.full((P_RANKS, REQ_CAP), 2**31 - 1, np.int32)
+    L = np.zeros((P_RANKS, REQ_CAP), np.int32)
+    C = np.zeros(P_RANKS, np.int32)
+    D = np.zeros((P_RANKS, DATA_CAP), np.int32)
+    cuts = np.unique(rng.integers(1, FILE_LEN, size=rng.integers(8, 28)))
+    bounds = np.concatenate([[0], cuts, [FILE_LEN]])
+    per_rank: list[list] = [[] for _ in range(P_RANKS)]
+    budget = np.zeros(P_RANKS, np.int64)
+    dup = rng.random() < 0.25
+    for a, b in zip(bounds[:-1], bounds[1:]):
+        ln = min(int(b - a), int(rng.integers(1, 17)))
+        if rng.random() < 0.3:
+            continue                      # leave a hole
+        targets = [int(rng.integers(0, P_RANKS))]
+        if dup and rng.random() < 0.2:
+            targets.append(int(rng.integers(0, P_RANKS)))
+        for p in set(targets):
+            if len(per_rank[p]) >= 6 or budget[p] + ln > DATA_CAP - 8:
+                continue
+            per_rank[p].append((int(a), ln))
+            budget[p] += ln
+    for p in range(P_RANKS):
+        _fill_sorted(O, L, C, D, p, per_rank[p])
+    return O, L, C, D
+
+
+def _byte_requests(O, L, C, D):
+    """The same pattern in the host executor's units: byte offsets and
+    the int32 payloads' little-endian bytes."""
+    reqs = []
+    for p in range(P_RANKS):
+        n = int(C[p])
+        o = O[p, :n].astype(np.int64) * 4
+        ln = L[p, :n].astype(np.int64) * 4
+        total = int(L[p, :n].sum())
+        payload = D[p, :total].astype("<i4").view(np.uint8).copy()
+        reqs.append((o, ln, payload))
+    return reqs
+
+
 def main():
     from repro.core import IOConfig, contiguous_layout
     from repro.core.tam import make_tam_read, make_tam_write
     from repro.core.twophase import (make_twophase_read,
                                      make_twophase_write, write_reference)
+    from repro.checkpoint.host_io import HostCollectiveIO
 
     mesh = jax.make_mesh((2, 2, 2), ("node", "lagg", "lmem"))
     layout = contiguous_layout(FILE_LEN, 2)
@@ -189,6 +266,36 @@ def main():
     reader_rle = jax.jit(make_twophase_read(
         mesh, layout, replace(base, cb_buffer_size=32, pipeline=True,
                               pipeline_depth=2, slow_hop_codec="rle")))
+    # placement: the swapped permutation at the 5-round cb for both
+    # schedules plus a placement read — byte identity must hold because
+    # a placement only moves WHERE the aggregation runs (the shards
+    # ppermute back into domain order)
+    SWAP = (1, 0)
+    placed = {
+        "twophase": jax.jit(make_twophase_write(mesh, layout, replace(
+            base, cb_buffer_size=32, placement=SWAP))),
+        "tam": jax.jit(make_tam_write(mesh, layout, replace(
+            base, cb_buffer_size=32, placement=SWAP))),
+    }
+    reader_placed = jax.jit(make_twophase_read(mesh, layout, replace(
+        base, cb_buffer_size=32, placement=SWAP)))
+    # cross-executor fuzz writers: placement x codec x depth (two-phase
+    # full cross, TAM corners to bound compile time)
+    fuzz_fns = {}
+    for pl in (None, SWAP):
+        for codec in (None, "rle"):
+            for k in (1, 2):
+                cfgf = replace(base, cb_buffer_size=32, pipeline=k > 1,
+                               pipeline_depth=k, slow_hop_codec=codec,
+                               placement=pl)
+                fuzz_fns[("twophase", pl is not None, codec, k)] = \
+                    jax.jit(make_twophase_write(mesh, layout, cfgf))
+    for codec, k in ((None, 1), ("rle", 2)):
+        cfgf = replace(base, cb_buffer_size=32, pipeline=k > 1,
+                       pipeline_depth=k, slow_hop_codec=codec,
+                       placement=SWAP)
+        fuzz_fns[("tam", True, codec, k)] = jax.jit(
+            make_tam_write(mesh, layout, cfgf))
 
     rng = np.random.default_rng(0)
     patterns = {"mixed": mixed_pattern(rng),
@@ -269,6 +376,62 @@ def main():
                                     D[p][:L[p].sum()])
                      for p in range(P_RANKS))
             check(f"{pname}/twophase/read_rle_rounds5", ok)
+            for mname, fn in placed.items():
+                f, s = fn(O, L, C, D)
+                check(f"{pname}/{mname}/placement_swap_rounds5_vs_ref",
+                      np.array_equal(np.asarray(f).reshape(-1), ref))
+                check(f"{pname}/{mname}/placement_swap_no_drops",
+                      int(s["dropped_requests"]) == 0
+                      and int(s["dropped_elems"]) == 0)
+            got = np.asarray(reader_placed(
+                O, L, C, jnp.asarray(ref).reshape(2, -1)))
+            ok = all(np.array_equal(got[p][:L[p].sum()],
+                                    D[p][:L[p].sum()])
+                     for p in range(P_RANKS))
+            check(f"{pname}/twophase/read_placement_swap_rounds5", ok)
+
+    # ---- cross-executor fuzz: seeded random patterns through BOTH
+    # backends, every run against the oracle (so SPMD == host too) ----
+    import tempfile
+    for seed in range(4):
+        O, L, C, D = random_pattern(np.random.default_rng(7000 + seed))
+        ref = write_reference(layout, O, L, C, D)
+        for (mname, swapped, codec, k), fn in fuzz_fns.items():
+            f, s = fn(O, L, C, D)
+            tag = (f"fuzz{seed}/{mname}/pl{int(swapped)}_"
+                   f"{codec or 'raw'}_k{k}")
+            check(f"{tag}_vs_ref",
+                  np.array_equal(np.asarray(f).reshape(-1), ref))
+            check(f"{tag}_no_drops",
+                  int(s["dropped_requests"]) == 0
+                  and int(s["dropped_elems"]) == 0)
+        # the host executor moves the same pattern in byte units; its
+        # files must reassemble to the same oracle bytes under the
+        # placement x codec x depth cross
+        breqs = _byte_requests(O, L, C, D)
+        ref_bytes = ref.astype("<i4").view(np.uint8)
+        hio = HostCollectiveIO(n_ranks=P_RANKS, n_nodes=2,
+                               stripe_size=640, stripe_count=2)
+        hd = tempfile.mkdtemp()
+        for pi, pl in enumerate((None, "spread", (1, 0))):
+            ptag = ("off", "spread", "swap")[pi]
+            for codec in (None, "rle"):
+                for k in (1, 2):
+                    path = f"{hd}/{ptag}_{codec or 'raw'}_{k}"
+                    hio.write(breqs, path, method="twophase",
+                              cb_bytes=128, pipeline_depth=k,
+                              slow_hop_codec=codec, placement=pl)
+                    got = hio.read_file(path, FILE_LEN * 4)
+                    check(f"fuzz{seed}/host/{ptag}_{codec or 'raw'}"
+                          f"_k{k}_vs_spmd",
+                          np.array_equal(got, ref_bytes))
+        path = f"{hd}/tam"
+        hio.write(breqs, path, method="tam", local_aggregators=2,
+                  cb_bytes=128, pipeline_depth=2, slow_hop_codec="rle",
+                  placement=(1, 0))
+        check(f"fuzz{seed}/host/tam_swap_rle_k2_vs_spmd",
+              np.array_equal(hio.read_file(path, FILE_LEN * 4),
+                             ref_bytes))
 
     # overflow observability: one rank pushes 2x identical 32-element
     # requests into one 32-element window -> 64 elems > the round

@@ -1,0 +1,165 @@
+"""Property/fuzz tier for the planner (hypothesis via _hyp_compat).
+
+Randomized layouts x cb x depth x placement:
+
+* the round windows PARTITION each aggregator domain exactly —
+  coverage (every domain-local offset falls in some window) and
+  disjointness (exactly one window), and ``window_of`` agrees with the
+  round schedule for every file offset;
+* ``compile_plan`` is deterministic — plan equality (and hash
+  equality) across recompiles, which is the contract that makes the
+  session cache sound (a cached plan IS the recompiled plan);
+* every placement permutation is a bijection on the aggregator slots,
+  and ``"auto"`` placement is never modeled-worse than any named
+  policy.
+
+Runs under the fixed derandomized profile (_hyp_compat registers it:
+bounded examples, reproduce_failure blob printed on failure) so both
+CI JAX pins explore identical examples.
+"""
+import numpy as np
+import pytest
+
+from _hyp_compat import given, settings, st
+
+from repro.core import placement as placement_mod
+from repro.core.cost_model import Machine, Workload, placement_cost
+from repro.core.domains import FileLayout, contiguous_layout
+from repro.core.plan import IOConfig, compile_plan
+
+
+def _layout_and_cb(n_agg, windows, window_elems, striped):
+    """A legal (layout, cb) pair: each domain is exactly ``windows``
+    cb-sized windows; ``striped`` interleaves stripes (stripe == cb),
+    otherwise the domain is one contiguous stripe (cb divides it)."""
+    domain = windows * window_elems
+    if striped:
+        return FileLayout(stripe_size=window_elems, stripe_count=n_agg,
+                          file_len=n_agg * domain), window_elems
+    return contiguous_layout(n_agg * domain, n_agg), window_elems
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 6), st.sampled_from([4, 8, 16]),
+       st.booleans(), st.sampled_from([1, 2, 3, 4]))
+def test_windows_partition_each_domain(n_agg, windows, window_elems,
+                                       striped, depth):
+    layout, cb = _layout_and_cb(n_agg, windows, window_elems, striped)
+    cfg = IOConfig(req_cap=8, data_cap=64, cb_buffer_size=cb,
+                   pipeline=depth > 1, pipeline_depth=depth)
+    plan = compile_plan(layout, cfg, n_aggregators=n_agg,
+                        n_nodes=max(n_agg // 2, 1), n_ranks=n_agg * 2)
+    sched = plan.scheduler()
+    # coverage + disjointness: the windows tile the domain exactly
+    assert plan.n_rounds * plan.cb == plan.domain_len
+    offs = np.arange(layout.file_len)
+    # ground truth: the domain-local position (stripes concatenated in
+    # round order) of every file offset; round t of every domain covers
+    # domain-local span [t*cb, (t+1)*cb)
+    from repro.core.domains import to_domain_local
+    local = np.asarray(to_domain_local(layout, offs))
+    w = local // plan.cb
+    assert ((w >= 0) & (w < plan.n_rounds)).all()        # coverage
+    counts = np.bincount(w, minlength=plan.n_rounds)
+    assert (counts == n_agg * plan.cb).all()   # disjoint exact tiling
+    if layout.stripe_size == plan.domain_len:  # contiguous domains
+        # window_of agrees with the round schedule (the SPMD executor
+        # routes through exactly this)
+        np.testing.assert_array_equal(np.asarray(sched.window_of(offs)),
+                                      w)
+    assert plan.in_flight_windows == max(1, min(depth, plan.n_rounds))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 4), st.sampled_from([4, 8]),
+       st.sampled_from([None, "packed", "spread", "node_balanced",
+                        "auto"]),
+       st.sampled_from([None, "rle"]), st.sampled_from([1, 2, 3]))
+def test_compile_plan_is_deterministic(n_agg, windows, window_elems,
+                                       placement, codec, depth):
+    """The session-cache-key contract: identical (layout, config)
+    compile identical (and identically hashed) plans, so a cached plan
+    is indistinguishable from a recompile."""
+    layout, cb = _layout_and_cb(n_agg, windows, window_elems, False)
+    cfg = IOConfig(req_cap=8, data_cap=64, cb_buffer_size=cb,
+                   pipeline=depth > 1, pipeline_depth=depth,
+                   slow_hop_codec=codec, placement=placement)
+    kw = dict(n_aggregators=n_agg, n_nodes=max(n_agg // 2, 1),
+              n_ranks=n_agg * 2)
+    p1 = compile_plan(layout, cfg, **kw)
+    p2 = compile_plan(layout, cfg, **kw)
+    assert p1 == p2
+    assert hash(p1) == hash(p2)
+    if placement is None:
+        assert p1.placement is None
+    else:
+        assert sorted(p1.placement) == list(range(n_agg))
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 16), st.integers(1, 8),
+       st.sampled_from(["packed", "spread", "node_balanced", "auto"]),
+       st.integers(0, 2**31 - 1))
+def test_placement_policies_are_bijections(n_agg, n_nodes, policy, seed):
+    rng = np.random.default_rng(seed)
+    domain_bytes = rng.integers(0, 1 << 20, size=n_agg).astype(float)
+    w = Workload(P=max(n_agg, n_nodes) * 4, nodes=n_nodes, P_G=n_agg,
+                 k=8.0, total_bytes=float(max(domain_bytes.sum(), 1.0)),
+                 locality=float(rng.random()))
+    perm = placement_mod.resolve_placement(
+        policy, n_agg, n_nodes, workload=w,
+        domain_bytes=list(domain_bytes))
+    assert sorted(perm) == list(range(n_agg))
+    # explicit permutations round-trip; non-bijections die
+    assert placement_mod.resolve_placement(perm, n_agg, n_nodes) == \
+        tuple(perm)
+    inv = placement_mod.inverse_placement(perm)
+    assert all(inv[perm[g]] == g for g in range(n_agg))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(2, 12), st.integers(2, 6), st.integers(0, 2**31 - 1),
+       st.floats(0.0, 1.0))
+def test_auto_placement_never_modeled_worse(n_agg, n_nodes, seed,
+                                            locality):
+    """The invariant check_regression gates at benchmark scale, here
+    over random shapes: "auto" is the argmin of placement_cost over the
+    named policies, so it can never be modeled-worse than any of them
+    (nor than placement-off, which is the packed/identity cost)."""
+    rng = np.random.default_rng(seed)
+    m = Machine()
+    domain_bytes = list(rng.integers(1, 1 << 16, size=n_agg).astype(float))
+    w = Workload(P=n_agg * 8, nodes=n_nodes, P_G=n_agg, k=4.0,
+                 total_bytes=float(sum(domain_bytes)), locality=locality)
+    auto = placement_mod.resolve_placement(
+        "auto", n_agg, n_nodes, workload=w, machine=m,
+        domain_bytes=domain_bytes)
+    c_auto = placement_cost(w, m, auto, n_nodes,
+                            domain_bytes=domain_bytes)
+    for policy in placement_mod.PLACEMENT_POLICIES:
+        perm = placement_mod.resolve_placement(
+            policy, n_agg, n_nodes, workload=w,
+            domain_bytes=domain_bytes)
+        assert c_auto <= placement_cost(w, m, perm, n_nodes,
+                                        domain_bytes=domain_bytes) \
+            * (1 + 1e-12)
+    # placement-off == the identity permutation's cost
+    assert c_auto <= placement_cost(w, m, None, n_nodes,
+                                    domain_bytes=domain_bytes) \
+        * (1 + 1e-12)
+
+
+def test_non_bijection_dies_at_compile_time():
+    layout = contiguous_layout(320, 2)
+    with pytest.raises(ValueError):
+        compile_plan(layout, IOConfig(req_cap=8, data_cap=64,
+                                      placement=(0, 0)),
+                     n_aggregators=2, n_nodes=2, n_ranks=8)
+    with pytest.raises(ValueError):
+        compile_plan(layout, IOConfig(req_cap=8, data_cap=64,
+                                      placement=(1, 2)),
+                     n_aggregators=2, n_nodes=2, n_ranks=8)
+    with pytest.raises(ValueError):
+        compile_plan(layout, IOConfig(req_cap=8, data_cap=64,
+                                      placement="diagonal"),
+                     n_aggregators=2, n_nodes=2, n_ranks=8)

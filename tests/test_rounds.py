@@ -162,3 +162,9 @@ def test_rounds_spmd_checks(spmd_env):
     assert "depth4_rounds1_vs_ref" in proc.stdout   # the depth clamp
     assert "tam/depth4_rounds5_vs_ref" in proc.stdout
     assert "read_depth4_rounds5" in proc.stdout
+    # placement + cross-executor fuzz must have actually executed
+    assert "placement_swap_rounds5_vs_ref" in proc.stdout
+    assert "read_placement_swap_rounds5" in proc.stdout
+    assert "fuzz3/twophase/pl1_rle_k2_vs_ref" in proc.stdout
+    assert "fuzz3/host/swap_rle_k2_vs_spmd" in proc.stdout
+    assert "fuzz3/host/tam_swap_rle_k2_vs_spmd" in proc.stdout

@@ -1,0 +1,133 @@
+"""IOSession: cache hit/replan semantics, measured-feedback
+monotonicity, and byte-identity of session-reused plans."""
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import (CheckpointManager,
+                                         restore_checkpoint)
+from repro.checkpoint.host_io import HostCollectiveIO
+from repro.core.domains import FileLayout
+from repro.core.plan import IOConfig
+from repro.core.session import IOSession
+from repro.io_patterns import btio_pattern, e3sm_f_pattern, e3sm_g_pattern
+
+
+def _io(session=None, stripe_count=4, n_nodes=4, P=16):
+    return HostCollectiveIO(n_ranks=P, n_nodes=n_nodes, stripe_size=1024,
+                            stripe_count=stripe_count, session=session)
+
+
+AUTOS = dict(method="tam", local_aggregators=8, cb_bytes="auto",
+             pipeline_depth="auto", slow_hop_codec="auto",
+             placement="auto")
+
+
+def test_cache_hit_on_identical_layout_and_config(tmp_path):
+    io = _io(IOSession())
+    reqs = e3sm_g_pattern(io.n_ranks)
+    t1 = io.write(reqs, str(tmp_path / "a"), **AUTOS)
+    assert t1.plan_source == "compiled"
+    assert io.session.misses == 1 and io.session.hits == 0
+    ts = [io.write(reqs, str(tmp_path / f"b{i}"), **AUTOS)
+          for i in range(3)]
+    assert io.session.misses == 1          # one compile, ever
+    assert io.session.hits == 3
+    assert ts[-1].plan_source == "session-hit"
+    # steady state skips the measurement + autotune sweep: planning is
+    # far cheaper than the first write's (min over the hits, so one
+    # scheduler hiccup inside a perf_counter window can't flake this)
+    assert min(t.plan_seconds for t in ts) < t1.plan_seconds
+
+
+def test_replan_on_layout_change(tmp_path):
+    io = _io(IOSession())
+    io.write(e3sm_g_pattern(io.n_ranks), str(tmp_path / "a"), **AUTOS)
+    # different request set -> different extent/fingerprint -> new key
+    io.write(btio_pattern(io.n_ranks, n=32), str(tmp_path / "b"), **AUTOS)
+    assert io.session.misses == 2
+    # and a config change on the SAME layout is a new key too
+    io.write(e3sm_g_pattern(io.n_ranks), str(tmp_path / "c"),
+             **{**AUTOS, "slow_hop_codec": None})
+    assert io.session.misses == 3
+
+
+@pytest.mark.parametrize("pattern", [btio_pattern, e3sm_f_pattern])
+def test_measured_feedback_monotone_on_gated_workloads(tmp_path, pattern):
+    """The acceptance invariant (also gated at benchmark scale in
+    check_regression.py): with a session feeding measurements back,
+    the steady-state modeled total never exceeds the first write's —
+    a replanned trial that measures worse is reverted, the best
+    measured plan wins."""
+    io = _io(IOSession(), stripe_count=8)
+    reqs = pattern(io.n_ranks)
+    totals = [io.write(reqs, str(tmp_path / f"w{i}"), **AUTOS).total
+              for i in range(4)]
+    assert totals[2] <= totals[0] + 1e-15
+    assert totals[3] <= totals[0] + 1e-15
+    # and the cross-write cost (planning + modeled write) strictly
+    # drops once the plan is cached
+    assert io.session.hits >= 2
+
+
+def test_session_reuse_is_byte_identical(tmp_path):
+    """A session-reused (and possibly trial-refined) plan writes the
+    same bytes as a fresh compile — plans only move WHERE and WHEN
+    bytes travel, never what lands in the file."""
+    reqs = btio_pattern(16, n=32)
+    file_len = int(max((o + ln).max() for o, ln, _ in reqs if o.size))
+    fresh = _io(None, stripe_count=8)
+    fresh.write(reqs, str(tmp_path / "fresh"), **AUTOS)
+    ref = fresh.read_file(str(tmp_path / "fresh"), file_len)
+    io = _io(IOSession(), stripe_count=8)
+    for i in range(3):
+        io.write(reqs, str(tmp_path / f"s{i}"), **AUTOS)
+        got = io.read_file(str(tmp_path / f"s{i}"), file_len)
+        assert np.array_equal(got, ref), i
+
+
+def test_session_trial_reverts_when_worse(tmp_path):
+    """Force a bad trial: seed the session with feedback whose measured
+    node-byte matrix favors a different placement, then check the
+    arbiter — whichever plan MEASURES better owns the steady state."""
+    io = _io(IOSession(), stripe_count=8)
+    reqs = e3sm_g_pattern(io.n_ranks)
+    kw = dict(method="twophase", cb_bytes=1024, placement="auto")
+    t0 = io.write(reqs, str(tmp_path / "a"), **kw)
+    t1 = io.write(reqs, str(tmp_path / "b"), **kw)   # trial or hit
+    t2 = io.write(reqs, str(tmp_path / "c"), **kw)   # steady state
+    assert t2.total <= min(t0.total, t1.total) + 1e-15
+    assert t2.plan_source == "session-hit"
+
+
+def test_iosession_compile_front_end():
+    """The SPMD-side cache: identical (layout, cfg) return the SAME
+    plan object; anything different recompiles."""
+    s = IOSession()
+    layout = FileLayout(stripe_size=1024, stripe_count=4, file_len=1 << 16)
+    cfg = IOConfig(req_cap=64, data_cap=4096, cb_buffer_size=4096,
+                   pipeline=True, pipeline_depth=2)
+    kw = dict(n_aggregators=4, n_nodes=4, n_ranks=16)
+    p1 = s.compile(layout, cfg, **kw)
+    p2 = s.compile(layout, cfg, **kw)
+    assert p1 is p2
+    assert s.hits == 1 and s.misses == 1
+    p3 = s.compile(layout, cfg, n_aggregators=4, n_nodes=4, n_ranks=32)
+    assert p3 is not p1 and s.misses == 2
+
+
+def test_checkpoint_manager_holds_a_session(tmp_path):
+    tree = {"w": np.arange(4096, dtype=np.float32),
+            "b": np.ones(1024, np.float32)}
+    io = HostCollectiveIO(n_ranks=8, n_nodes=2, stripe_size=1024,
+                          stripe_count=4)
+    mgr = CheckpointManager(directory=tmp_path, io=io, cb_bytes="auto",
+                            pipeline_depth="auto", placement="auto",
+                            session=IOSession())
+    for step in (1, 2, 3):
+        t = mgr.save(tree, step)
+    assert mgr.session.hits >= 1           # repeated saves reuse plans
+    assert t.plan_source in ("session-hit", "session-trial")
+    got, step = restore_checkpoint(tmp_path / "ckpt_00000003", tree)
+    assert step == 3
+    np.testing.assert_array_equal(got["w"], tree["w"])
+    np.testing.assert_array_equal(got["b"], tree["b"])
