@@ -36,13 +36,29 @@ and exits nonzero when:
   5% on any gated workload (auto is an argmin over the measured
   node-byte matrix — if it loses, the wiring broke).
 
+With ``--kernels`` (the ``BENCH_kernels.json`` artifact from the
+``kernel_fusion`` suite) the gate also enforces the fused-round
+contract:
+
+* fused and unfused drains are byte-identical on every workload;
+* per workload, fused wall time <= unfused x (1 + 25% jitter
+  headroom), and SUMMED over the registry fused is strictly <=
+  unfused — the one-kernel drain must actually pay for itself;
+* every workload named in the kernels baseline
+  (``benchmarks/baselines/BENCH_kernels_baseline.json``) is present —
+  the baseline records COVERAGE, never wall times (those are
+  machine-dependent; the fused-vs-unfused bound is within-artifact),
+  so it only ever grows additively when workloads are added.
+
 The model is deterministic, so the comparison is stable; the threshold
 exists to absorb intentional re-calibrations of ``cost_model.Machine``
 (regenerate the baseline alongside such a change:
 ``BENCH_PIPELINE_OUT=benchmarks/baselines/BENCH_pipeline_baseline.json
 PYTHONPATH=src python -m benchmarks.run --only pipeline``).
 
-Usage: python benchmarks/check_regression.py CURRENT BASELINE [--threshold 0.2]
+Usage: python benchmarks/check_regression.py CURRENT BASELINE
+           [--threshold 0.2] [--kernels BENCH_kernels.json]
+           [--kernels-baseline benchmarks/baselines/BENCH_kernels_baseline.json]
 """
 from __future__ import annotations
 
@@ -165,22 +181,76 @@ def check(current: dict, baseline: dict,
     return errors, matched
 
 
+KERNEL_JITTER = 0.25      # per-workload headroom; the SUM is strict
+
+
+def check_kernels(kernels: dict, baseline: dict | None) -> list[str]:
+    """Fused-round gate on the ``kernel_fusion`` suite's artifact.
+    Wall times are only ever compared WITHIN the artifact (fused vs
+    unfused ran back to back on the same machine); the baseline pins
+    workload coverage only."""
+    errors = []
+    drain = kernels.get("drain", {})
+    if not drain:
+        errors.append("kernels: no drain entries in the artifact")
+        return errors
+    for wl in (baseline or {}).get("workloads", []):
+        if wl not in drain:
+            errors.append(
+                f"kernels/{wl}: workload in the kernels baseline but "
+                "missing from the artifact — coverage shrank")
+    tot_f = tot_u = 0.0
+    for wl, e in sorted(drain.items()):
+        if not e["byte_identical"]:
+            errors.append(
+                f"kernels/{wl}: fused drain is NOT byte-identical to "
+                "the unfused path")
+        tot_f += e["fused_us"]
+        tot_u += e["unfused_us"]
+        if e["fused_us"] > e["unfused_us"] * (1 + KERNEL_JITTER):
+            errors.append(
+                f"kernels/{wl}: fused drain {e['fused_us']:.0f}us vs "
+                f"unfused {e['unfused_us']:.0f}us — slower by more than "
+                f"the {KERNEL_JITTER:.0%} jitter headroom")
+    if tot_f > tot_u:
+        errors.append(
+            f"kernels: fused drain total {tot_f:.0f}us exceeds unfused "
+            f"{tot_u:.0f}us over the registry — fusion stopped paying "
+            "for itself")
+    return errors
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current")
     ap.add_argument("baseline")
     ap.add_argument("--threshold", type=float, default=0.2)
+    ap.add_argument("--kernels", default=None,
+                    help="BENCH_kernels.json from the kernel_fusion suite")
+    ap.add_argument("--kernels-baseline", default=None,
+                    help="coverage baseline for --kernels")
     args = ap.parse_args()
     with open(args.current) as f:
         current = json.load(f)
     with open(args.baseline) as f:
         baseline = json.load(f)
     errors, matched = check(current, baseline, args.threshold)
+    kmatched = 0
+    if args.kernels:
+        with open(args.kernels) as f:
+            kernels = json.load(f)
+        kbase = None
+        if args.kernels_baseline:
+            with open(args.kernels_baseline) as f:
+                kbase = json.load(f)
+        errors += check_kernels(kernels, kbase)
+        kmatched = len(kernels.get("drain", {}))
     for e in errors:
         print(f"REGRESSION: {e}", file=sys.stderr)
     if not errors:
-        print(f"benchmark gate OK ({matched} matched points, "
-              f"threshold {args.threshold:.0%})")
+        print(f"benchmark gate OK ({matched} matched points"
+              + (f", {kmatched} fused-drain workloads" if kmatched else "")
+              + f", threshold {args.threshold:.0%})")
     return 1 if errors else 0
 
 

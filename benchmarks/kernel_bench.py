@@ -1,57 +1,139 @@
 """Micro-benchmarks of the aggregation hot spots.
 
-Interpret-mode Pallas timings are NOT TPU timings — the meaningful
-numbers are the pure-jnp path (what a CPU host would run) and the
-derived column (ops per call, compare counts), which feed the roofline
-sanity checks.
+Shapes come from the shared workload registry
+(``benchmarks/workloads.py`` ``HOST_PATTERNS``) instead of ad-hoc
+random sizes: each pattern's per-rank byte requests are folded into one
+drain window, which is exactly the aggregator-view input the round
+engine's drain sees per round — so the sort/pack timings move when the
+paper workloads move, not when a hardcoded constant does.
+
+Two suites:
+
+* ``sort_coalesce_pack`` — the pure-jnp hot paths (what a CPU host
+  runs): argsort-based request sort, coalesce, scatter pack.
+* ``fused_vs_unfused`` — the PR's fused-round column: the single
+  ``pallas_call`` of ``kernels/fused_round.py`` (sort + dual pack, one
+  binary-search sweep) against the unfused kernel path (bitonic sort
+  kernel + TWO pack-kernel sweeps) on identical inputs. Emits
+  ``BENCH_kernels.json`` (env ``BENCH_KERNELS_OUT`` overrides) with
+  the per-workload wall times and a byte-identity bit;
+  ``check_regression.py --kernels`` gates fused <= unfused and the
+  identity in CI.
+
+Interpret-mode Pallas timings are NOT TPU timings — but fused and
+unfused run through the SAME interpreter on the same shapes, so the
+comparison isolates the structural saving (one kernel launch and one
+search sweep instead of three launches and two sweeps).
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+from benchmarks import workloads
 from repro.core import coalesce as co
 from repro.core.exchange import sort_with
 from repro.core.requests import make_requests
+from repro.kernels import ops as kops
+
+BENCH_P = 16        # ranks the registry patterns generate for
+WINDOW = 8192       # one drain window (bytes = two pack tiles)
+REQ_CAP = 2048      # aggregator-view requests per window
+MAX_REQ_LEN = 64    # bounds the packed payload at REQ_CAP * 64 bytes
 
 
 def _timeit(fn, *args, reps=5):
-    fn(*args)  # compile
-    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))     # compile
+    best = float("inf")
     for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def window_requests(name: str):
+    """One drain window's aggregator-view inputs from the registry
+    pattern ``name``: every rank's byte requests folded into a
+    WINDOW-sized window (rank order, i.e. UNSORTED — sorting is part
+    of what is being timed), payloads derived from the folded offset
+    so any overlap is identical-data, the drain contract. Returns
+    ``(requests, starts, data, n_requests)``."""
+    reqs = workloads.HOST_PATTERNS[name](BENCH_P)
+    offs = np.concatenate([o for o, _, _ in reqs]).astype(np.int64)
+    lens = np.concatenate([ln for _, ln, _ in reqs]).astype(np.int64)
+    offs = offs % WINDOW
+    lens = np.minimum(np.minimum(lens, MAX_REQ_LEN), WINDOW - offs)
+    keep = lens > 0
+    offs = offs[keep][:REQ_CAP].astype(np.int32)
+    lens = lens[keep][:REQ_CAP].astype(np.int32)
+    n = offs.size
+    starts = np.concatenate([[0], np.cumsum(lens)[:-1]]).astype(np.int32)
+    data = np.zeros(int(lens.sum()), np.int32)
+    for i in range(n):
+        data[starts[i]:starts[i] + lens[i]] = \
+            (offs[i] + np.arange(lens[i])) % 251 + 1
+    r = make_requests(offs, lens, capacity=n)
+    return r, jnp.asarray(starts), jnp.asarray(data), n
 
 
 def sort_coalesce_pack():
+    """jnp hot-path timings on the registry shapes."""
     rows = []
-    rng = np.random.default_rng(0)
-    for n in (1024, 8192, 32768):
-        gaps = rng.integers(1, 9, size=n)
-        lens = rng.integers(1, 6, size=n).astype(np.int32)
-        offs = (np.cumsum(gaps) + np.concatenate(
-            [[0], np.cumsum(lens)[:-1]])).astype(np.int32)
-        r = make_requests(offs, lens, capacity=n)
-        starts = co.request_starts(r)
-        perm = rng.permutation(n)
-        from repro.core.requests import RequestList
-        shuffled = RequestList(r.offsets[perm], r.lengths[perm], r.count)
-
+    for name in workloads.HOST_PATTERNS:
+        r, starts, data, n = window_requests(name)
         f_sort = jax.jit(lambda rr, ss: sort_with(rr, ss)[0].offsets)
-        rows.append((f"kernel/sort_jnp/n{n}",
-                     _timeit(f_sort, shuffled, starts), n))
+        rows.append((f"kernel/sort_jnp/{name}",
+                     _timeit(f_sort, r, starts), n))
+        sr, ss = sort_with(r, starts)
         f_coal = jax.jit(lambda rr: co.coalesce_sorted(rr).count)
-        rows.append((f"kernel/coalesce_jnp/n{n}",
-                     _timeit(f_coal, r), n))
-        total = int(lens.sum())
-        data = jnp.arange(total, dtype=jnp.int32)
-        out_len = int(offs[-1] + lens[-1])
-        f_pack = jax.jit(lambda rr, ss, dd: co.pack_data(
-            rr, ss, dd, out_len))
-        rows.append((f"kernel/pack_jnp/n{n}",
-                     _timeit(f_pack, r, starts, data), total))
+        rows.append((f"kernel/coalesce_jnp/{name}", _timeit(f_coal, sr), n))
+        f_pack = jax.jit(lambda rr, s2, dd: co.pack_data(rr, s2, dd,
+                                                         WINDOW))
+        rows.append((f"kernel/pack_jnp/{name}",
+                     _timeit(f_pack, sr, ss, data), int(data.shape[0])))
+    return rows
+
+
+def fused_vs_unfused():
+    """The fused-round drain: one ``pallas_call`` vs the unfused
+    kernel path (sort kernel + two pack-kernel sweeps), per registry
+    workload. Writes the artifact ``check_regression.py --kernels``
+    gates (fused <= unfused, byte identity)."""
+    rows = []
+    blob = {}
+    for name in workloads.HOST_PATTERNS:
+        r, starts, data, n = window_requests(name)
+
+        def unfused(rr, ss, dd):
+            sr, s2 = kops.sort_requests_with(rr, ss)
+            win = kops.pack(sr, s2, dd, 0, WINDOW)
+            mask = kops.pack(sr, s2, jnp.ones_like(dd), 0, WINDOW)
+            return win, mask
+
+        def fused(rr, ss, dd):
+            return kops.fused_drain_pack(rr, ss, dd, 0, WINDOW)
+
+        ju, jf = jax.jit(unfused), jax.jit(fused)
+        wu, mu = jax.block_until_ready(ju(r, starts, data))
+        wf, mf = jax.block_until_ready(jf(r, starts, data))
+        identical = bool(np.array_equal(np.asarray(wu), np.asarray(wf))
+                         and np.array_equal(np.asarray(mu),
+                                            np.asarray(mf)))
+        t_u = _timeit(ju, r, starts, data)
+        t_f = _timeit(jf, r, starts, data)
+        rows.append((f"kernel/drain_unfused/{name}", t_u, n))
+        rows.append((f"kernel/drain_fused/{name}", t_f,
+                     f"speedup={t_u / t_f:.2f}x"))
+        blob[name] = {"unfused_us": t_u, "fused_us": t_f,
+                      "n_requests": n, "out_len": WINDOW,
+                      "byte_identical": identical}
+    out = os.environ.get("BENCH_KERNELS_OUT", "BENCH_kernels.json")
+    with open(out, "w") as f:
+        json.dump({"drain": blob}, f, indent=1, sort_keys=True)
     return rows

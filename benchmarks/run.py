@@ -18,6 +18,7 @@ SUITES = {
     "table1": paper_figures.table1_coalesce,
     "optimal_pl": paper_figures.optimal_pl_sweep,
     "kernels": kernel_bench.sort_coalesce_pack,
+    "kernel_fusion": kernel_bench.fused_vs_unfused,
     "spmd_bytes": spmd_bytes.collective_bytes,
     "rounds": rounds.cb_sweep,
     "pipeline": pipeline.serial_vs_pipelined,

@@ -22,7 +22,8 @@ from pathlib import Path
 import jax
 import numpy as np
 
-from repro.checkpoint.host_io import HostCollectiveIO, IOTimings
+from repro.checkpoint.host_io import _UNSET, HostCollectiveIO, IOTimings
+from repro.core.plan import IOConfig
 
 ALIGN = 256
 
@@ -84,13 +85,21 @@ def save_checkpoint(tree, path: str | Path, *, step: int = 0,
                     io: HostCollectiveIO | None = None,
                     method: str = "tam",
                     local_aggregators: int | None = None,
-                    cb_bytes: int | str | None = None,
-                    pipeline: bool = False,
-                    pipeline_depth: int | str | None = None,
-                    slow_hop_codec: str | None = None,
-                    placement=None,
-                    session=None
+                    cb_bytes: int | str | None = _UNSET,
+                    pipeline: bool = _UNSET,
+                    pipeline_depth: int | str | None = _UNSET,
+                    slow_hop_codec: str | None = _UNSET,
+                    placement=_UNSET,
+                    session=None,
+                    config: IOConfig | None = None,
+                    kernel_fusion: str | None = _UNSET
                     ) -> tuple[dict, IOTimings]:
+    """Serialize ``tree`` to ``<path>.seg*`` through the collective
+    writer. Knobs: pass ONE ``config=IOConfig(...)`` (the unified
+    surface — ``cb_buffer_size`` is byte units here; explicit per-knob
+    kwargs are sparse overrides); the bare per-knob kwargs remain as a
+    deprecated shim (one ``DeprecationWarning``, identical plan —
+    asserted by tests/test_plan.py)."""
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     io = io or HostCollectiveIO(n_ranks=8, n_nodes=2, stripe_size=1 << 20,
@@ -99,10 +108,12 @@ def save_checkpoint(tree, path: str | Path, *, step: int = 0,
     reqs = _rank_requests(tree, manifest, io.n_ranks)
     timings = io.write(reqs, str(path), method=method,
                        local_aggregators=local_aggregators,
-                       cb_bytes=cb_bytes, pipeline=pipeline,
+                       config=config, cb_bytes=cb_bytes,
+                       pipeline=pipeline,
                        pipeline_depth=pipeline_depth,
                        slow_hop_codec=slow_hop_codec,
-                       placement=placement, session=session)
+                       placement=placement,
+                       kernel_fusion=kernel_fusion, session=session)
     manifest["stripe_size"] = io.stripe_size
     manifest["stripe_count"] = io.stripe_count
     (path.parent / (path.name + ".manifest.json")).write_text(
@@ -142,16 +153,20 @@ class CheckpointManager:
     io: HostCollectiveIO
     method: str = "tam"
     local_aggregators: int | None = None
-    cb_bytes: int | str | None = None   # rounds (None = single shot,
-    # "auto" = cost-model autotuned per request set)
-    pipeline: bool = False         # overlap each round's exchange/drain
-    pipeline_depth: int | str | None = None  # in-flight windows (the
+    config: IOConfig | None = None  # the unified knob surface: ONE
+    # IOConfig carrying cb/pipeline/codec/placement/kernel_fusion
+    # (byte units); any per-knob field set below is a sparse override
+    cb_bytes: int | str | None = _UNSET   # DEPRECATED shim (rounds:
+    # None = single shot, "auto" = cost-model autotuned) — use config
+    pipeline: bool = _UNSET        # DEPRECATED shim — use config
+    pipeline_depth: int | str | None = _UNSET  # DEPRECATED shim (the
     # depth-k ring; None = 2 when pipeline, "auto" = measured pick)
-    slow_hop_codec: str | None = None  # lossless wire codec on the
-    # LA -> GA hop (None = off, "auto" = enable when the modeled saving
-    # beats the encode cost; sparse checkpoint pages compress well)
-    placement: str | tuple | None = None  # aggregator placement policy
-    # / permutation / "auto" (core.placement); None = off
+    slow_hop_codec: str | None = _UNSET  # DEPRECATED shim (lossless
+    # wire codec on the LA -> GA hop; "auto" = modeled pick)
+    placement: str | tuple | None = _UNSET  # DEPRECATED shim
+    # (aggregator placement policy / permutation / "auto")
+    kernel_fusion: str | None = _UNSET  # DEPRECATED shim (plan field
+    # only — the host executor has no Pallas hot path)
     session: object | None = None  # IOSession (core.session): repeated
     # saves of the same state shape reuse the compiled plan and feed
     # measured timings back into the "auto" knobs — the manager holds
@@ -164,10 +179,11 @@ class CheckpointManager:
         _, t = save_checkpoint(
             tree, d / f"ckpt_{step:08d}", step=step, io=self.io,
             method=self.method, local_aggregators=self.local_aggregators,
-            cb_bytes=self.cb_bytes, pipeline=self.pipeline,
-            pipeline_depth=self.pipeline_depth,
+            config=self.config, cb_bytes=self.cb_bytes,
+            pipeline=self.pipeline, pipeline_depth=self.pipeline_depth,
             slow_hop_codec=self.slow_hop_codec,
-            placement=self.placement, session=self.session)
+            placement=self.placement, kernel_fusion=self.kernel_fusion,
+            session=self.session)
         self._gc()
         return t
 

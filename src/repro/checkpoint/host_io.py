@@ -31,6 +31,7 @@ Cray.
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass
 
 import numpy as np
@@ -43,6 +44,59 @@ from repro.core.domains import FileLayout
 from repro.core.plan import (IOConfig, IOPlan, compile_plan,
                              resolve_method, resolve_slow_hop_codec)
 from repro.core.session import IOSession  # noqa: F401 (re-export)
+
+# sentinel distinguishing "caller never passed this legacy kwarg" from
+# an explicit None (None is a meaningful knob value: codec off,
+# placement off, single-shot cb)
+_UNSET: object = object()
+
+_KNOB_FIELDS = ("cb_bytes", "pipeline", "pipeline_depth",
+                "slow_hop_codec", "placement", "kernel_fusion")
+
+
+def resolve_knobs(config: IOConfig | None, *, warn: bool = False,
+                  stacklevel: int = 3, **legacy) -> dict:
+    """The unified knob surface: fold a single :class:`IOConfig` and/or
+    per-knob legacy kwargs into concrete knob values.
+
+    ``config=None`` + legacy kwargs is the pre-config calling
+    convention — it still works, but the user-facing entry points
+    (``HostCollectiveIO.write``, ``save_checkpoint``,
+    ``CheckpointManager``) pass ``warn=True`` so it raises ONE
+    :class:`DeprecationWarning` per call site. With a config, explicit
+    legacy kwargs act as sparse overrides of the config's fields (no
+    warning — that is the supported way to vary one knob off a shared
+    config). Knob names map 1:1 onto IOConfig fields except
+    ``cb_bytes`` ↔ ``cb_buffer_size`` (host units are bytes) and the
+    pipeline pair: a non-pipelined config yields
+    ``pipeline_depth=None`` (the host convention for "serial"), so a
+    config round-trips to the identical plan the legacy kwargs built.
+    """
+    legacy = {k: v for k, v in legacy.items() if v is not _UNSET}
+    unknown = set(legacy) - set(_KNOB_FIELDS)
+    if unknown:
+        raise TypeError(f"unknown knob(s): {sorted(unknown)}")
+    if config is None:
+        if legacy and warn:
+            warnings.warn(
+                "per-knob kwargs (cb_bytes / pipeline / pipeline_depth /"
+                " slow_hop_codec / placement / kernel_fusion) are"
+                " deprecated; pass config=IOConfig(...) — legacy kwargs"
+                " on top of a config act as sparse overrides",
+                DeprecationWarning, stacklevel=stacklevel)
+        out = dict(cb_bytes=None, pipeline=False, pipeline_depth=None,
+                   slow_hop_codec=None, placement=None, kernel_fusion=None)
+    else:
+        out = dict(
+            cb_bytes=config.cb_buffer_size,
+            pipeline=config.pipeline,
+            pipeline_depth=(config.pipeline_depth if config.pipeline
+                            else None),
+            slow_hop_codec=config.slow_hop_codec,
+            placement=config.placement,
+            kernel_fusion=config.kernel_fusion)
+    out.update(legacy)
+    return out
 
 
 @dataclass
@@ -224,16 +278,17 @@ class HostCollectiveIO:
 
     # ------------------------------------------------------------------
     def plan_for(self, *, method: str = "twophase",
-                 cb_bytes: int | str | None = None,
-                 pipeline: bool = False,
-                 pipeline_depth: int | str | None = None,
+                 cb_bytes: int | str | None = _UNSET,
+                 pipeline: bool = _UNSET,
+                 pipeline_depth: int | str | None = _UNSET,
                  file_len: int | None = None, rank_requests=None,
                  local_aggregators: int | None = None,
-                 req_cap: int = 0, data_cap: int = 0,
-                 coalesce_cap: int | None = None,
-                 slow_hop_codec: str | None = None,
-                 placement=None, workload: Workload | None = None
-                 ) -> IOPlan:
+                 req_cap: int = _UNSET, data_cap: int = _UNSET,
+                 coalesce_cap: int | None = _UNSET,
+                 slow_hop_codec: str | None = _UNSET,
+                 placement=_UNSET, workload: Workload | None = None,
+                 config: IOConfig | None = None,
+                 kernel_fusion: str | None = _UNSET) -> IOPlan:
         """Compile this writer's schedule — the host side of the
         plan-identity contract: given the same layout/config, this and
         the SPMD ``twophase.plan_for`` produce the SAME
@@ -250,7 +305,29 @@ class HostCollectiveIO:
         is invariant to them). req_cap/data_cap are the SPMD backend's
         static capacities; numpy is dynamic, so they default to 0 and
         are advisory here.
+
+        ``config`` is the unified knob surface (:func:`resolve_knobs`):
+        one :class:`IOConfig` carrying cb/pipeline/codec/placement/
+        kernel_fusion (and the caps), with any explicit per-knob kwarg
+        acting as a sparse override. Given equivalent knobs, the config
+        and legacy spellings compile the IDENTICAL plan (asserted by
+        tests/test_plan.py).
         """
+        k = resolve_knobs(config, cb_bytes=cb_bytes, pipeline=pipeline,
+                          pipeline_depth=pipeline_depth,
+                          slow_hop_codec=slow_hop_codec,
+                          placement=placement, kernel_fusion=kernel_fusion)
+        cb_bytes, pipeline = k["cb_bytes"], k["pipeline"]
+        pipeline_depth = k["pipeline_depth"]
+        slow_hop_codec, placement = k["slow_hop_codec"], k["placement"]
+        kernel_fusion = k["kernel_fusion"]
+        if config is not None:
+            caps = (config.req_cap, config.data_cap, config.coalesce_cap)
+        else:
+            caps = (0, 0, None)
+        req_cap = caps[0] if req_cap is _UNSET else req_cap
+        data_cap = caps[1] if data_cap is _UNSET else data_cap
+        coalesce_cap = caps[2] if coalesce_cap is _UNSET else coalesce_cap
         pipe = pipeline or pipeline_depth is not None
         # the ratio estimate costs an O(total_bytes) zero scan — only
         # pay it when something consumes it (see _ratio_codec); a
@@ -303,7 +380,8 @@ class HostCollectiveIO:
             slow_hop_codec=slow_hop_codec,
             placement=(tuple(placement)
                        if isinstance(placement, (list, tuple))
-                       else placement))
+                       else placement),
+            kernel_fusion=kernel_fusion)
         return compile_plan(
             FileLayout(stripe_size=self.stripe_size,
                        stripe_count=self.stripe_count, file_len=file_len),
@@ -315,12 +393,14 @@ class HostCollectiveIO:
     def write(self, rank_requests, path: str, method: str = "tam",
               local_aggregators: int | None = None,
               failed_aggregators: set[int] | None = None,
-              cb_bytes: int | str | None = None,
-              pipeline: bool = False,
-              pipeline_depth: int | str | None = None,
-              slow_hop_codec: str | None = None,
-              placement=None,
-              session: "IOSession | None" = None) -> IOTimings:
+              cb_bytes: int | str | None = _UNSET,
+              pipeline: bool = _UNSET,
+              pipeline_depth: int | str | None = _UNSET,
+              slow_hop_codec: str | None = _UNSET,
+              placement=_UNSET,
+              session: "IOSession | None" = None,
+              config: IOConfig | None = None,
+              kernel_fusion: str | None = _UNSET) -> IOTimings:
         """rank_requests: list of (offsets[int64], lengths[int64],
         payload[uint8]) per rank, offsets element=byte units here.
         method: "tam" | "twophase" | "auto" (cost-model pick at plan
@@ -375,7 +455,28 @@ class HostCollectiveIO:
         re-resolved ONCE against the previous write's measurements
         (``plan_source="session-trial"``); thereafter the best plan by
         measured total wins.
+
+        config: the unified knob surface — ONE :class:`IOConfig`
+        carrying every knob above (:func:`resolve_knobs`;
+        ``cb_buffer_size`` is ``cb_bytes`` here, byte units). Explicit
+        per-knob kwargs on top of a config are sparse overrides; the
+        per-knob kwargs WITHOUT a config are the deprecated legacy
+        spelling and raise one :class:`DeprecationWarning`. The numpy
+        executor has no Pallas hot path, so ``kernel_fusion`` is
+        accepted (plan field set, shared with the SPMD backend) but is
+        a no-op at execution time — bytes are identical either way.
         """
+        knobs = resolve_knobs(config, warn=True, cb_bytes=cb_bytes,
+                              pipeline=pipeline,
+                              pipeline_depth=pipeline_depth,
+                              slow_hop_codec=slow_hop_codec,
+                              placement=placement,
+                              kernel_fusion=kernel_fusion)
+        cb_bytes, pipeline = knobs["cb_bytes"], knobs["pipeline"]
+        pipeline_depth = knobs["pipeline_depth"]
+        slow_hop_codec = knobs["slow_hop_codec"]
+        placement = knobs["placement"]
+        kernel_fusion = knobs["kernel_fusion"]
         failed_aggregators = failed_aggregators or set()
         plan_t0 = time.perf_counter()
         session = session if session is not None else self.session
@@ -406,7 +507,7 @@ class HostCollectiveIO:
                     cb_bytes, pipeline, pipeline_depth, slow_hop_codec,
                     tuple(placement) if isinstance(placement,
                                                    (list, tuple))
-                    else placement, local_aggregators)
+                    else placement, local_aggregators, kernel_fusion)
             kind, payload = session.begin_write(skey,
                                                 machine=self.machine)
             if kind == "hit":
@@ -419,7 +520,8 @@ class HostCollectiveIO:
                     rank_requests=rank_requests,
                     local_aggregators=local_aggregators,
                     slow_hop_codec=payload["slow_hop_codec"],
-                    placement=payload["placement"])
+                    placement=payload["placement"],
+                    kernel_fusion=kernel_fusion)
                 session.register_trial(skey, plan)
                 source = "session-trial"
         if plan is None:
@@ -435,7 +537,7 @@ class HostCollectiveIO:
                 rank_requests=rank_requests,
                 local_aggregators=local_aggregators,
                 slow_hop_codec=slow_hop_codec, placement=placement,
-                workload=workload)
+                kernel_fusion=kernel_fusion, workload=workload)
             if session is not None:
                 session.register(
                     skey, plan,

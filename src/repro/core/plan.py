@@ -87,6 +87,13 @@ class IOConfig:
                     permutation tuple, or ``"auto"`` (argmin of
                     ``cost_model.placement_cost``). ``None`` = off —
                     the legacy identity path.
+    kernel_fusion:  per-round kernel lowering (``passes.lower_kernels``):
+                    ``"fused_round"`` drains each write window through
+                    ONE Pallas kernel (sort + coalesce + pack + codec
+                    zero-skip encode, ``kernels.fused_round``) instead
+                    of three separate kernel launches / HBM round
+                    trips; ``None`` = the unfused jnp path. Byte
+                    -identical by contract (rounds_checks fuzz).
     """
 
     req_cap: int
@@ -98,6 +105,7 @@ class IOConfig:
     axis_names: tuple[str, str, str] = ("node", "lagg", "lmem")
     slow_hop_codec: str | None = None
     placement: str | tuple[int, ...] | None = None
+    kernel_fusion: str | None = None
 
 
 @dataclass(frozen=True)
@@ -185,6 +193,11 @@ class IOPlan:
         the host executor charges the fast-hop/slow-hop split the
         placement induces — so one plan field governs where aggregation
         lands everywhere (ARCHITECTURE.md § sessions and placement).
+    kernel_fusion: resolved per-round kernel lowering (the
+        ``lower_kernels`` pass): ``"fused_round"`` = the single Pallas
+        drain kernel of ``kernels.fused_round``; ``None`` = the unfused
+        jnp path. Only the SPMD write drain consumes it (reads have no
+        sort/pack drain; the host executor is numpy).
     """
 
     layout: FileLayout
@@ -201,6 +214,7 @@ class IOPlan:
     tam_read_fallback: bool = False
     slow_hop_codec: str | None = None
     placement: tuple[int, ...] | None = None
+    kernel_fusion: str | None = None
 
     @property
     def domain_len(self) -> int:
@@ -213,6 +227,44 @@ class IOPlan:
 
     def scheduler(self) -> RoundScheduler:
         return RoundScheduler(self.layout, self.n_aggregators, self.cb)
+
+    def describe(self) -> str:
+        """One line per field (plus the derived schedule numbers) —
+        the human-readable form pass traces and test failure messages
+        print. Field order follows the dataclass so two describes line
+        up for eyeball comparison; :func:`plan_diff` gives the
+        field-level delta."""
+        from dataclasses import fields
+        lines = ["IOPlan:"]
+        for f in fields(self):
+            v = getattr(self, f.name)
+            if f.name == "layout":
+                v = (f"FileLayout(stripe_size={v.stripe_size}, "
+                     f"stripe_count={v.stripe_count}, "
+                     f"file_len={v.file_len})")
+                lines.append(f"  {f.name:<17} = {v}")
+            else:
+                lines.append(f"  {f.name:<17} = {v!r}")
+        if isinstance(self.cb, int) and self.cb > 0:
+            lines.append(f"  {'domain_len':<17} = {self.domain_len!r}"
+                         " (derived)")
+            lines.append(f"  {'in_flight_windows':<17} = "
+                         f"{self.in_flight_windows!r} (derived)")
+        return "\n".join(lines)
+
+
+def plan_diff(a: IOPlan, b: IOPlan) -> str:
+    """Field-level textual diff of two plans: one ``field: a -> b``
+    line per differing field, ``""`` when the plans are equal. Wired
+    into pass tracing (``passes.trace_report``) and property-test
+    failure messages so a bad rewrite names the field it broke."""
+    from dataclasses import fields
+    lines = []
+    for f in fields(IOPlan):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if va != vb:
+            lines.append(f"{f.name}: {va!r} -> {vb!r}")
+    return "\n".join(lines)
 
 
 def _default_workload(layout: FileLayout, cfg: IOConfig, n_aggregators: int,
@@ -284,13 +336,20 @@ def compile_plan(layout: FileLayout, cfg: IOConfig, *,
                  n_aggregators: int, n_nodes: int, n_ranks: int,
                  method: str = "twophase", direction: str = "write",
                  machine=None, workload=None,
-                 unit_bytes: int = ELEM_BYTES) -> IOPlan:
-    """Compile one collective-I/O schedule into an :class:`IOPlan`.
+                 unit_bytes: int = ELEM_BYTES, trace: bool = False):
+    """Compile one collective-I/O schedule into an :class:`IOPlan` by
+    running the pass pipeline of ``repro.core.passes``.
 
     This is THE planner: both executors' entry points
     (``twophase.plan_for`` / ``tam`` wrappers and
     ``HostCollectiveIO.plan_for``) route through it, so all domain /
     stripe / window / round derivation lives here and nowhere else.
+    Every knob resolution is one named, pure ``IOPlan -> IOPlan`` pass
+    (normalize_layout -> resolve_codec -> resolve_method ->
+    resolve_placement -> resolve_cb_and_depth -> coalesce_windows ->
+    validate -> lower_kernels; see ``core/passes.py`` for why that
+    order). The pipeline is deterministic — the session-cache-key
+    contract (tests/test_plan_property.py).
 
     layout:        striped file layout. Units are the caller's (elements
                    on the SPMD side, bytes on the host side) — the plan
@@ -305,85 +364,30 @@ def compile_plan(layout: FileLayout, cfg: IOConfig, *,
                    the auto resolutions; derived from cfg + layout when
                    absent.
     machine:       optional ``cost_model.Machine`` calibration.
+    trace:         when True, return ``(plan, snapshots)`` where
+                   ``snapshots`` is one ``(pass_name, plan)`` pair per
+                   pass — diff adjacent snapshots with
+                   :func:`plan_diff` (or ``passes.trace_report``) to
+                   see exactly which pass rewrote which field.
 
     Raises ``ValueError`` for schedules violating the round-partition
     invariants (uneven domains, non-aligned cb) — compile time, not run
     time, is where a bad schedule should die.
     """
     from repro.core import cost_model as cm
-    if direction not in ("write", "read"):
-        raise ValueError(f"unknown direction {direction!r}")
-    if layout.file_len % n_aggregators:
-        raise ValueError("file_len must divide evenly among aggregators")
-    domain_len = layout.file_len // n_aggregators
+    from repro.core import passes as passes_mod
     machine = machine or cm.Machine()
     w = workload if workload is not None else _default_workload(
         layout, cfg, n_aggregators, n_nodes, n_ranks, unit_bytes)
-
-    # ---- slow-hop wire codec ------------------------------------------
-    # Resolved FIRST: the codec's beta discount / encode cost feed every
-    # later auto resolution (method, cb, depth) through the workload.
-    from repro.core import codec as codec_mod
-    slow_hop_codec = cfg.slow_hop_codec
-    if slow_hop_codec == "auto":
-        slow_hop_codec = resolve_slow_hop_codec(w, machine)
-    if slow_hop_codec is not None:
-        c = codec_mod.get_codec(slow_hop_codec)    # typo dies here
-        if w.slow_hop_ratio == 1.0 and not c.lossless:
-            w = cm.with_codec(w, c.modeled_ratio(0.0, w.total_bytes))
-    elif w.slow_hop_ratio != 1.0:
-        w = cm.with_codec(w, 1.0)    # codec off: no discount, no cost
-
-    # ---- aggregation topology -----------------------------------------
-    if method == "auto":
-        method = resolve_method(w, machine)
-    if method not in ("twophase", "tam"):
-        raise ValueError(f"unknown method {method!r}")
-    tam_read_fallback = method == "tam" and direction == "read"
-
-    # ---- aggregator placement -----------------------------------------
-    # Resolved from the same workload the other autos see; an explicit
-    # permutation is validated here (a non-bijection is a bad schedule
-    # and dies at compile time like any other).
-    from repro.core import placement as placement_mod
-    placement = placement_mod.resolve_placement(
-        cfg.placement, n_aggregators, n_nodes, workload=w,
-        machine=machine)
-
-    # ---- round window schedule + pipeline depth -----------------------
-    cb = cfg.cb_buffer_size
-    depth: int | str = cfg.pipeline_depth if cfg.pipeline else 1
-    P_L_arg = None
-    if method == "tam":
-        P_L_arg, _ = cm.optimal_PL(w, machine)
-    if cb == "auto" or depth == "auto":
-        cands = _legal_cb_candidates(domain_len, layout.stripe_size,
-                                     unit_bytes)
-        if cb == "auto" and depth == "auto":
-            cb_bytes, depth, _ = cm.optimal_cb_and_depth(
-                w, machine, P_L=P_L_arg, candidates=cands)
-            cb = cb_bytes // unit_bytes
-        elif cb == "auto":
-            cb_bytes, _ = cm.optimal_cb(w, machine, P_L=P_L_arg,
-                                        candidates=cands)
-            cb = cb_bytes // unit_bytes
-        else:  # depth == "auto" at a fixed cb
-            wc = cm.with_measured_rounds(
-                w, cm.rounds_for_cb(w, (cb if cb is not None
-                                        else domain_len) * unit_bytes))
-            depth, _ = cm.optimal_depth(wc, machine, P_L=P_L_arg)
-    if cb is None:
-        cb = domain_len            # single shot == the 1-round schedule
-    depth = max(1, int(depth))
-
-    sched = RoundScheduler(layout, n_aggregators, cb)   # validates
-    return IOPlan(
-        layout=layout, n_aggregators=n_aggregators, cb=sched.cb,
-        n_rounds=sched.n_rounds, method=method, direction=direction,
-        pipeline_depth=depth, req_cap=cfg.req_cap, data_cap=cfg.data_cap,
-        coalesce_cap=cfg.coalesce_cap, axis_names=cfg.axis_names,
-        tam_read_fallback=tam_read_fallback,
-        slow_hop_codec=slow_hop_codec, placement=placement)
+    ctx = passes_mod.PlanContext(cfg=cfg, workload=w, machine=machine,
+                                 n_nodes=n_nodes, n_ranks=n_ranks,
+                                 unit_bytes=unit_bytes)
+    plan = passes_mod.initial_plan(layout, cfg,
+                                   n_aggregators=n_aggregators,
+                                   method=method, direction=direction)
+    snapshots: list | None = [] if trace else None
+    plan = passes_mod.run_passes(plan, ctx, trace=snapshots)
+    return (plan, tuple(snapshots)) if trace else plan
 
 
 def resolve_cb_buffer_size(layout: FileLayout, n_nodes: int, n_ranks: int,

@@ -133,7 +133,8 @@ from repro.core.plan import RoundScheduler  # noqa: F401
 from repro.core.requests import PAD_OFFSET, RequestList, split_at_stripes
 
 
-def _codec_hooks(slow_hop_codec: str | None, dtype, state_shape):
+def _codec_hooks(slow_hop_codec: str | None, dtype, state_shape,
+                 fused: bool = False):
     """(encode, decode, state0) for the slow-hop wire transform.
 
     ``encode(data, state) -> (wire_parts, state)`` runs inside the
@@ -143,6 +144,11 @@ def _codec_hooks(slow_hop_codec: str | None, dtype, state_shape):
     stateless codecs — and is threaded through the round loop by
     ``_run_rounds`` exactly like the in-flight ``rx`` windows. A lossy
     codec on a non-float payload dies here, at trace time.
+
+    ``fused`` (``IOPlan.kernel_fusion == "fused_round"``) swaps the rle
+    codec's stable-argsort compaction for the Pallas zero-skip kernel
+    (``kernels.fused_round.zero_skip_encode``) — byte-identical wire,
+    one VMEM block per bucket instead of an argsort through HBM.
     """
     if slow_hop_codec is None:
         return (lambda data, st: ((data,), st),
@@ -153,6 +159,13 @@ def _codec_hooks(slow_hop_codec: str | None, dtype, state_shape):
             f"slow_hop_codec={c.name!r} is lossy (float payloads only) "
             f"but the payload dtype is {jnp.dtype(dtype)}")
     state0 = c.jax_init_state(state_shape, dtype) if c.stateful else ()
+    if fused and c.name == "rle":
+        from repro.kernels import ops as kops
+
+        def enc(data, st):
+            return kops.rle_zero_skip_encode(data), st
+
+        return enc, c.jax_decode, state0
     return c.jax_encode, c.jax_decode, state0
 
 
@@ -219,23 +232,34 @@ def _lowest(dtype) -> jax.Array:
 
 
 def _make_drain(base0, cb: int, merge_axes: tuple[str, ...], dtype,
-                decode=None):
+                decode=None, fused: bool = False):
     """Drain closure: merge one round's received buckets into the
     carried domain buffer (decode wire → flatten → sort → pack window →
     masked pmax merge → accumulate at ``t * cb``). ``rx`` is
     ``(offsets, lengths, counts, *wire_parts)``; ``decode`` inverts the
-    slow-hop codec's encode (identity when no codec is planned)."""
+    slow-hop codec's encode (identity when no codec is planned).
+
+    ``fused`` (``IOPlan.kernel_fusion == "fused_round"``) runs the sort
+    + dual pack as ONE Pallas kernel (``kernels.fused_round``) instead
+    of a stable argsort plus two scatter packs — byte-identical by the
+    rounds_checks contract, one HBM round-trip instead of three."""
     low = _lowest(dtype)
 
     def drain(t, buf, rx):
         data = rx[3] if decode is None else decode(rx[3:]).astype(dtype)
         merged, starts_m, data_flat = flatten_buckets(rx[0], rx[1],
                                                       rx[2], data)
-        sorted_r, starts_s = sort_with(merged, starts_m)
         base = base0 + t * cb
-        win = co.pack_data(sorted_r, starts_s, data_flat, cb, base=base)
-        mask = co.pack_data(sorted_r, starts_s,
-                            jnp.ones_like(data_flat), cb, base=base)
+        if fused:
+            from repro.kernels import ops as kops
+            win, mask = kops.fused_drain_pack(merged, starts_m,
+                                              data_flat, base, cb)
+        else:
+            sorted_r, starts_s = sort_with(merged, starts_m)
+            win = co.pack_data(sorted_r, starts_s, data_flat, cb,
+                               base=base)
+            mask = co.pack_data(sorted_r, starts_s,
+                                jnp.ones_like(data_flat), cb, base=base)
         comb = lax.pmax(jnp.where(mask != 0, win, low), merge_axes)
         anyw = lax.pmax(mask, merge_axes)
         final = jnp.where(anyw != 0, comb, jnp.zeros((), dtype))
@@ -314,7 +338,8 @@ def exchange_rounds_write(sched: RoundScheduler, node_axis: str,
                           pipeline: bool = False,
                           depth: int | None = None,
                           slow_hop_codec: str | None = None,
-                          placement=None):
+                          placement=None,
+                          kernel_fusion: str | None = None):
     """Round loop of the collective write (runs inside a shard_map body).
 
     r/starts/data: this sender's offset-sorted requests, the payload
@@ -332,7 +357,12 @@ def exchange_rounds_write(sched: RoundScheduler, node_axis: str,
     (domain shard [domain_len], stats dict); ``requests_at_ga`` is
     already summed over ``merge_axes`` (replicated at the node) and
     reported in DOMAIN order whatever the placement.
+    ``kernel_fusion="fused_round"`` (``IOPlan.kernel_fusion``, set by
+    the planner's ``lower_kernels`` pass) drains each window with the
+    single fused Pallas kernel and, when the codec is rle, encodes the
+    wire with the fused zero-skip kernel — byte-identical either way.
     """
+    fused = kernel_fusion == "fused_round"
     n_dest, cb, dl = sched.n_aggregators, sched.cb, sched.domain_len
     data_cap = data.shape[0]
     split = split_at_stripes(r, cb, sched.max_spans(data_cap))
@@ -346,7 +376,8 @@ def exchange_rounds_write(sched: RoundScheduler, node_axis: str,
     a2a = partial(lax.all_to_all, axis_name=node_axis, split_axis=0,
                   concat_axis=0, tiled=True)
     enc, dec, cstate0 = _codec_hooks(slow_hop_codec, data.dtype,
-                                     (n_dest, round_data_cap))
+                                     (n_dest, round_data_cap),
+                                     fused=fused)
 
     def exchange(t, cst):
         active = split.valid_mask() & (window == t)
@@ -360,7 +391,8 @@ def exchange_rounds_write(sched: RoundScheduler, node_axis: str,
               + tuple(a2a(p) for p in wire))
         return rx, (b.dropped_requests, b.dropped_elems), cst
 
-    drain = _make_drain(base0, cb, merge_axes, data.dtype, decode=dec)
+    drain = _make_drain(base0, cb, merge_axes, data.dtype, decode=dec,
+                        fused=fused)
     buf, (drop_r, drop_e), (reqs_rx,) = _run_rounds(
         sched.n_rounds, dl, data.dtype, exchange, drain, 2, 1,
         _effective_depth(pipeline, depth), codec_state=cstate0)
@@ -380,7 +412,8 @@ def exchange_rounds_write_tam(sched: RoundScheduler, node_axis: str,
                               pipeline: bool = False,
                               depth: int | None = None,
                               slow_hop_codec: str | None = None,
-                              placement=None):
+                              placement=None,
+                              kernel_fusion: str | None = None):
     """Fused TAM round loop: BOTH aggregation layers run per window.
 
     Per round t, stage 1 gathers only the window's requests over
@@ -397,7 +430,11 @@ def exchange_rounds_write_tam(sched: RoundScheduler, node_axis: str,
     (pre-gather — psum over all axes); ``*_agg`` drops and the
     before/after coalesce counts are replicated across ``lmem_axis``
     (post-gather — divide the psum by the lmem size).
+    ``kernel_fusion="fused_round"`` fuses the global-aggregator drain
+    (and the rle wire encode) exactly as in
+    :func:`exchange_rounds_write`.
     """
+    fused = kernel_fusion == "fused_round"
     n_dest, cb, dl = sched.n_aggregators, sched.cb, sched.domain_len
     data_cap = data.shape[0]
     split = split_at_stripes(r, cb, sched.max_spans(data_cap))
@@ -421,7 +458,7 @@ def exchange_rounds_write_tam(sched: RoundScheduler, node_axis: str,
     lmem_size = axis_size(lmem_axis)
     enc, dec, cstate0 = _codec_hooks(
         slow_hop_codec, data.dtype,
-        (n_dest, min(lmem_size * rdcap, cb)))
+        (n_dest, min(lmem_size * rdcap, cb)), fused=fused)
 
     def exchange(t, cst):
         # ---- stage 1: window-bounded intra-node aggregation ---------
@@ -472,7 +509,8 @@ def exchange_rounds_write_tam(sched: RoundScheduler, node_axis: str,
                     b.dropped_requests + drop_agg_r, b.dropped_elems,
                     merged.count, agg.count), cst
 
-    drain = _make_drain(base0, cb, (lagg_axis,), data.dtype, decode=dec)
+    drain = _make_drain(base0, cb, (lagg_axis,), data.dtype, decode=dec,
+                        fused=fused)
     buf, ex_acc, dr_acc = _run_rounds(
         sched.n_rounds, dl, data.dtype, exchange, drain, 6, 1,
         _effective_depth(pipeline, depth), codec_state=cstate0)

@@ -66,7 +66,8 @@ def _write_shard_fn(plan: IOPlan, use_kernels: bool,
             coalesce_cap=plan.coalesce_cap, use_kernels=use_kernels,
             depth=plan.pipeline_depth,
             slow_hop_codec=plan.slow_hop_codec,
-            placement=plan.placement)
+            placement=plan.placement,
+            kernel_fusion=plan.kernel_fusion)
         lmem_size = axis_size(lmem)
         all_axes = (node, lagg, lmem)
         stats = {
@@ -90,7 +91,8 @@ def _write_shard_fn(plan: IOPlan, use_kernels: bool,
         sched, node, (lagg, lmem), r, starts, data,
         depth=plan.pipeline_depth,
         slow_hop_codec=plan.slow_hop_codec,
-        placement=plan.placement)
+        placement=plan.placement,
+        kernel_fusion=plan.kernel_fusion)
     stats = {
         "dropped_requests": lax.psum(st["dropped_requests"],
                                      (node, lagg, lmem)),

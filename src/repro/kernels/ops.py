@@ -91,6 +91,47 @@ def pack(r: RequestList, starts: jax.Array, data: jax.Array, base,
     return out[:out_len]
 
 
+def fused_drain_pack(r: RequestList, starts: jax.Array, data: jax.Array,
+                     base, out_len: int, interpret: bool | None = None):
+    """Kernel-backed equivalent of the drain's ``sort_with`` + two
+    ``pack_data`` calls, in one ``pallas_call``
+    (``kernels.fused_round.fused_sort_pack``).
+
+    Takes the UNSORTED merged request list (the fusion absorbs the
+    sort); returns ``(window, mask)``, both [out_len] in data.dtype.
+    Selected by ``IOPlan.kernel_fusion == "fused_round"``.
+    """
+    from repro.kernels import fused_round
+
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    cap = _next_pow2(r.capacity)
+    off = _pad_block(r.offsets, cap, PAD_OFFSET)
+    ln = _pad_block(r.lengths, cap, 0)
+    st = _pad_block(starts, cap, 0)
+    padded_out = -(-out_len // pack_mod.TILE) * pack_mod.TILE
+    win, mask = fused_round.fused_sort_pack(off, ln, st, data, base,
+                                            padded_out,
+                                            interpret=interpret)
+    return win[:out_len], mask[:out_len]
+
+
+def rle_zero_skip_encode(data: jax.Array, interpret: bool | None = None):
+    """Kernel-backed equivalent of ``RleCodec.jax_encode``'s zero-skip
+    compaction (``kernels.fused_round.zero_skip_encode``): pads rows to
+    a power of two, compacts, slices back. Returns ``(vals, pos)`` with
+    the codec's exact wire layout (pos == -1 in the padding)."""
+    from repro.kernels import fused_round
+
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    lead, cap = data.shape[:-1], data.shape[-1]
+    n = _next_pow2(cap)
+    rows = data.reshape(-1, cap)
+    padded = _pad_block(rows, n, 0)
+    vals, pos = fused_round.zero_skip_encode(padded, interpret=interpret)
+    return (vals[:, :cap].reshape(*lead, cap),
+            pos[:, :cap].reshape(*lead, cap))
+
+
 def fused_attention(q, k, v, *, causal: bool = True,
                     window: int | None = None,
                     logit_cap: float | None = None, q_offset: int = 0,

@@ -43,6 +43,17 @@ swapped} x codec {None, rle} x depth {1, 2}, and the host executor
 codec {None, rle} x depth {1, 2} — and every single run must
 reproduce the ``write_reference`` oracle bytes exactly, so the two
 backends are compared on inputs nobody hand-picked.
+
+Kernel fusion: every SPMD fuzz configuration runs a second time with
+``IOConfig.kernel_fusion="fused_round"`` (the planner's
+``lower_kernels`` pass selects the single-``pallas_call`` sort +
+dual-pack drain of ``kernels/fused_round.py``, plus the fused rle
+zero-skip encode when the codec is on) — the fused writes must be
+byte-identical to BOTH the unfused writes and the oracle across the
+whole placement x codec x depth cross, on both schedules. The host
+executor accepts the same unified config (``write(config=...)``) and
+ignores the fusion (numpy backend) — its bytes must match the oracle
+too, closing the both-executors contract.
 """
 import numpy as np
 import jax
@@ -296,6 +307,17 @@ def main():
                        placement=SWAP)
         fuzz_fns[("tam", True, codec, k)] = jax.jit(
             make_tam_write(mesh, layout, cfgf))
+    # the SAME cross with the fused round kernel selected — every fuzz
+    # run is also a fused-vs-unfused byte-identity check
+    fused_fns = {}
+    for (mname, swapped, codec, k) in fuzz_fns:
+        cfgf = replace(base, cb_buffer_size=32, pipeline=k > 1,
+                       pipeline_depth=k, slow_hop_codec=codec,
+                       placement=SWAP if swapped else None,
+                       kernel_fusion="fused_round")
+        mk = make_twophase_write if mname == "twophase" else make_tam_write
+        fused_fns[(mname, swapped, codec, k)] = jax.jit(
+            mk(mesh, layout, cfgf))
 
     rng = np.random.default_rng(0)
     patterns = {"mixed": mixed_pattern(rng),
@@ -398,13 +420,20 @@ def main():
         ref = write_reference(layout, O, L, C, D)
         for (mname, swapped, codec, k), fn in fuzz_fns.items():
             f, s = fn(O, L, C, D)
+            got = np.asarray(f).reshape(-1)
             tag = (f"fuzz{seed}/{mname}/pl{int(swapped)}_"
                    f"{codec or 'raw'}_k{k}")
-            check(f"{tag}_vs_ref",
-                  np.array_equal(np.asarray(f).reshape(-1), ref))
+            check(f"{tag}_vs_ref", np.array_equal(got, ref))
             check(f"{tag}_no_drops",
                   int(s["dropped_requests"]) == 0
                   and int(s["dropped_elems"]) == 0)
+            ff, sf = fused_fns[(mname, swapped, codec, k)](O, L, C, D)
+            gotf = np.asarray(ff).reshape(-1)
+            check(f"{tag}_fused_vs_unfused", np.array_equal(gotf, got))
+            check(f"{tag}_fused_vs_ref", np.array_equal(gotf, ref))
+            check(f"{tag}_fused_no_drops",
+                  int(sf["dropped_requests"]) == 0
+                  and int(sf["dropped_elems"]) == 0)
         # the host executor moves the same pattern in byte units; its
         # files must reassemble to the same oracle bytes under the
         # placement x codec x depth cross
@@ -430,6 +459,20 @@ def main():
                   cb_bytes=128, pipeline_depth=2, slow_hop_codec="rle",
                   placement=(1, 0))
         check(f"fuzz{seed}/host/tam_swap_rle_k2_vs_spmd",
+              np.array_equal(hio.read_file(path, FILE_LEN * 4),
+                             ref_bytes))
+        # unified-config host write with the fusion selected: the plan
+        # carries kernel_fusion (shared field with the SPMD backend)
+        # but the numpy executor has no Pallas hot path — bytes must
+        # still match the oracle exactly
+        cfg_host = IOConfig(req_cap=32, data_cap=DATA_CAP,
+                            coalesce_cap=32, cb_buffer_size=128,
+                            pipeline=True, pipeline_depth=2,
+                            slow_hop_codec="rle", placement="spread",
+                            kernel_fusion="fused_round")
+        path = f"{hd}/fusedcfg"
+        hio.write(breqs, path, method="twophase", config=cfg_host)
+        check(f"fuzz{seed}/host/config_fused_vs_spmd",
               np.array_equal(hio.read_file(path, FILE_LEN * 4),
                              ref_bytes))
 

@@ -1,0 +1,155 @@
+"""The planner pass pipeline (core/passes.py): registry shape and
+order, per-pass tracing through ``compile_plan(trace=True)``, per-pass
+idempotence on final plans, the ``lower_kernels`` lowering rules, and
+the ``describe``/``plan_diff`` introspection surface."""
+import dataclasses
+
+import pytest
+
+from _golden_plans import CASES, compile_case
+
+from repro.core import cost_model as cm
+from repro.core import passes
+from repro.core.domains import contiguous_layout
+from repro.core.plan import (IOConfig, _default_workload, compile_plan,
+                             plan_diff)
+
+EXPECTED_ORDER = ("normalize_layout", "resolve_codec", "resolve_method",
+                  "resolve_placement", "resolve_cb_and_depth",
+                  "coalesce_windows", "validate", "lower_kernels")
+
+
+def _ctx(layout, cfg, n_aggregators=2, n_nodes=2, n_ranks=8):
+    """The same PlanContext compile_plan builds (default workload)."""
+    return passes.PlanContext(
+        cfg=cfg,
+        workload=_default_workload(layout, cfg, n_aggregators, n_nodes,
+                                   n_ranks, 4),
+        machine=cm.Machine(), n_nodes=n_nodes, n_ranks=n_ranks,
+        unit_bytes=4)
+
+
+def test_registry_names_and_order():
+    assert tuple(p.name for p in passes.PASSES) == EXPECTED_ORDER
+    assert set(passes.PASS_REGISTRY) == set(EXPECTED_ORDER)
+    for p in passes.PASSES:
+        assert passes.PASS_REGISTRY[p.name] is p
+        assert p.doc, f"pass {p.name} is undocumented"
+
+
+def test_trace_exposes_one_snapshot_per_pass():
+    plan, snaps = compile_case(
+        {"method": "auto", "cb": "auto", "pipeline": True,
+         "pipeline_depth": "auto", "codec": "auto", "placement": "auto",
+         "direction": "write"}, trace=True)
+    assert [name for name, _ in snaps] == list(EXPECTED_ORDER)
+    assert snaps[-1][1] == plan                 # last snapshot IS the plan
+    # every auto is gone by validate; the snapshots show WHERE each one
+    # resolved (trace_report names the pass and the rewritten field)
+    by_name = dict(snaps)
+    assert by_name["resolve_codec"].slow_hop_codec != "auto"
+    assert by_name["resolve_method"].method in ("twophase", "tam")
+    assert isinstance(by_name["resolve_placement"].placement, tuple)
+    assert isinstance(by_name["resolve_cb_and_depth"].cb, int)
+    assert by_name["coalesce_windows"].n_rounds >= 1
+    report = passes.trace_report(snaps)
+    assert "[resolve_method] " in report
+    assert "cb:" in report and "n_rounds:" in report
+
+
+def test_snapshots_are_immutable_states_not_aliases():
+    _, snaps = compile_case(
+        {"method": "auto", "cb": None, "pipeline": False,
+         "pipeline_depth": 2, "codec": None, "placement": None,
+         "direction": "write"}, trace=True)
+    # a pass returns a NEW plan; snapshots of different states differ
+    assert snaps[0][1].n_rounds == 0            # pre-coalesce marker
+    assert dict(snaps)["coalesce_windows"].n_rounds == 1
+
+
+@pytest.mark.parametrize("case", [CASES[0], CASES[40], CASES[121],
+                                  CASES[242], CASES[-2], CASES[-1]],
+                         ids=lambda c: c["direction"] + "/" + str(c["method"]))
+def test_every_pass_is_idempotent_on_the_final_plan(case):
+    """Purity contract: the final plan is a fixed point of every single
+    pass (and hence of the whole pipeline) — re-running a rewrite on
+    its own output changes nothing."""
+    from repro.core.domains import FileLayout
+    from _golden_plans import LAYOUT, N_AGGREGATORS, N_NODES, N_RANKS
+    plan = compile_case(case)
+    cfg = IOConfig(req_cap=8, data_cap=64, coalesce_cap=32,
+                   cb_buffer_size=case["cb"], pipeline=case["pipeline"],
+                   pipeline_depth=case["pipeline_depth"],
+                   slow_hop_codec=case["codec"],
+                   placement=case["placement"])
+    ctx = _ctx(FileLayout(**LAYOUT), cfg, N_AGGREGATORS, N_NODES, N_RANKS)
+    for p in passes.PASSES:
+        again = p.fn(plan, ctx)
+        assert again == plan, (
+            f"pass {p.name} not idempotent:\n{plan_diff(plan, again)}")
+    assert passes.run_passes(plan, ctx) == plan
+
+
+def test_initial_plan_carries_knobs_verbatim():
+    layout = contiguous_layout(320, 2)
+    cfg = IOConfig(req_cap=8, data_cap=64, cb_buffer_size="auto",
+                   pipeline=True, pipeline_depth="auto",
+                   slow_hop_codec="auto", placement="spread",
+                   kernel_fusion="fused_round")
+    p0 = passes.initial_plan(layout, cfg, n_aggregators=2)
+    assert p0.cb == "auto" and p0.pipeline_depth == "auto"
+    assert p0.slow_hop_codec == "auto" and p0.placement == "spread"
+    assert p0.kernel_fusion == "fused_round"
+    assert p0.n_rounds == 0                     # not yet scheduled
+
+
+def test_validate_rejects_surviving_autos():
+    layout = contiguous_layout(320, 2)
+    cfg = IOConfig(req_cap=8, data_cap=64, cb_buffer_size=None,
+                   slow_hop_codec="auto")
+    p0 = passes.initial_plan(layout, cfg, n_aggregators=2)
+    ctx = _ctx(layout, cfg)
+    # skip resolve_codec: "auto" reaches validate and dies by name
+    partial = tuple(p for p in passes.PASSES
+                    if p.name in ("normalize_layout", "coalesce_windows"))
+    staged = passes.run_passes(p0, ctx, passes=partial)
+    with pytest.raises(ValueError, match="slow_hop_codec"):
+        passes.PASS_REGISTRY["validate"].fn(staged, ctx)
+
+
+def test_lower_kernels_rules():
+    layout = contiguous_layout(320, 2)
+    kw = dict(n_aggregators=2, n_nodes=2, n_ranks=8)
+    fused = IOConfig(req_cap=8, data_cap=64, cb_buffer_size=32,
+                     kernel_fusion="fused_round")
+    assert compile_plan(layout, fused, **kw).kernel_fusion == "fused_round"
+    # reads have no sort/pack drain: fusion lowers to None
+    assert compile_plan(layout, fused, direction="read",
+                        **kw).kernel_fusion is None
+    # the default stays unfused
+    plain = IOConfig(req_cap=8, data_cap=64, cb_buffer_size=32)
+    assert compile_plan(layout, plain, **kw).kernel_fusion is None
+    with pytest.raises(ValueError, match="kernel_fusion"):
+        compile_plan(layout,
+                     dataclasses.replace(fused, kernel_fusion="warp"),
+                     **kw)
+
+
+def test_plan_diff_and_describe():
+    layout = contiguous_layout(320, 2)
+    kw = dict(n_aggregators=2, n_nodes=2, n_ranks=8)
+    a = compile_plan(layout, IOConfig(req_cap=8, data_cap=64,
+                                      cb_buffer_size=32), **kw)
+    b = compile_plan(layout, IOConfig(req_cap=8, data_cap=64,
+                                      cb_buffer_size=80,
+                                      slow_hop_codec="rle"), **kw)
+    assert plan_diff(a, a) == ""
+    d = plan_diff(a, b)
+    assert "cb: 32 -> 80" in d
+    assert "n_rounds: 5 -> 2" in d
+    assert "slow_hop_codec: None -> 'rle'" in d
+    assert "method" not in d                    # unchanged fields silent
+    desc = a.describe()
+    for f in dataclasses.fields(type(a)):
+        assert f.name in desc
+    assert "in_flight_windows" in desc          # derived schedule numbers

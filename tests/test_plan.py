@@ -59,6 +59,93 @@ def test_plan_identity_tam():
 
 
 # ---------------------------------------------------------------------------
+# the unified knob surface: config == legacy shim, plan-identical
+# ---------------------------------------------------------------------------
+
+def test_config_and_legacy_shim_compile_identical_plans():
+    """``plan_for(config=IOConfig(...))`` and the deprecated per-knob
+    kwargs are the SAME knob surface: given equivalent knobs they must
+    compile field-identical (and identically hashed) plans — the shim
+    is a spelling, not a second planner."""
+    host = _host()
+    for cb, pipe, depth, codec, pl in (
+            (2048, True, 3, "rle", "spread"),
+            (1024, False, None, None, None),
+            (None, True, 2, None, (1, 0, 3, 2))):
+        cfg = IOConfig(req_cap=64, data_cap=4096, coalesce_cap=32,
+                       cb_buffer_size=cb, pipeline=pipe,
+                       pipeline_depth=depth if depth is not None else 2,
+                       slow_hop_codec=codec, placement=pl,
+                       kernel_fusion="fused_round")
+        p_cfg = host.plan_for(method="twophase", file_len=1 << 16,
+                              config=cfg)
+        p_legacy = host.plan_for(
+            method="twophase", file_len=1 << 16, cb_bytes=cb,
+            pipeline=pipe, pipeline_depth=depth if pipe else None,
+            slow_hop_codec=codec, placement=pl,
+            kernel_fusion="fused_round", req_cap=64, data_cap=4096,
+            coalesce_cap=32)
+        assert p_cfg == p_legacy
+        assert hash(p_cfg) == hash(p_legacy)
+        assert p_cfg.kernel_fusion == "fused_round"
+    # sparse override: one explicit kwarg on top of a config rewrites
+    # exactly that knob
+    base_cfg = IOConfig(req_cap=64, data_cap=4096, cb_buffer_size=2048,
+                        slow_hop_codec="rle")
+    p_over = host.plan_for(method="twophase", file_len=1 << 16,
+                           config=base_cfg, slow_hop_codec=None)
+    assert p_over.slow_hop_codec is None and p_over.cb == 2048
+
+
+def test_legacy_write_kwargs_deprecation_and_byte_identity(tmp_path):
+    """``HostCollectiveIO.write`` with bare per-knob kwargs warns
+    (once) and still writes the exact bytes the config spelling
+    writes; the config spelling is warning-free."""
+    import warnings
+    reqs = btio_pattern(16, n=32)
+    file_len = int(max((o + ln).max() for o, ln, _ in reqs if o.size))
+    io = _host()
+    cfg = IOConfig(req_cap=0, data_cap=0, cb_buffer_size=2048,
+                   pipeline=True, pipeline_depth=2, slow_hop_codec="rle")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")          # any warning fails
+        io.write(reqs, str(tmp_path / "cfg"), method="twophase",
+                 config=cfg)
+    with pytest.warns(DeprecationWarning):
+        io.write(reqs, str(tmp_path / "legacy"), method="twophase",
+                 cb_bytes=2048, pipeline_depth=2, slow_hop_codec="rle")
+    a = io.read_file(str(tmp_path / "cfg"), file_len)
+    b = io.read_file(str(tmp_path / "legacy"), file_len)
+    assert np.array_equal(a, b)
+
+
+def test_save_checkpoint_config_matches_legacy_shim(tmp_path):
+    """The checkpoint layer rides the same surface: manager/save with
+    ``config=`` produces the same checkpoint bytes as the deprecated
+    kwargs, which warn."""
+    from repro.checkpoint.checkpoint import (CheckpointManager,
+                                             save_checkpoint)
+    tree = {"w": np.arange(2048, dtype=np.float32)}
+    io = HostCollectiveIO(n_ranks=8, n_nodes=2, stripe_size=1024,
+                          stripe_count=4)
+    cfg = IOConfig(req_cap=0, data_cap=0, cb_buffer_size=1024,
+                   pipeline=True, pipeline_depth=2)
+    save_checkpoint(tree, tmp_path / "cfg", io=io, method="twophase",
+                    config=cfg)
+    with pytest.warns(DeprecationWarning):
+        save_checkpoint(tree, tmp_path / "legacy", io=io,
+                        method="twophase", cb_bytes=1024,
+                        pipeline_depth=2)
+    seg_a = (tmp_path / "cfg.seg0").read_bytes()
+    seg_b = (tmp_path / "legacy.seg0").read_bytes()
+    assert seg_a == seg_b
+    mgr = CheckpointManager(directory=tmp_path / "mgr", io=io,
+                            method="twophase", config=cfg)
+    t = mgr.save(tree, 1)                       # no deprecation path
+    assert t.rounds_executed >= 1
+
+
+# ---------------------------------------------------------------------------
 # plan semantics
 # ---------------------------------------------------------------------------
 

@@ -115,6 +115,34 @@ def test_iosession_compile_front_end():
     assert p3 is not p1 and s.misses == 2
 
 
+def test_pipeline_output_feeds_cache_key_deterministically():
+    """The pass pipeline's output is a sound cache key: recompiling
+    identical (layout, cfg) through the pipeline hits (same plan
+    OBJECT), and any knob delta — including the new ``kernel_fusion``
+    — is a distinct key that misses. Plans round-trip the knob tuple
+    the session arbitrates on (``_knobs_of``) identically across
+    recompiles."""
+    from repro.core.session import _knobs_of
+    s = IOSession()
+    layout = FileLayout(stripe_size=1024, stripe_count=4, file_len=1 << 16)
+    cfg = IOConfig(req_cap=64, data_cap=4096, cb_buffer_size="auto",
+                   pipeline=True, pipeline_depth="auto",
+                   slow_hop_codec="auto", placement="auto")
+    kw = dict(n_aggregators=4, n_nodes=4, n_ranks=16)
+    p1 = s.compile(layout, cfg, **kw)
+    p2 = s.compile(layout, cfg, **kw)
+    assert p1 is p2 and s.hits == 1             # autos resolved once
+    assert _knobs_of(p1) == _knobs_of(p2)
+    # a fused config is a different key, same schedule knobs
+    import dataclasses
+    fused_cfg = dataclasses.replace(cfg, kernel_fusion="fused_round")
+    p3 = s.compile(layout, fused_cfg, **kw)
+    assert p3 is not p1 and s.misses == 2
+    assert p3.kernel_fusion == "fused_round"
+    assert _knobs_of(p3) == _knobs_of(p1)       # fusion never reroutes
+    assert dataclasses.replace(p3, kernel_fusion=None) == p1
+
+
 def test_checkpoint_manager_holds_a_session(tmp_path):
     tree = {"w": np.arange(4096, dtype=np.float32),
             "b": np.ones(1024, np.float32)}
