@@ -56,9 +56,20 @@ exists to absorb intentional re-calibrations of ``cost_model.Machine``
 ``BENCH_PIPELINE_OUT=benchmarks/baselines/BENCH_pipeline_baseline.json
 PYTHONPATH=src python -m benchmarks.run --only pipeline``).
 
+With ``--degraded`` (the ``BENCH_degraded.json`` artifact from the
+``degraded`` suite) the gate also enforces the fault layer's
+acceptance contract — byte identity of every recovered write,
+one-write straggler evacuation, bounded steady degraded cost and
+dead-aggregator recovery, resize-without-wedging — see
+:func:`check_degraded`; its baseline
+(``benchmarks/baselines/BENCH_degraded_baseline.json``) pins scenario
+coverage only.
+
 Usage: python benchmarks/check_regression.py CURRENT BASELINE
            [--threshold 0.2] [--kernels BENCH_kernels.json]
            [--kernels-baseline benchmarks/baselines/BENCH_kernels_baseline.json]
+           [--degraded BENCH_degraded.json]
+           [--degraded-baseline benchmarks/baselines/BENCH_degraded_baseline.json]
 """
 from __future__ import annotations
 
@@ -181,6 +192,92 @@ def check(current: dict, baseline: dict,
     return errors, matched
 
 
+DEGRADED_STEADY_X = 1.5   # steady degraded total vs healthy steady
+DEGRADED_RECOVERY_X = 2.0  # dead-agg recovery cost vs one healthy write
+
+
+def check_degraded(degraded: dict, baseline: dict | None) -> list[str]:
+    """Gate on the ``degraded`` suite's artifact (``BENCH_degraded.json``,
+    benchmarks/degraded.py). The bounds are the fault layer's acceptance
+    contract, enforced WITHIN the artifact (timings are modeled and
+    deterministic); the baseline pins scenario COVERAGE only:
+
+    * every scenario completes with every write byte-identical to the
+      healthy oracle — recovery never costs correctness;
+    * slow_node: the session evacuates the straggler within ONE write
+      of the fault appearing, the straggler's served share drops, and
+      the steady degraded total stays within ``DEGRADED_STEADY_X`` of
+      healthy;
+    * dead_aggregator: recovery happened (detection + replay + torn
+      rewrite reported) and cost at most ``DEGRADED_RECOVERY_X`` healthy
+      writes;
+    * resize: the loop actually shrank the writer and kept going.
+    """
+    errors = []
+    scenarios = degraded.get("scenarios", {})
+    if not scenarios:
+        errors.append("degraded: no scenarios in the artifact")
+        return errors
+    for key in (baseline or {}).get("scenarios", []):
+        if key not in scenarios:
+            errors.append(
+                f"degraded/{key}: scenario in the baseline but missing "
+                "from the artifact — coverage shrank")
+    for key, e in sorted(scenarios.items()):
+        if not e.get("completed"):
+            errors.append(f"degraded/{key}: scenario did not complete "
+                          "(the write loop wedged)")
+            continue
+        if not e.get("byte_identical"):
+            errors.append(
+                f"degraded/{key}: a recovered write is NOT byte-identical "
+                "to the healthy oracle")
+        healthy, steady = e["healthy_steady_s"], e["degraded_steady_s"]
+        scen = e.get("scenario")
+        if scen in ("healthy", "slow_node", "resize") \
+                and steady > DEGRADED_STEADY_X * healthy:
+            errors.append(
+                f"degraded/{key}: steady degraded total {steady:.4g}s "
+                f"exceeds {DEGRADED_STEADY_X}x healthy ({healthy:.4g}s)")
+        if scen == "slow_node":
+            adapt = e.get("adaptation_writes", -1)
+            if not 0 <= adapt <= 1:
+                errors.append(
+                    f"degraded/{key}: straggler evacuation took "
+                    f"{adapt} writes (must land within ONE write of the "
+                    "fault appearing)")
+            if not e.get("slow_share_after", 1.0) \
+                    < e.get("slow_share_before", 0.0):
+                errors.append(
+                    f"degraded/{key}: straggler's served share did not "
+                    f"drop ({e.get('slow_share_before')} -> "
+                    f"{e.get('slow_share_after')})")
+        if scen == "dead_aggregator":
+            rec = e.get("recovery_s", 0.0)
+            if not rec > 0:
+                errors.append(
+                    f"degraded/{key}: dead aggregator reported no "
+                    "recovery cost — detection/replay not charged")
+            if rec > DEGRADED_RECOVERY_X * healthy:
+                errors.append(
+                    f"degraded/{key}: recovery cost {rec:.4g}s exceeds "
+                    f"{DEGRADED_RECOVERY_X}x a healthy write "
+                    f"({healthy:.4g}s) — recovery is unbounded")
+            if e.get("torn_repaired", 0) < 1:
+                errors.append(
+                    f"degraded/{key}: the victim's torn segment was "
+                    "never detected + rewritten")
+            if not e.get("repair_map"):
+                errors.append(f"degraded/{key}: no repair map reported")
+        if scen == "resize":
+            if not e.get("post_resize_ranks", 1 << 30) \
+                    < degraded["config"]["P"]:
+                errors.append(
+                    f"degraded/{key}: resize did not shrink the writer "
+                    f"(ranks {e.get('post_resize_ranks')})")
+    return errors
+
+
 KERNEL_JITTER = 0.25      # per-workload headroom; the SUM is strict
 
 
@@ -229,6 +326,10 @@ def main() -> int:
                     help="BENCH_kernels.json from the kernel_fusion suite")
     ap.add_argument("--kernels-baseline", default=None,
                     help="coverage baseline for --kernels")
+    ap.add_argument("--degraded", default=None,
+                    help="BENCH_degraded.json from the degraded suite")
+    ap.add_argument("--degraded-baseline", default=None,
+                    help="coverage baseline for --degraded")
     args = ap.parse_args()
     with open(args.current) as f:
         current = json.load(f)
@@ -245,11 +346,22 @@ def main() -> int:
                 kbase = json.load(f)
         errors += check_kernels(kernels, kbase)
         kmatched = len(kernels.get("drain", {}))
+    dmatched = 0
+    if args.degraded:
+        with open(args.degraded) as f:
+            degraded = json.load(f)
+        dbase = None
+        if args.degraded_baseline:
+            with open(args.degraded_baseline) as f:
+                dbase = json.load(f)
+        errors += check_degraded(degraded, dbase)
+        dmatched = len(degraded.get("scenarios", {}))
     for e in errors:
         print(f"REGRESSION: {e}", file=sys.stderr)
     if not errors:
         print(f"benchmark gate OK ({matched} matched points"
               + (f", {kmatched} fused-drain workloads" if kmatched else "")
+              + (f", {dmatched} degraded scenarios" if dmatched else "")
               + f", threshold {args.threshold:.0%})")
     return 1 if errors else 0
 

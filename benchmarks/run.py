@@ -9,7 +9,8 @@ from __future__ import annotations
 
 import argparse
 
-from benchmarks import kernel_bench, paper_figures, pipeline, rounds, spmd_bytes
+from benchmarks import (degraded, kernel_bench, paper_figures, pipeline,
+                        rounds, spmd_bytes)
 
 SUITES = {
     "fig2": paper_figures.fig2_congestion,
@@ -22,6 +23,7 @@ SUITES = {
     "spmd_bytes": spmd_bytes.collective_bytes,
     "rounds": rounds.cb_sweep,
     "pipeline": pipeline.serial_vs_pipelined,
+    "degraded": degraded.scenario_matrix,
 }
 
 

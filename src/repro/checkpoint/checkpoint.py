@@ -92,14 +92,18 @@ def save_checkpoint(tree, path: str | Path, *, step: int = 0,
                     placement=_UNSET,
                     session=None,
                     config: IOConfig | None = None,
-                    kernel_fusion: str | None = _UNSET
+                    kernel_fusion: str | None = _UNSET,
+                    faults=None, heartbeat=None
                     ) -> tuple[dict, IOTimings]:
     """Serialize ``tree`` to ``<path>.seg*`` through the collective
     writer. Knobs: pass ONE ``config=IOConfig(...)`` (the unified
     surface — ``cb_buffer_size`` is byte units here; explicit per-knob
     kwargs are sparse overrides); the bare per-knob kwargs remain as a
     deprecated shim (one ``DeprecationWarning``, identical plan —
-    asserted by tests/test_plan.py)."""
+    asserted by tests/test_plan.py). ``faults`` / ``heartbeat`` pass
+    straight to :meth:`HostCollectiveIO.write` — fault injection and
+    failure detection for the degraded-mode scenarios (core.faults);
+    recovered saves stay byte-identical to healthy ones."""
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     io = io or HostCollectiveIO(n_ranks=8, n_nodes=2, stripe_size=1 << 20,
@@ -113,7 +117,8 @@ def save_checkpoint(tree, path: str | Path, *, step: int = 0,
                        pipeline_depth=pipeline_depth,
                        slow_hop_codec=slow_hop_codec,
                        placement=placement,
-                       kernel_fusion=kernel_fusion, session=session)
+                       kernel_fusion=kernel_fusion, session=session,
+                       faults=faults, heartbeat=heartbeat)
     manifest["stripe_size"] = io.stripe_size
     manifest["stripe_count"] = io.stripe_count
     (path.parent / (path.name + ".manifest.json")).write_text(
@@ -171,9 +176,15 @@ class CheckpointManager:
     # saves of the same state shape reuse the compiled plan and feed
     # measured timings back into the "auto" knobs — the manager holds
     # it so the cross-write loop survives across save() calls
+    heartbeat: object | None = None  # HeartbeatMonitor
+    # (runtime.heartbeat): the failure detector every save consults
+    # when a fault spec injects a dead aggregator — the manager holds
+    # it so detection latches across saves (kill-and-resume scenarios)
     keep: int = 3
 
-    def save(self, tree, step: int) -> IOTimings:
+    def save(self, tree, step: int, faults=None) -> IOTimings:
+        """One rolling save; ``faults`` (core.faults.FaultSpec) injects
+        this save's degraded scenario through the write path."""
         d = Path(self.directory)
         d.mkdir(parents=True, exist_ok=True)
         _, t = save_checkpoint(
@@ -183,7 +194,8 @@ class CheckpointManager:
             pipeline=self.pipeline, pipeline_depth=self.pipeline_depth,
             slow_hop_codec=self.slow_hop_codec,
             placement=self.placement, kernel_fusion=self.kernel_fusion,
-            session=self.session)
+            session=self.session, faults=faults,
+            heartbeat=self.heartbeat)
         self._gc()
         return t
 

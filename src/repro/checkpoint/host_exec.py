@@ -20,6 +20,7 @@ a ring of ``depth - 1`` queue slots.
 """
 from __future__ import annotations
 
+import os
 import queue
 import threading
 
@@ -28,6 +29,9 @@ import numpy as np
 from repro.core import placement as placement_mod
 from repro.core.codec import get_codec
 from repro.core.cost_model import Machine, optimal_depth, pipeline_span
+from repro.core.faults import (TornWriteError, UnrecoverableFaultError,
+                               measure_node_slowdown, partial_marker,
+                               repair_map)
 from repro.core.plan import IOPlan
 
 PAIR_BYTES = 8  # offset + length metadata per request
@@ -85,51 +89,86 @@ def domain_image(offs, lens, packed, g, stripe_size, stripe_count):
 
 
 def write_segment(path: str, seg: np.ndarray, cb_bytes: int | None,
-                  depth: int = 2) -> None:
+                  depth: int = 2, fail_after_windows: int | None = None
+                  ) -> None:
     """Write one segment file; with ``cb_bytes`` smaller than the
     segment, drain it through a background writer thread fed one cb
     window at a time through ``depth - 1`` queue slots (mirroring the
     SPMD ring's ``depth`` in-flight window buffers: the producer can
     run up to depth-1 windows ahead of the writer). A single consumer
     writes the windows in order, so the bytes on disk are identical to
-    the direct write for every depth."""
-    if cb_bytes is None or seg.size <= cb_bytes or depth <= 1:
+    the direct write for every depth.
+
+    Failure semantics (fail fast): the producer checks the drain
+    thread's error flag before EVERY enqueue and stops producing the
+    moment the drain dies — it no longer pushes the remaining rounds
+    into a dead consumer only to learn of the error after the final
+    join. A failed write leaves the file truncated at the last complete
+    window plus a ``<path>.partial`` marker (``faults.partial_marker``)
+    so a reader/restart can DETECT the torn write instead of consuming
+    a silently short segment, then raises :class:`TornWriteError`
+    (original error as ``__cause__``).
+
+    ``fail_after_windows`` is the fault-injection hook: the drain
+    thread dies after writing that many windows (forcing the threaded
+    path even for single-window segments), exercising exactly the
+    fail-fast + marker path above.
+    """
+    inject = fail_after_windows is not None
+    if not inject and (cb_bytes is None or seg.size <= cb_bytes
+                       or depth <= 1):
         with open(path, "wb") as f:
             f.write(seg.tobytes())
         return
+    if cb_bytes is None or cb_bytes <= 0:
+        cb_bytes = max(int(seg.size), 1)
     q: queue.Queue = queue.Queue(maxsize=max(depth - 1, 1))
     error: list[BaseException] = []
+    written = [0]
 
     def drain(f):
-        # on a write error, keep consuming (and discarding) so the
-        # producer's q.put never blocks on a dead consumer; the error
-        # re-raises in the producer after join
+        # after an error, keep consuming (and discarding) so a
+        # producer enqueue racing the error flag never blocks on a
+        # dead consumer; the producer stops at its next check
         while True:
             chunk = q.get()
             if chunk is None:
                 return
-            if not error:
-                try:
-                    f.write(chunk)
-                except BaseException as e:  # noqa: BLE001 - re-raised below
-                    error.append(e)
+            if error:
+                continue
+            if inject and written[0] >= fail_after_windows:
+                error.append(IOError(
+                    f"injected drain fault after {written[0]} windows"))
+                continue
+            try:
+                f.write(chunk)
+                written[0] += 1
+            except BaseException as e:  # noqa: BLE001 - re-raised below
+                error.append(e)
 
+    enqueued = 0
     with open(path, "wb") as f:
         th = threading.Thread(target=drain, args=(f,))
         th.start()
         try:
             for lo in range(0, int(seg.size), cb_bytes):
+                if error:
+                    break          # fail fast: drain died, stop feeding it
                 q.put(seg[lo:lo + cb_bytes].tobytes())
+                enqueued += 1
         finally:
             q.put(None)
             th.join()
     if error:
-        raise error[0]
+        with open(partial_marker(path), "w") as mf:
+            mf.write(f"windows_written={written[0]}\n")
+        raise TornWriteError(path, enqueued, written[0]) from error[0]
 
 
 def execute_write(plan: IOPlan, machine: Machine, per_la, path: str, t,
                   depth_request=None, sender_nodes=None,
-                  n_nodes: int | None = None):
+                  n_nodes: int | None = None, faults=None,
+                  heartbeat=None, serve_map=None):
     """Run the inter-node exchange + I/O step of a write plan.
 
     per_la: the stage-1 output — per local aggregator (per rank for
@@ -168,6 +207,27 @@ def execute_write(plan: IOPlan, machine: Machine, per_la, path: str, t,
     (``IOTimings.node_bytes``) so a session can re-resolve
     ``placement="auto"`` exactly. ``None`` keeps the legacy all-inter
     accounting (bit-identical timings to the pre-placement executor).
+
+    faults: a ``core.faults.FaultSpec`` — the injection hook. Injected
+    node slowdowns scale everything the node serves (comm AND its drain
+    share) and land in the measured ``IOTimings.node_slowdown``; lost
+    messages charge a bounded-retry backoff (``IOTimings.retries``, or
+    :class:`UnrecoverableFaultError` past ``max_retries``); a dead
+    aggregator is detected through ``heartbeat.dead_hosts()`` (or
+    ``faults.detection_s`` without a monitor), its domains re-route
+    through ``faults.repair_map`` and replay their unfinished rounds
+    (``IOTimings.recovery_seconds``, ``IOTimings.repair_map``), and the
+    segment its drain tore is left partial + marked, then detected and
+    rewritten (``IOTimings.torn_writes_detected``) — the bytes on disk
+    stay byte-identical to the healthy run.
+
+    serve_map: an execution-level domain->slot override (NOT required
+    to be a bijection — ``core.faults.evacuation_map``): domains
+    sharing a slot SERIALIZE on it, so per-round comm is the max over
+    slots of the sum of their domains' times (reduces to the old
+    max-over-domains for any bijection). The plan's placement stays
+    bijective; this is how the session evacuates a straggler without
+    perturbing the plan cache or the SPMD executors.
     """
     m = machine
     stripe_count, cb = plan.n_aggregators, plan.cb
@@ -175,15 +235,31 @@ def execute_write(plan: IOPlan, machine: Machine, per_la, path: str, t,
     n_rounds = plan.n_rounds
     codec = get_codec(plan.slow_hop_codec) if plan.slow_hop_codec else None
     raw_total = wire_total = 0
+    if n_nodes is None and sender_nodes is not None:
+        n_nodes = int(max(sender_nodes, default=0)) + 1
+    if n_nodes is None and faults is not None and faults.any_node_faults:
+        raise ValueError("node-level faults need n_nodes (or "
+                         "sender_nodes) to locate the victims")
+    perm = (plan.placement if plan.placement is not None
+            else tuple(range(stripe_count)))
+    if serve_map is not None:
+        serve = tuple(int(s) for s in serve_map)
+        if len(serve) != stripe_count or not all(
+                0 <= s < stripe_count for s in serve):
+            raise ValueError(f"serve_map {serve!r} must map each of "
+                             f"{stripe_count} domains to a valid slot")
+    else:
+        serve = tuple(perm)
+    serve_nodes = None
+    if n_nodes is not None:
+        serve_nodes = [placement_mod.node_of_slot(serve[g], stripe_count,
+                                                  n_nodes)
+                       for g in range(stripe_count)]
+    slow_of = (lambda node: faults.slowdown(node)) if faults is not None \
+        else (lambda node: 1.0)
     ga_nodes = None
     if sender_nodes is not None:
-        if n_nodes is None:
-            n_nodes = int(max(sender_nodes, default=0)) + 1
-        perm = (plan.placement if plan.placement is not None
-                else tuple(range(stripe_count)))
-        ga_nodes = [placement_mod.node_of_slot(perm[g], stripe_count,
-                                               n_nodes)
-                    for g in range(stripe_count)]
+        ga_nodes = serve_nodes
         node_bytes = np.zeros((stripe_count, n_nodes), np.int64)
 
     # ---- inter-node: local aggregators -> global aggregators ---------
@@ -192,6 +268,9 @@ def execute_write(plan: IOPlan, machine: Machine, per_la, path: str, t,
     ga_bytes = np.zeros((stripe_count, n_rounds), np.int64)
     ga_msgs_fast = np.zeros((stripe_count, n_rounds), np.int64)
     ga_bytes_fast = np.zeros((stripe_count, n_rounds), np.int64)
+    # injected message faults: extra seconds charged to (domain, round)
+    penalty = np.zeros((stripe_count, n_rounds))
+    matched_lost: set[tuple[int, int]] = set()
     for sender, (offs, lens, packed) in enumerate(per_la):
         if offs.size == 0:
             continue
@@ -215,6 +294,23 @@ def execute_write(plan: IOPlan, machine: Machine, per_la, path: str, t,
                 in_r = rnd[sel] == r
                 (ga_msgs_fast if fast else ga_msgs)[g, r] += 1
                 payload = int(pl[in_r].sum())
+                if faults is not None:
+                    key = (sender, int(r))
+                    lost_n = int(faults.lost.get(key, 0))
+                    if lost_n:
+                        if lost_n > faults.max_retries:
+                            raise UnrecoverableFaultError(
+                                f"message from sender {sender} in round "
+                                f"{int(r)} lost {lost_n} times "
+                                f"(max_retries={faults.max_retries})")
+                        matched_lost.add(key)
+                        # each loss times out (exponential backoff) and
+                        # re-sends the round's slice
+                        penalty[g, r] += faults.retry_penalty(lost_n) \
+                            + lost_n * (m.alpha_inter + m.beta_inter
+                                        * (payload + int(in_r.sum())
+                                           * PAIR_BYTES))
+                    penalty[g, r] += float(faults.delayed.get(key, 0.0))
                 if codec is not None:
                     # one encode per byte: round r's slice is encoded
                     # for the wire accounting AND its decode is
@@ -251,16 +347,31 @@ def execute_write(plan: IOPlan, machine: Machine, per_la, path: str, t,
         t.slow_hop_slow_bytes = int(ga_bytes.sum())
         t.node_bytes = tuple(tuple(int(b) for b in row)
                              for row in node_bytes)
+    t.retries = sum(int(faults.lost[k]) for k in matched_lost) \
+        if faults is not None else 0
     # per-round incast: a receiver with S concurrent SLOW senders pays
     # alpha_eff(S) each (cost_model refinement 2, applied to the
     # single-shot exchange too so the timings are comparable); the
     # placement-induced FAST senders (same node as the serving
     # aggregator) pay alpha_intra/beta_intra instead — no incast knee
-    # inside a node. Rounds serialize unless pipelined (below).
+    # inside a node. ``t_dom[g, r]`` is domain g's round-r receive time
+    # on a HEALTHY node; the serving node's slowdown scales it, and
+    # domains sharing a serving slot (a degraded serve map) SERIALIZE:
+    # the round's comm is the max over slots of the sum of their
+    # domains' times — which reduces to the old max-over-domains for
+    # any bijection, keeping healthy timings bit-identical.
     alpha = np.vectorize(m.alpha_eff)(ga_msgs) * ga_msgs \
         + m.alpha_intra * ga_msgs_fast
-    comm_rounds = (alpha + m.beta_inter * ga_bytes
-                   + m.beta_intra * ga_bytes_fast).max(axis=0, initial=0)
+    t_dom = (alpha + m.beta_inter * ga_bytes
+             + m.beta_intra * ga_bytes_fast + penalty)
+    dom_factor = np.ones(stripe_count)
+    if serve_nodes is not None:
+        dom_factor = np.asarray([slow_of(n) for n in serve_nodes])
+    t_dom_served = t_dom * dom_factor[:, None]
+    slot_rounds = np.zeros((stripe_count, n_rounds))
+    for g in range(stripe_count):
+        slot_rounds[serve[g]] += t_dom_served[g]
+    comm_rounds = slot_rounds.max(axis=0, initial=0)
     t.inter_comm = float(comm_rounds.sum())
 
     # ---- pipeline depth: the plan's pick, or re-resolved against the
@@ -277,13 +388,15 @@ def execute_write(plan: IOPlan, machine: Machine, per_la, path: str, t,
         segs.append(domain_image(offs, lens, packed, g, stripe_size,
                                  stripe_count))
         img_lens[g] = segs[-1].size
-    t.io = float(img_lens.sum()) / m.io_bw
 
     # bytes GA g drains in round r: its image's overlap with the
-    # window [r*cb, (r+1)*cb)
+    # window [r*cb, (r+1)*cb); the serving node's slowdown scales its
+    # drain share (a straggler's file-system client is slow too)
     lo = np.arange(n_rounds, dtype=np.int64) * cb
-    io_rounds = (np.clip(img_lens[:, None] - lo[None, :], 0, cb)
-                 .sum(axis=0) / m.io_bw)
+    io_share = (np.clip(img_lens[:, None] - lo[None, :], 0, cb)
+                / m.io_bw) * dom_factor[:, None]
+    io_rounds = io_share.sum(axis=0)
+    t.io = float(io_share.sum())
     if depth_request == "auto" and multi_window:
         depth, _ = optimal_depth(round_times=(comm_rounds, io_rounds))
     t.pipeline_depth = max(1, min(depth, n_rounds))  # executed in-flight
@@ -293,10 +406,93 @@ def execute_write(plan: IOPlan, machine: Machine, per_la, path: str, t,
     t.comm_rounds = tuple(float(c) for c in comm_rounds)
     t.io_rounds = tuple(float(i) for i in io_rounds)
 
+    # ---- measured per-node service rates: seconds-per-byte of what
+    # each node actually served, normalized by the fastest busy node —
+    # the feedback placement="auto" consumes to evacuate a straggler
+    if serve_nodes is not None:
+        served_t = [0.0] * n_nodes
+        served_b = [0.0] * n_nodes
+        for g in range(stripe_count):
+            node = serve_nodes[g]
+            served_t[node] += float(t_dom_served[g].sum()
+                                    + io_share[g].sum())
+            served_b[node] += float(img_lens[g]
+                                    + (ga_bytes[g] + ga_bytes_fast[g])
+                                    .sum())
+        t.node_slowdown = measure_node_slowdown(served_t, served_b)
+        t.serve_map = serve if serve_map is not None else None
+
+    # ---- dead aggregator: the serving node dies entering round rd.
+    # Detection is the heartbeat monitor's job (inject -> dead_hosts()
+    # latches it; latency = its timeout) — faults.detection_s stands in
+    # without a monitor. Recovery re-routes the victim slot's domains
+    # to the least-loaded healthy slot (faults.repair_map) and REPLAYS
+    # their unfinished rounds there; the victim's torn segment is
+    # marked on disk and rewritten below. All recovery time is reported
+    # separately (recovery_seconds), never hidden in the round arrays.
+    torn_victim, torn_trunc = None, 0
+    if faults is not None and faults.dead_aggregator is not None:
+        dead_slot, rd = faults.dead_aggregator
+        dead_slot = int(dead_slot)
+        rd = max(0, min(int(rd), n_rounds - 1))
+        victim_node = placement_mod.node_of_slot(dead_slot, stripe_count,
+                                                 n_nodes)
+        if heartbeat is not None:
+            heartbeat.inject_failure(victim_node)
+            assert victim_node in heartbeat.dead_hosts()
+            detect_s = float(heartbeat.timeout_s)
+        else:
+            detect_s = float(faults.detection_s)
+        slot_load = [0.0] * stripe_count
+        for g in range(stripe_count):
+            slot_load[serve[g]] += float(t_dom_served[g].sum()
+                                         + io_share[g].sum())
+        new_serve, repair_slot, victims = repair_map(
+            serve, dead_slot, slot_load, stripe_count, n_nodes)
+        repair_factor = slow_of(placement_mod.node_of_slot(
+            repair_slot, stripe_count, n_nodes))
+        replay = 0.0
+        for g in victims:
+            replay += float(t_dom[g, rd:].sum()) * repair_factor
+            replay += float(io_share[g, rd:].sum() / dom_factor[g]) \
+                * repair_factor
+        t.recovery_seconds += detect_s + replay
+        t.repair_map = new_serve
+        t.serve_map = new_serve
+        serve = new_serve
+        if victims:
+            # the victim's drain died mid-segment: rd complete windows
+            # are on disk, marked partial; detected + rewritten below
+            torn_victim = victims[0]
+            torn_trunc = int(min(rd * cb, img_lens[torn_victim])) \
+                if multi_window else 0
+
     for g in range(stripe_count):
-        write_segment(f"{path}.seg{g}", segs[g],
-                      cb if multi_window and depth > 1 else None,
-                      depth=depth)
+        seg_path = f"{path}.seg{g}"
+        cbw = cb if multi_window and depth > 1 else None
+        if g == torn_victim:
+            with open(seg_path, "wb") as f:
+                f.write(segs[g][:torn_trunc].tobytes())
+            with open(partial_marker(seg_path), "w") as mf:
+                mf.write(f"windows_written={torn_trunc // max(cb, 1)}\n")
+        else:
+            inject = None
+            if faults is not None and faults.torn_window is not None \
+                    and g == faults.torn_window[0]:
+                inject = int(faults.torn_window[1])
+            try:
+                write_segment(seg_path, segs[g], cbw, depth=depth,
+                              fail_after_windows=inject)
+            except TornWriteError:
+                if inject is None:
+                    raise      # a REAL drain failure is not recoverable
+        if os.path.exists(partial_marker(seg_path)):
+            # torn-write repair: the marker is the detection; rewrite
+            # the full segment and clear it, charging the re-drain
+            write_segment(seg_path, segs[g], cbw, depth=depth)
+            os.remove(partial_marker(seg_path))
+            t.torn_writes_detected += 1
+            t.recovery_seconds += float(img_lens[g]) / m.io_bw
 
     # ---- pipelined makespan: the depth-k bounded-buffer recurrence
     # over the measured per-round arrays; the prologue (first exchange)

@@ -30,6 +30,7 @@ Cray.
 """
 from __future__ import annotations
 
+import os
 import time
 import warnings
 from dataclasses import dataclass
@@ -41,6 +42,7 @@ from repro.checkpoint.host_exec import PAIR_BYTES  # noqa: F401 (compat)
 from repro.core import codec as codec_mod
 from repro.core.cost_model import Machine, Workload, optimal_cb, with_codec
 from repro.core.domains import FileLayout
+from repro.core.faults import TornWriteError, partial_marker
 from repro.core.plan import (IOConfig, IOPlan, compile_plan,
                              resolve_method, resolve_slow_hop_codec)
 from repro.core.session import IOSession  # noqa: F401 (re-export)
@@ -137,6 +139,22 @@ class IOTimings:
     # cost a session amortizes; every other field is modeled seconds)
     plan_source: str = "compiled"  # "compiled" | "session-hit" |
     # "session-trial" (a measured-feedback replan being tried out)
+    node_slowdown: tuple = ()      # measured per-node service slowdown
+    # (seconds-per-byte served, normalized by the fastest busy node;
+    # 1.0 = healthy) — the straggler signal placement="auto" and the
+    # session's evacuation map consume (core.faults)
+    serve_map: tuple | None = None  # executed degraded serve map
+    # (domain -> serving slot, possibly non-bijective; None = the
+    # plan's bijective placement served every domain)
+    retries: int = 0               # lost slow-hop messages re-sent
+    # (bounded by FaultSpec.max_retries; each charged timeout+backoff)
+    recovery_seconds: float = 0.0  # total fault-recovery time: dead-
+    # aggregator detection + round replay + torn-segment rewrites —
+    # reported separately, and added to .total (recovery is real time)
+    repair_map: tuple | None = None  # post-repair serve map after a
+    # dead aggregator (None = no repair happened)
+    torn_writes_detected: int = 0  # partial-write markers detected and
+    # repaired by rewrite (drain faults + dead-aggregator tears)
 
     @property
     def comm(self) -> float:
@@ -146,7 +164,8 @@ class IOTimings:
     def total(self) -> float:
         return (self.intra_comm + self.intra_sort + self.intra_memcpy
                 + self.inter_comm + self.inter_sort + self.io
-                + self.codec - self.overlap_saved)
+                + self.codec - self.overlap_saved
+                + self.recovery_seconds)
 
     @property
     def coalesce_ratio(self) -> float:
@@ -400,7 +419,8 @@ class HostCollectiveIO:
               placement=_UNSET,
               session: "IOSession | None" = None,
               config: IOConfig | None = None,
-              kernel_fusion: str | None = _UNSET) -> IOTimings:
+              kernel_fusion: str | None = _UNSET,
+              faults=None, heartbeat=None) -> IOTimings:
         """rank_requests: list of (offsets[int64], lengths[int64],
         payload[uint8]) per rank, offsets element=byte units here.
         method: "tam" | "twophase" | "auto" (cost-model pick at plan
@@ -465,6 +485,19 @@ class HostCollectiveIO:
         executor has no Pallas hot path, so ``kernel_fusion`` is
         accepted (plan field set, shared with the SPMD backend) but is
         a no-op at execution time — bytes are identical either way.
+
+        faults / heartbeat: the fault-injection hook
+        (``core.faults.FaultSpec``) and the failure detector
+        (``runtime.heartbeat.HeartbeatMonitor``) — threaded straight
+        to ``host_exec.execute_write``, NEVER into the plan or the
+        session key (a fault is a property of the machine-now, not of
+        the schedule; the session sees it only through the MEASURED
+        feedback — node_slowdown, degraded round times — which is the
+        whole point of the self-healing loop). Injected node slowdowns
+        also scale this writer's stage-1 intra timing, so the straggler
+        is visible end to end. A write that raises mid-trial reverts
+        its session trial (``IOSession.abort``) instead of poisoning
+        the entry.
         """
         knobs = resolve_knobs(config, warn=True, cb_bytes=cb_bytes,
                               pipeline=pipeline,
@@ -480,7 +513,7 @@ class HostCollectiveIO:
         failed_aggregators = failed_aggregators or set()
         plan_t0 = time.perf_counter()
         session = session if session is not None else self.session
-        plan, source, skey = None, "compiled", None
+        plan, source, skey, serve_map = None, "compiled", None, None
         if session is not None:
             extent = self._extent(rank_requests)
             total = sum(int(ln.sum()) for _, ln, _ in rank_requests)
@@ -511,7 +544,8 @@ class HostCollectiveIO:
             kind, payload = session.begin_write(skey,
                                                 machine=self.machine)
             if kind == "hit":
-                plan, source = payload, "session-hit"
+                plan, serve_map = payload
+                source = "session-hit"
             elif kind == "trial":
                 plan = self.plan_for(
                     method=payload["method"], cb_bytes=payload["cb_bytes"],
@@ -522,7 +556,8 @@ class HostCollectiveIO:
                     slow_hop_codec=payload["slow_hop_codec"],
                     placement=payload["placement"],
                     kernel_fusion=kernel_fusion)
-                session.register_trial(skey, plan)
+                serve_map = payload.get("serve_map")
+                session.register_trial(skey, plan, serve_map)
                 source = "session-trial"
         if plan is None:
             workload = (self.workload_for(
@@ -567,21 +602,30 @@ class HostCollectiveIO:
         split = [self._split_stripes(*r) for r in rank_requests]
         t.requests_before = sum(s[0].size for s in split)
         placement_on = plan.placement is not None
+        # node-level faults and degraded serve maps need the sender->
+        # node map even with placement off (the evacuation feedback
+        # loop runs on the measured node matrix)
+        want_nodes = (placement_on or faults is not None
+                      or serve_map is not None)
         sender_nodes = None
 
         # ---- stage 1: intra-node aggregation (plan.method) -----------
         if plan.method == "twophase":
             per_la = split                  # every rank speaks for itself
-            if placement_on:
+            if want_nodes:
                 sender_nodes = [r // q for r in range(P)]
         else:
             P_L = local_aggregators or nodes * 4
             assert P_L % nodes == 0
             c = P_L // nodes                # local aggs per node
             per_la = []
-            if placement_on:
+            if want_nodes:
                 sender_nodes = []
             for node in range(nodes):
+                # an injected straggler aggregates slower inside its
+                # node too — the slowdown scales every stage-1 charge
+                # the node serves
+                nf = faults.slowdown(node) if faults is not None else 1.0
                 node_ranks = range(node * q, (node + 1) * q)
                 groups = np.array_split(np.array(list(node_ranks)), c)
                 for g in groups:
@@ -603,7 +647,7 @@ class HostCollectiveIO:
                     offs, lens, packed = self._split_stripes(
                         offs, lens, packed)
                     per_la.append((offs, lens, packed))
-                    if placement_on:
+                    if want_nodes:
                         sender_nodes.append(node)
                     # intra-node timing: many-to-one receives + sort + copy
                     bytes_in = sum(int(split[r][1].sum()) +
@@ -611,20 +655,31 @@ class HostCollectiveIO:
                     reassign_penalty = m.alpha_intra if reassigned else 0.0
                     t.intra_comm = max(
                         t.intra_comm,
-                        m.alpha_intra * len(g) + m.beta_intra * bytes_in
-                        + reassign_penalty)
-                    t.intra_sort = max(t.intra_sort, m.sort_per_cmp * n_cmp)
+                        nf * (m.alpha_intra * len(g)
+                              + m.beta_intra * bytes_in
+                              + reassign_penalty))
+                    t.intra_sort = max(t.intra_sort,
+                                       nf * m.sort_per_cmp * n_cmp)
                     t.intra_memcpy = max(t.intra_memcpy,
-                                         bytes_in / m.memcpy_bw)
+                                         nf * bytes_in / m.memcpy_bw)
         t.requests_after = sum(la[0].size for la in per_la)
 
         # ---- inter-node exchange + I/O: the host executor ------------
-        t = host_exec.execute_write(
-            plan, m, per_la, path, t,
-            depth_request="auto" if pipeline_depth == "auto" else None,
-            sender_nodes=sender_nodes, n_nodes=nodes)
+        try:
+            t = host_exec.execute_write(
+                plan, m, per_la, path, t,
+                depth_request="auto" if pipeline_depth == "auto" else None,
+                sender_nodes=sender_nodes, n_nodes=nodes,
+                faults=faults, heartbeat=heartbeat, serve_map=serve_map)
+        except BaseException:
+            # a write that dies mid-trial must not poison the session
+            # entry: revert the half-registered trial so the tuner can
+            # retry instead of freezing on unmeasured knobs
+            if session is not None:
+                session.abort(skey, plan)
+            raise
         if session is not None:
-            session.observe(skey, plan, t)
+            session.observe(skey, plan, t, serve_map=serve_map)
         return t
 
     # ------------------------------------------------------------------
@@ -646,9 +701,17 @@ class HostCollectiveIO:
 
     # ------------------------------------------------------------------
     def read_file(self, path: str, file_len: int) -> np.ndarray:
-        """Reassemble the full byte-space from the striped segments."""
+        """Reassemble the full byte-space from the striped segments.
+
+        A segment carrying a ``.partial`` marker is a TORN write (the
+        drain died mid-segment and nothing repaired it) — refuse to
+        reassemble a silently short file and raise
+        :class:`~repro.core.faults.TornWriteError` instead."""
         out = np.zeros(file_len, np.uint8)
         for g in range(self.stripe_count):
+            marker = partial_marker(f"{path}.seg{g}")
+            if os.path.exists(marker):
+                raise TornWriteError(f"{path}.seg{g}", -1, -1)
             with open(f"{path}.seg{g}", "rb") as f:
                 seg = np.frombuffer(f.read(), np.uint8)
             # segment g holds stripes g, g+SC, g+2SC, ... concatenated

@@ -300,7 +300,8 @@ def with_locality(w: Workload, locality: float) -> Workload:
 
 def placement_cost(w: Workload, m: Machine = Machine(),
                    placement=None, n_nodes: int | None = None, *,
-                   domain_bytes=None, node_bytes=None) -> float:
+                   domain_bytes=None, node_bytes=None,
+                   node_slowdown=None) -> float:
     """Modeled seconds of the inter phase under an aggregator placement
     (refinement 6): the per-node MAKESPAN of the slow-hop exchange when
     domain ``g`` is served by slot ``placement[g]`` (canonical
@@ -320,6 +321,12 @@ def placement_cost(w: Workload, m: Machine = Machine(),
       placement that packs the heavy (or the only active) domains onto
       one node is charged for the pileup. ``domain_bytes`` supplies
       measured per-domain loads (default: uniform split).
+
+    ``node_slowdown`` (per-node factors >= 1 — the executor's measured
+    ``IOTimings.node_slowdown``, or a ``FaultSpec.slow_nodes`` model)
+    scales each serving node's charge: a straggling node is that much
+    more expensive per byte it serves, so the makespan argmin steers
+    load off it (the degraded half of the session feedback loop).
 
     ``placement=None`` means the identity (placement off). The
     ``"auto"`` policy resolves by argmin of this function, so auto is
@@ -353,6 +360,8 @@ def placement_cost(w: Workload, m: Machine = Machine(),
             nb.append(row)
     ratio = max(w.slow_hop_ratio, 1e-9)
     S = w.senders_per_stripe(w.P, w.P * w.k)
+    slow_f = [max(float(s), 1.0) for s in (node_slowdown or ())]
+    slow_f += [1.0] * (nodes - len(slow_f))
     node_load = [0.0] * nodes
     for g in range(P_G):
         serving = placement[g] * nodes // P_G      # node_of_slot
@@ -366,7 +375,7 @@ def placement_cost(w: Workload, m: Machine = Machine(),
         comm_g = (w.rounds * (m.alpha_eff(s_slow) * s_slow
                               + m.alpha_intra * s_fast)
                   + m.beta_inter * slow / ratio + m.beta_intra * fast)
-        node_load[serving] += comm_g
+        node_load[serving] += comm_g * slow_f[serving]
     return max(node_load)
 
 

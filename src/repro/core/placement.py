@@ -106,12 +106,20 @@ def spread_placement(n_aggregators: int, n_nodes: int) -> tuple[int, ...]:
 
 
 def node_balanced_placement(n_aggregators: int, n_nodes: int,
-                            domain_bytes=None) -> tuple[int, ...]:
+                            domain_bytes=None,
+                            node_slowdown=None) -> tuple[int, ...]:
     """Greedy per-node makespan balancing of the measured domain loads:
     heaviest domain first, each onto a free slot of the least-loaded
-    node (node order breaks ties deterministically)."""
+    node (node order breaks ties deterministically). ``node_slowdown``
+    (per-node factors >= 1, the executor's measured feedback) scales a
+    node's accrued load — a straggler fills up ``factor`` times faster,
+    so the greedy argmin naturally steers the heavy domains off it
+    while this stays a pure bijection (every slot still serves exactly
+    one domain; only the domain->node MATCHING changes)."""
     if domain_bytes is None:
         domain_bytes = [1.0] * n_aggregators
+    slow = [max(float(s), 1.0) for s in (node_slowdown or ())]
+    slow += [1.0] * (max(n_nodes, 1) - len(slow))
     by_node: list[list[int]] = [[] for _ in range(max(n_nodes, 1))]
     for s in range(n_aggregators):
         by_node[node_of_slot(s, n_aggregators, n_nodes)].append(s)
@@ -120,10 +128,11 @@ def node_balanced_placement(n_aggregators: int, n_nodes: int,
                    key=lambda g: (-float(domain_bytes[g]), g))
     perm = [0] * n_aggregators
     for g in order:
+        db = float(domain_bytes[g])
         n = min((i for i in range(len(by_node)) if by_node[i]),
-                key=lambda i: (load[i], i))
+                key=lambda i: (load[i] + db * slow[i], i))
         perm[g] = by_node[n].pop(0)
-        load[n] += float(domain_bytes[g])
+        load[n] += db * slow[n]
     return tuple(perm)
 
 
@@ -136,7 +145,8 @@ _POLICY_FNS = {
 
 def resolve_placement(spec, n_aggregators: int, n_nodes: int, *,
                       workload=None, machine=None, domain_bytes=None,
-                      node_bytes=None) -> tuple[int, ...] | None:
+                      node_bytes=None,
+                      node_slowdown=None) -> tuple[int, ...] | None:
     """Resolve a placement spec to a concrete permutation (or ``None``).
 
     spec: ``None`` (placement off — executors keep the legacy
@@ -147,7 +157,12 @@ def resolve_placement(spec, n_aggregators: int, n_nodes: int, *,
     sender-node) byte matrix, ``domain_bytes`` the per-domain loads —
     and returns the argmin; with no workload at all it falls back to
     ``"packed"`` (the identity: safe, and modeled-tied with everything
-    under the uniform default anyway)."""
+    under the uniform default anyway). ``node_slowdown`` (measured
+    per-node factors, ``IOTimings.node_slowdown``) biases both the
+    balanced policy's greedy and the auto scoring so a straggling node
+    sheds aggregator load — the bijective half of degraded placement
+    (the non-bijective half, slot evacuation, lives in
+    ``core.faults.evacuation_map`` and stays out of the plan)."""
     if spec is None:
         return None
     if not isinstance(spec, str):
@@ -160,7 +175,8 @@ def resolve_placement(spec, n_aggregators: int, n_nodes: int, *,
         if spec == "node_balanced":
             return validate_placement(
                 node_balanced_placement(n_aggregators, n_nodes,
-                                        domain_bytes), n_aggregators)
+                                        domain_bytes, node_slowdown),
+                n_aggregators)
         return validate_placement(_POLICY_FNS[spec](n_aggregators,
                                                     n_nodes),
                                   n_aggregators)
@@ -175,12 +191,14 @@ def resolve_placement(spec, n_aggregators: int, n_nodes: int, *,
     machine = machine or cm.Machine()
     best_perm, best_cost = None, None
     for name in PLACEMENT_POLICIES:
-        perm = (_POLICY_FNS[name](n_aggregators, n_nodes, domain_bytes)
+        perm = (_POLICY_FNS[name](n_aggregators, n_nodes, domain_bytes,
+                                  node_slowdown)
                 if name == "node_balanced"
                 else _POLICY_FNS[name](n_aggregators, n_nodes))
         cost = cm.placement_cost(workload, machine, perm, n_nodes,
                                  domain_bytes=domain_bytes,
-                                 node_bytes=node_bytes)
+                                 node_bytes=node_bytes,
+                                 node_slowdown=node_slowdown)
         if best_cost is None or cost < best_cost - 1e-15:
             best_perm, best_cost = perm, cost
     return validate_placement(best_perm, n_aggregators)

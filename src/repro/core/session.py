@@ -47,6 +47,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from repro.core import cost_model as cm
+from repro.core import faults as faults_mod
 from repro.core import placement as placement_mod
 from repro.core.plan import (IOPlan, compile_plan, resolve_method,
                              resolve_slow_hop_codec)
@@ -60,6 +61,14 @@ def _knobs_of(plan: IOPlan) -> tuple:
             plan.slow_hop_codec, plan.placement)
 
 
+def _arb_key(plan: IOPlan, serve_map) -> tuple:
+    """The arbiter key: the plan's knobs PLUS the execution-level serve
+    map (a degraded evacuation is a distinct thing-to-measure even when
+    the compiled plan is unchanged — core.faults.evacuation_map)."""
+    return _knobs_of(plan) + (tuple(serve_map) if serve_map is not None
+                              else None,)
+
+
 @dataclass
 class _Entry:
     plan: IOPlan                      # first-compiled plan
@@ -69,8 +78,9 @@ class _Entry:
     P_L: int | None = None
     n_nodes: int = 1
     n_aggregators: int = 1
-    plans: dict = field(default_factory=dict)    # knobs -> IOPlan
-    totals: dict = field(default_factory=dict)   # knobs -> measured total
+    plans: dict = field(default_factory=dict)    # arb key -> IOPlan
+    serve_maps: dict = field(default_factory=dict)  # arb key -> serve map
+    totals: dict = field(default_factory=dict)   # arb key -> measured total
     best_knobs: tuple | None = None
     feedback: dict = field(default_factory=dict)
     writes: int = 0
@@ -80,6 +90,11 @@ class _Entry:
         if self.best_knobs is not None and self.best_knobs in self.plans:
             return self.plans[self.best_knobs]
         return self.plan
+
+    def best_serve_map(self):
+        if self.best_knobs is not None:
+            return self.serve_maps.get(self.best_knobs)
+        return None
 
 
 class IOSession:
@@ -131,12 +146,21 @@ class IOSession:
         * ``("trial", knobs_dict)`` — measured feedback re-resolved the
           ``"auto"`` knobs to something untried: compile a plan with
           these CONCRETE knobs (cheap — nothing left to sweep) and
-          register it with :meth:`register_trial`;
-        * ``("hit", plan)`` — reuse the best measured plan as-is.
+          register it with :meth:`register_trial`. The dict's
+          ``"serve_map"`` entry (usually ``None``) is the degraded
+          evacuation map to execute the trial under;
+        * ``("hit", (plan, serve_map))`` — reuse the best measured
+          (plan, serve map) pair as-is.
 
         ``machine`` is the WRITER's calibration — refinements must
         resolve under the same machine the first write's autos did, not
         this session's default.
+
+        Refinement normally runs ONCE per entry; :meth:`observe` re-arms
+        it when the measured feedback materially changes (a node's
+        service rate shifting — a straggler appearing or clearing), so
+        a mid-session degradation triggers a fresh trial on the very
+        next write instead of being locked out by the one-shot flag.
         """
         entry = self._entries.get(key)
         if entry is None:
@@ -147,14 +171,16 @@ class IOSession:
             entry.refined = True
             knobs = self._refine(entry, machine or self.machine)
             if knobs is not None:
-                tried = set(entry.totals) | {_knobs_of(entry.plan)}
+                tried = set(entry.totals) | {_arb_key(entry.plan, None)}
+                serve = knobs.get("serve_map")
                 as_tuple = (knobs["method"], knobs["cb_bytes"],
                             knobs["pipeline_depth"],
-                            knobs["slow_hop_codec"], knobs["placement"])
+                            knobs["slow_hop_codec"], knobs["placement"],
+                            tuple(serve) if serve is not None else None)
                 if as_tuple not in tried:
                     self.replans += 1
                     return "trial", knobs
-        return "hit", entry.best_plan()
+        return "hit", (entry.best_plan(), entry.best_serve_map())
 
     def register(self, key, plan: IOPlan, *, requested: dict,
                  workload=None, cb_candidates=(), P_L=None,
@@ -167,28 +193,67 @@ class IOSession:
             plan=plan, requested=dict(requested), workload=workload,
             cb_candidates=tuple(cb_candidates), P_L=P_L,
             n_nodes=n_nodes, n_aggregators=n_aggregators)
-        self._entries[key].plans[_knobs_of(plan)] = plan
+        self._entries[key].plans[_arb_key(plan, None)] = plan
 
-    def register_trial(self, key, plan: IOPlan) -> None:
+    def register_trial(self, key, plan: IOPlan, serve_map=None) -> None:
         entry = self._entries[key]
-        entry.plans[_knobs_of(plan)] = plan
+        ak = _arb_key(plan, serve_map)
+        entry.plans[ak] = plan
+        if serve_map is not None:
+            entry.serve_maps[ak] = tuple(serve_map)
 
-    def observe(self, key, plan: IOPlan, timings) -> None:
+    def abort(self, key, plan: IOPlan | None = None) -> None:
+        """A write under ``key`` raised before :meth:`observe` ran.
+        Revert the trial bookkeeping so the entry is not poisoned: every
+        registered plan with NO measured total (the half-registered
+        trial) is dropped, and the one-shot refinement flag is re-armed
+        so the next write may re-trial. Without this, an aborted trial
+        left the entry holding knobs that would never be measured and
+        never retried — silently freezing the tuner."""
+        entry = self._entries.get(key)
+        if entry is None:
+            return
+        first = _arb_key(entry.plan, None)
+        stale = [ak for ak in entry.plans
+                 if ak not in entry.totals and ak != first]
+        if plan is not None:
+            stale = [ak for ak in stale if entry.plans[ak] is plan
+                     or ak[:5] == _knobs_of(plan)]
+        for ak in stale:
+            entry.plans.pop(ak, None)
+            entry.serve_maps.pop(ak, None)
+        entry.refined = False
+
+    def observe(self, key, plan: IOPlan, timings, serve_map=None) -> None:
         """Feed one write's measurements back: the executed total
         decides the incumbent (strictly-better wins, ties keep), and
-        the per-round arrays / ratio / node-byte matrix become the next
-        refinement's inputs."""
+        the per-round arrays / ratio / node-byte matrix / per-node
+        slowdown become the next refinement's inputs. A material shift
+        in the measured per-node service rates (straggler appearing or
+        clearing) re-arms the one-shot refinement flag."""
         entry = self._entries.get(key)
         if entry is None:
             return
         entry.writes += 1
-        knobs = _knobs_of(plan)
-        entry.plans.setdefault(knobs, plan)
-        entry.totals[knobs] = float(timings.total)
-        if (entry.best_knobs is None
-                or entry.totals[knobs]
-                < entry.totals[entry.best_knobs] - 1e-15):
-            entry.best_knobs = knobs
+        ak = _arb_key(plan, serve_map)
+        entry.plans.setdefault(ak, plan)
+        if serve_map is not None:
+            entry.serve_maps[ak] = tuple(serve_map)
+        entry.totals[ak] = float(timings.total)
+        if entry.best_knobs is None:
+            entry.best_knobs = ak
+        else:
+            # re-elect the argmin (not just promote strictly-better
+            # newcomers): re-measuring the INCUMBENT under a degraded
+            # machine overwrites its total in place, and the crown must
+            # move to whatever now measures best. Ties keep the
+            # earliest-measured plan (insertion order), preserving the
+            # healthy-path tie-to-incumbent semantics.
+            best = entry.best_knobs
+            for k2, v in entry.totals.items():
+                if v < entry.totals[best] - 1e-15:
+                    best = k2
+            entry.best_knobs = best
         fb = entry.feedback
         fb["rounds"] = int(getattr(timings, "rounds_executed", 1))
         if getattr(timings, "comm_rounds", ()):
@@ -199,6 +264,17 @@ class IOSession:
         if getattr(timings, "node_bytes", ()):
             fb["node_bytes"] = tuple(tuple(row)
                                      for row in timings.node_bytes)
+        new_sd = tuple(float(s) for s in
+                       getattr(timings, "node_slowdown", ()) or ())
+        if new_sd:
+            old_sd = fb.get("node_slowdown")
+            fb["node_slowdown"] = new_sd
+            changed = (any(abs(a - b) > 0.25
+                           for a, b in zip(new_sd, old_sd))
+                       if old_sd is not None
+                       else max(new_sd) > 1.25)
+            if changed:
+                entry.refined = False   # re-arm: the machine moved
 
     def entry(self, key) -> _Entry | None:
         return self._entries.get(key)
@@ -239,10 +315,26 @@ class IOSession:
         if "pipeline_depth" in autos and "round_times" in fb:
             depth, _ = cm.optimal_depth(round_times=fb["round_times"])
         placement = base.placement
-        if "placement" in autos and "node_bytes" in fb:
+        sd = fb.get("node_slowdown")
+        serve_map = None
+        if "placement" in autos and ("node_bytes" in fb
+                                     or sd is not None):
             placement = placement_mod.resolve_placement(
                 "auto", entry.n_aggregators, entry.n_nodes, workload=w,
-                machine=m, node_bytes=fb["node_bytes"])
+                machine=m, node_bytes=fb.get("node_bytes"),
+                node_slowdown=sd)
+            # degraded half: past the straggler threshold a bijection
+            # cannot unload the node (it still serves its slot count),
+            # so resolve an execution-level evacuation map on top —
+            # overflow domains serialize on healthy slots, the
+            # straggler's slots go idle (core.faults; the plan and its
+            # SPMD identity stay bijective)
+            if sd is not None:
+                db = ([sum(row) for row in fb["node_bytes"]]
+                      if "node_bytes" in fb else None)
+                serve_map = faults_mod.evacuation_map(
+                    entry.n_aggregators, entry.n_nodes, sd,
+                    domain_bytes=db)
         return {"method": method, "cb_bytes": cb,
                 "pipeline_depth": depth, "slow_hop_codec": codec,
-                "placement": placement}
+                "placement": placement, "serve_map": serve_map}

@@ -1,0 +1,420 @@
+"""Fault injection + degraded-mode recovery (core.faults).
+
+Covers the acceptance contract of the fault layer: every recovered
+write is byte-identical to the healthy oracle; the drain-thread
+fail-fast path leaves a DETECTABLE partial write; a session with
+``placement="auto"`` evacuates a measured straggler within one write
+of the fault appearing and the steady degraded total stays bounded;
+a dead aggregator mid-round recovers (repair map + replay + torn
+segment rewrite) instead of wedging; lost slow-hop messages retry
+with bounded backoff and fail loudly past the bound; a resize event
+mid write-loop replans through runtime.elastic instead of wedging;
+and the session tuner survives a write that raises mid-trial.
+"""
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import host_exec
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.checkpoint.host_io import HostCollectiveIO
+from repro.core.cost_model import Machine
+from repro.core.faults import (FaultSpec, TornWriteError,
+                               UnrecoverableFaultError, apply_resize,
+                               evacuation_map, measure_node_slowdown,
+                               partial_marker, repair_map)
+from repro.core.placement import node_of_slot
+from repro.core.session import IOSession, _arb_key
+from repro.io_patterns import btio_pattern, e3sm_f_pattern
+from repro.runtime.elastic import plan_remesh
+from repro.runtime.heartbeat import HeartbeatMonitor
+
+
+def _file_len(reqs) -> int:
+    return max(int((o + ln).max()) for o, ln, _ in reqs if o.size)
+
+
+def _reference_file(reqs, file_len: int) -> np.ndarray:
+    out = np.zeros(file_len, np.uint8)
+    for offs, lens, data in reqs:
+        starts = np.concatenate([[0], np.cumsum(lens)[:-1]]) \
+            if offs.size else []
+        for o, ln, s in zip(offs, lens, starts):
+            out[o:o + ln] = data[s:s + ln]
+    return out
+
+
+def _assert_identical(io, reqs, path):
+    n = _file_len(reqs)
+    np.testing.assert_array_equal(io.read_file(path, n),
+                                  _reference_file(reqs, n))
+
+
+# ---------------------------------------------------------------------
+# unit layer: the policy functions
+# ---------------------------------------------------------------------
+
+def test_measure_node_slowdown_normalizes_and_ignores_idle():
+    sd = measure_node_slowdown([2.0, 8.0, 0.0], [1e6, 1e6, 0.0])
+    assert sd == (1.0, 4.0, 1.0)     # idle node: no evidence -> 1.0
+
+
+def test_evacuation_map_healthy_is_none():
+    assert evacuation_map(8, 4, (1.0, 1.2, 1.0, 1.0)) is None
+
+
+def test_evacuation_map_empties_the_straggler():
+    serve = evacuation_map(8, 4, (1.0, 6.0, 1.0, 1.0))
+    assert serve is not None and len(serve) == 8
+    assert all(node_of_slot(s, 8, 4) != 1 for s in serve)
+
+
+def test_evacuation_map_excludes_dead_nodes_even_when_healthy():
+    serve = evacuation_map(8, 4, (1.0,) * 4, dead_nodes=(0,))
+    assert serve is not None
+    assert all(node_of_slot(s, 8, 4) != 0 for s in serve)
+    with pytest.raises(UnrecoverableFaultError):
+        evacuation_map(4, 2, (1.0, 1.0), dead_nodes=(0, 1))
+
+
+def test_repair_map_routes_to_least_loaded_healthy_slot():
+    new_serve, repair, victims = repair_map(
+        (0, 1, 2, 3), 2, [1.0, 2.0, 3.0, 4.0], 4, 4)
+    assert victims == (2,)
+    assert repair == 0                 # lightest healthy slot
+    assert new_serve == (0, 1, 0, 3)
+
+
+def test_retry_penalty_backoff():
+    f = FaultSpec(retry_timeout_s=1e-3)
+    assert f.retry_penalty(1) == pytest.approx(1e-3)
+    assert f.retry_penalty(3) == pytest.approx(7e-3)
+
+
+# ---------------------------------------------------------------------
+# satellite 1: write_segment fail-fast + detectable partial write
+# ---------------------------------------------------------------------
+
+def test_write_segment_fails_fast_and_marks_partial(tmp_path):
+    path = str(tmp_path / "seg0")
+    cb = 1024
+    seg = np.arange(64 * cb, dtype=np.int64).astype(np.uint8)
+    with pytest.raises(TornWriteError) as ei:
+        host_exec.write_segment(path, seg, cb, depth=2,
+                                fail_after_windows=2)
+    err = ei.value
+    assert err.windows_written == 2
+    # fail fast: the producer stopped at its next enqueue check instead
+    # of pushing all 64 windows into the dead consumer
+    assert err.windows_enqueued < 16
+    # the torn write is DETECTABLE: truncated at a window boundary with
+    # the .partial marker next to it
+    assert os.path.exists(partial_marker(path))
+    assert os.path.getsize(path) == 2 * cb
+    assert "windows_written=2" in open(partial_marker(path)).read()
+    # repair = rewrite + clear marker, exactly what the executor does
+    os.remove(partial_marker(path))
+    host_exec.write_segment(path, seg, cb, depth=2)
+    assert np.array_equal(np.fromfile(path, np.uint8), seg)
+
+
+def test_read_file_refuses_torn_segment(tmp_path):
+    io = HostCollectiveIO(n_ranks=16, n_nodes=4, stripe_size=1024,
+                          stripe_count=4)
+    reqs = btio_pattern(16, n=32)
+    path = str(tmp_path / "f")
+    io.write(reqs, path, method="tam", cb_bytes=1024)
+    _assert_identical(io, reqs, path)
+    open(partial_marker(path + ".seg1"), "w").write("windows_written=0\n")
+    with pytest.raises(TornWriteError):
+        io.read_file(path, _file_len(reqs))
+
+
+def test_torn_window_injection_detected_and_repaired(tmp_path):
+    io = HostCollectiveIO(n_ranks=16, n_nodes=4, stripe_size=1024,
+                          stripe_count=4)
+    reqs = btio_pattern(16, n=32)
+    path = str(tmp_path / "f")
+    t = io.write(reqs, path, method="tam", cb_bytes=1024, pipeline=True,
+                 faults=FaultSpec(torn_window=(1, 1)))
+    assert t.torn_writes_detected == 1
+    assert t.recovery_seconds > 0
+    assert not os.path.exists(partial_marker(path + ".seg1"))
+    _assert_identical(io, reqs, path)
+
+
+# ---------------------------------------------------------------------
+# straggler: measured slowdown + byte identity, then the session's
+# self-healing evacuation
+# ---------------------------------------------------------------------
+
+def test_slow_node_measured_and_byte_identical(tmp_path):
+    io = HostCollectiveIO(n_ranks=16, n_nodes=4, stripe_size=1024,
+                          stripe_count=8)
+    reqs = e3sm_f_pattern(16)
+    healthy = io.write(reqs, str(tmp_path / "h"), method="tam",
+                       cb_bytes=1024)
+    t = io.write(reqs, str(tmp_path / "f"), method="tam", cb_bytes=1024,
+                 faults=FaultSpec(slow_nodes={1: 4.0}))
+    _assert_identical(io, reqs, str(tmp_path / "f"))
+    assert t.node_slowdown[1] > 1.5          # the straggler is visible
+    assert all(s < 1.5 for i, s in enumerate(t.node_slowdown) if i != 1)
+    assert t.total > healthy.total           # and it costs
+
+
+def test_session_evacuates_straggler_within_one_write(tmp_path):
+    # io-dominant machine so the straggler's service-rate signal is
+    # clean and the evacuated steady state is close to healthy
+    m = Machine(io_bw=5e7)
+    sess = IOSession(machine=m)
+    io = HostCollectiveIO(n_ranks=16, n_nodes=4, stripe_size=1024,
+                          stripe_count=8, machine=m, session=sess)
+    reqs = e3sm_f_pattern(16)
+    knobs = dict(method="tam", local_aggregators=8, cb_bytes="auto",
+                 pipeline_depth="auto", slow_hop_codec=None,
+                 placement="auto")
+    ts = [io.write(reqs, str(tmp_path / f"h{i}"), **knobs)
+          for i in range(3)]
+    healthy = min(t.total for t in ts)
+    assert all(t.serve_map is None for t in ts)   # healthy: bijective
+
+    slow = FaultSpec(slow_nodes={1: 6.0})
+    faulted = []
+    for i in range(7):
+        t = io.write(reqs, str(tmp_path / f"d{i}"), **knobs, faults=slow)
+        _assert_identical(io, reqs, str(tmp_path / f"d{i}"))
+        faulted.append(t)
+    # write d0 measures the straggler; d1 — ONE write later — already
+    # executes an evacuation serve map with nothing on node 1
+    assert faulted[0].node_slowdown[1] > 1.5
+    assert faulted[1].serve_map is not None
+    assert all(node_of_slot(s, 8, 4) != 1 for s in faulted[1].serve_map)
+    # steady state: evacuated, and within 1.5x of the healthy total
+    # (the straggler only keeps its un-evictable stage-1 share)
+    for t in faulted[-2:]:
+        assert t.serve_map is not None
+        assert all(node_of_slot(s, 8, 4) != 1 for s in t.serve_map)
+        assert t.total <= 1.5 * healthy
+    # the straggler sheds its served load: before adaptation node 1
+    # looks slow, after evacuation it serves nothing (reads healthy)
+    assert faulted[-1].node_slowdown[1] < faulted[0].node_slowdown[1]
+
+
+# ---------------------------------------------------------------------
+# dead aggregator: heartbeat detection, repair re-route, round replay,
+# torn-segment rewrite — and the write still lands byte-identical
+# ---------------------------------------------------------------------
+
+def test_dead_aggregator_recovers_byte_identical(tmp_path):
+    io = HostCollectiveIO(n_ranks=16, n_nodes=4, stripe_size=1024,
+                          stripe_count=4)
+    # frozen clock: nobody times out on their own — the only death is
+    # the injected one (real time would expire the 5 ms budget for
+    # every host before the write even polls)
+    hb = HeartbeatMonitor(n_hosts=4, timeout_s=5e-3, clock=lambda: 0.0)
+    reqs = btio_pattern(16, n=32)
+    path = str(tmp_path / "f")
+    t = io.write(reqs, path, method="tam", cb_bytes=1024, pipeline=True,
+                 faults=FaultSpec(dead_aggregator=(2, 1)), heartbeat=hb)
+    victim_node = node_of_slot(2, 4, 4)
+    assert hb.dead_hosts() == [victim_node]       # detection latched
+    assert t.repair_map is not None
+    assert t.repair_map[2] != 2                   # victim re-routed
+    assert t.recovery_seconds >= hb.timeout_s     # detection + replay
+    assert t.torn_writes_detected >= 1            # torn segment rewritten
+    assert not os.path.exists(partial_marker(path + ".seg2"))
+    _assert_identical(io, reqs, path)
+
+
+def test_dead_aggregator_without_heartbeat_uses_detection_latency(tmp_path):
+    io = HostCollectiveIO(n_ranks=16, n_nodes=4, stripe_size=1024,
+                          stripe_count=4)
+    reqs = btio_pattern(16, n=32)
+    t = io.write(reqs, str(tmp_path / "f"), method="tam", cb_bytes=1024,
+                 faults=FaultSpec(dead_aggregator=(0, 0),
+                                  detection_s=0.25))
+    assert t.recovery_seconds >= 0.25
+    _assert_identical(io, reqs, str(tmp_path / "f"))
+
+
+# ---------------------------------------------------------------------
+# lost / delayed slow-hop messages: bounded retry, loud failure
+# ---------------------------------------------------------------------
+
+def test_lost_message_retries_counted_and_charged(tmp_path):
+    io = HostCollectiveIO(n_ranks=16, n_nodes=4, stripe_size=1024,
+                          stripe_count=4)
+    reqs = btio_pattern(16, n=32)
+    healthy = io.write(reqs, str(tmp_path / "h"), method="twophase",
+                       cb_bytes=1024)
+    t = io.write(reqs, str(tmp_path / "f"), method="twophase",
+                 cb_bytes=1024,
+                 faults=FaultSpec(lost={(0, 0): 2},
+                                  delayed={(1, 0): 0.5}))
+    assert t.retries == 2
+    assert t.total >= healthy.total + 0.25        # the delay is visible
+    _assert_identical(io, reqs, str(tmp_path / "f"))
+
+
+def test_lost_message_past_max_retries_raises(tmp_path):
+    io = HostCollectiveIO(n_ranks=16, n_nodes=4, stripe_size=1024,
+                          stripe_count=4)
+    reqs = btio_pattern(16, n=32)
+    with pytest.raises(UnrecoverableFaultError):
+        io.write(reqs, str(tmp_path / "f"), method="twophase",
+                 cb_bytes=1024, faults=FaultSpec(lost={(0, 0): 5}))
+
+
+# ---------------------------------------------------------------------
+# satellite 2: a write that raises mid-trial must not poison the session
+# ---------------------------------------------------------------------
+
+def test_session_trial_abort_unpoisons_entry(tmp_path):
+    sess = IOSession()
+    io = HostCollectiveIO(n_ranks=16, n_nodes=4, stripe_size=1024,
+                          stripe_count=8, session=sess)
+    reqs = e3sm_f_pattern(16)
+    knobs = dict(method="tam", local_aggregators=8, cb_bytes="auto",
+                 pipeline_depth="auto", slow_hop_codec=None,
+                 placement="auto")
+    t0 = io.write(reqs, str(tmp_path / "a"), **knobs)
+    with pytest.raises(UnrecoverableFaultError):
+        io.write(reqs, str(tmp_path / "b"), **knobs,
+                 faults=FaultSpec(lost={(0, 0): 99}))
+    # no half-registered trial left behind: every surviving plan either
+    # measured a total or is the first-compiled plan
+    (entry,) = sess._entries.values()
+    first = _arb_key(entry.plan, None)
+    assert all(ak in entry.totals or ak == first for ak in entry.plans)
+    # and the tuner still works: the next writes trial + settle, with
+    # the steady state no worse than the first write
+    t2 = io.write(reqs, str(tmp_path / "c"), **knobs)
+    t3 = io.write(reqs, str(tmp_path / "d"), **knobs)
+    assert t3.plan_source == "session-hit"
+    assert t3.total <= t0.total + 1e-15
+    _assert_identical(io, reqs, str(tmp_path / "d"))
+    assert t2 is not None
+
+
+# ---------------------------------------------------------------------
+# satellite 3: heartbeat latch semantics + elastic stranded devices
+# ---------------------------------------------------------------------
+
+def test_heartbeat_death_latches_until_revive():
+    tm = [0.0]
+    hb = HeartbeatMonitor(n_hosts=3, timeout_s=1.0, clock=lambda: tm[0])
+    assert hb.healthy()
+    tm[0] = 2.0
+    hb.beat(0)
+    hb.beat(1)
+    assert hb.dead_hosts() == [2]        # timed out -> latched
+    hb.beat(2)                           # beats are IGNORED once dead
+    tm[0] = 2.5
+    assert hb.dead_hosts() == [2]
+    hb.inject_failure(1)                 # injected: same latch
+    hb.beat(1)
+    assert hb.dead_hosts() == [1, 2]
+    hb.revive(2)                         # the single re-admission path
+    hb.revive(1)
+    assert hb.healthy()
+
+
+def test_plan_remesh_reports_stranded_devices():
+    with pytest.warns(RuntimeWarning, match="strands 8"):
+        plan = plan_remesh(total_devices=24, model_parallel=1,
+                           old_data_parallel=32)
+    assert plan.mesh_shape[0] == 16
+    assert plan.unused_devices == 8
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        exact = plan_remesh(total_devices=16, model_parallel=1,
+                            old_data_parallel=16)
+    assert exact.unused_devices == 0
+
+
+# ---------------------------------------------------------------------
+# resize event mid write-loop: replan through runtime.elastic, don't
+# wedge — and the shrunken writer's file is byte-identical
+# ---------------------------------------------------------------------
+
+def test_apply_resize_mid_loop_byte_identical(tmp_path):
+    io = HostCollectiveIO(n_ranks=16, n_nodes=4, stripe_size=1024,
+                          stripe_count=4)
+    reqs = btio_pattern(16, n=32)
+    ref = _reference_file(reqs, _file_len(reqs))
+    io.write(reqs, str(tmp_path / "w0"), method="tam", cb_bytes=1024)
+    fault = FaultSpec(resize_at_write=1, resize_dead_nodes=(3,))
+    with pytest.warns(RuntimeWarning):   # 12 survivors -> data axis 8
+        io2, reqs2, plan = apply_resize(io, reqs,
+                                        fault.resize_dead_nodes)
+    assert io2.n_ranks < io.n_ranks
+    assert plan.unused_devices > 0
+    # the union of requests survived the re-shard
+    assert sum(int(ln.sum()) for _, ln, _ in reqs2) \
+        == sum(int(ln.sum()) for _, ln, _ in reqs)
+    io2.write(reqs2, str(tmp_path / "w1"), method="tam", cb_bytes=1024)
+    got = io2.read_file(str(tmp_path / "w1"), ref.size)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_apply_resize_consumes_heartbeat_deaths(tmp_path):
+    io = HostCollectiveIO(n_ranks=16, n_nodes=4, stripe_size=1024,
+                          stripe_count=4)
+    hb = HeartbeatMonitor(n_hosts=4, timeout_s=10.0)
+    hb.inject_failure(2)
+    reqs = btio_pattern(16, n=32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        io2, reqs2, _ = apply_resize(io, reqs, (), heartbeat=hb)
+    assert io2.n_ranks < io.n_ranks      # the latched death was honored
+    with pytest.raises(UnrecoverableFaultError):
+        apply_resize(io, reqs, (0, 1, 2, 3))
+
+
+# ---------------------------------------------------------------------
+# satellite 4: kill-and-resume — a checkpoint saved THROUGH a dead
+# aggregator restores byte-identical on the shrunken mesh
+# ---------------------------------------------------------------------
+
+def _tree():
+    rng = np.random.default_rng(11)
+    return {"w": rng.standard_normal((64, 16)).astype(np.float32),
+            "b": rng.standard_normal(64).astype(np.float32),
+            "step_scale": np.float32(0.5) * np.ones(8, np.float32)}
+
+
+def test_kill_and_resume_restores_byte_identical(tmp_path):
+    tree = _tree()
+    hb = HeartbeatMonitor(n_hosts=2, timeout_s=1e-3, clock=lambda: 0.0)
+    io = HostCollectiveIO(n_ranks=8, n_nodes=2, stripe_size=1024,
+                          stripe_count=4)
+    mgr = CheckpointManager(directory=tmp_path / "ck", io=io,
+                            cb_bytes=1024, heartbeat=hb)
+    mgr.save(tree, step=0)
+    # slot 1's node dies mid-save: the save must still COMPLETE (repair
+    # + replay + torn-segment rewrite), leaving a valid checkpoint
+    t = mgr.save(tree, step=1, faults=FaultSpec(dead_aggregator=(1, 0)))
+    assert t.recovery_seconds > 0 and t.repair_map is not None
+    dead = hb.dead_hosts()
+    assert dead == [node_of_slot(1, 4, 2)]
+    # restart: replan the writer onto the survivors via runtime.elastic
+    empty = [(np.zeros(0, np.int64), np.zeros(0, np.int64),
+              np.zeros(0, np.uint8))] * io.n_ranks
+    io2, _, eplan = apply_resize(io, empty, dead)
+    assert io2.n_nodes < io.n_nodes
+    mgr2 = CheckpointManager(directory=tmp_path / "ck", io=io2,
+                             cb_bytes=1024)
+    restored, step = mgr2.restore(like_tree=tree)
+    assert step == 1
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(restored[k]),
+                                      np.asarray(tree[k]))
+    # and the shrunken mesh keeps checkpointing
+    tree2 = {k: np.asarray(v) + 1 for k, v in tree.items()}
+    mgr2.save(tree2, step=2)
+    restored2, _ = mgr2.restore(like_tree=tree)
+    for k in tree2:
+        np.testing.assert_array_equal(np.asarray(restored2[k]),
+                                      np.asarray(tree2[k]))
