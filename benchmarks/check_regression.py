@@ -65,11 +65,23 @@ dead-aggregator recovery, resize-without-wedging — see
 (``benchmarks/baselines/BENCH_degraded_baseline.json``) pins scenario
 coverage only.
 
+With ``--restore`` (the ``BENCH_restore.json`` artifact from the
+``restore`` suite) the gate also enforces the read path's acceptance
+contract — byte identity of every replicated read, the node cache
+flattening same-node restores (within ``RESTORE_FLAT_X`` from 2 -> 8
+replicas/node), cache-on never slower than cache-off, warm session
+restores never worse than cold, half-tree subset restores reading
+< 50% of the file — see :func:`check_restore`; its baseline
+(``benchmarks/baselines/BENCH_restore_baseline.json``) pins workload
+coverage only.
+
 Usage: python benchmarks/check_regression.py CURRENT BASELINE
            [--threshold 0.2] [--kernels BENCH_kernels.json]
            [--kernels-baseline benchmarks/baselines/BENCH_kernels_baseline.json]
            [--degraded BENCH_degraded.json]
            [--degraded-baseline benchmarks/baselines/BENCH_degraded_baseline.json]
+           [--restore BENCH_restore.json]
+           [--restore-baseline benchmarks/baselines/BENCH_restore_baseline.json]
 """
 from __future__ import annotations
 
@@ -278,6 +290,101 @@ def check_degraded(degraded: dict, baseline: dict | None) -> list[str]:
     return errors
 
 
+RESTORE_FLAT_X = 1.3      # cache-on restore total, 2 -> 8 replicas/node
+
+
+def check_restore(restore: dict, baseline: dict | None) -> list[str]:
+    """Gate on the ``restore`` suite's artifact (``BENCH_restore.json``,
+    benchmarks/restore.py). The bounds are the read path's acceptance
+    contract, enforced WITHIN the artifact (timings are modeled and
+    deterministic); the baseline pins workload COVERAGE only:
+
+    * every replica point reads byte-identical to the single-reader
+      ``read_file`` oracle, cache on and off;
+    * the node cache makes same-node restore FLAT: the cache-on total
+      at the highest replica count stays within ``RESTORE_FLAT_X`` of
+      the lowest's (each node pays the slow hop once per window, not
+      once per reader);
+    * cache-on never models slower than cache-off at any point, and
+      conserves deliveries (``hits + misses`` == cache-off misses);
+    * the warm (session-hit) restore never models worse than the cold
+      compile+sweep one;
+    * the half-tree subset restore reads < 50% of the file's bytes
+      (ranged segment reads, not whole-file).
+    """
+    errors = []
+    wls = restore.get("workloads", {})
+    if not wls:
+        errors.append("restore: no workloads in the artifact")
+        return errors
+    for wl in (baseline or {}).get("workloads", []):
+        if wl not in wls:
+            errors.append(
+                f"restore/{wl}: workload in the restore baseline but "
+                "missing from the artifact — coverage shrank")
+    for wl, e in sorted(wls.items()):
+        pts = e.get("replicas", {})
+        if not pts:
+            errors.append(f"restore/{wl}: no replica points")
+            continue
+        for q, p in sorted(pts.items(), key=lambda kv: int(kv[0])):
+            if not p.get("byte_identical"):
+                errors.append(
+                    f"restore/{wl}/q{q}: replicated read is NOT "
+                    "byte-identical to the single-reader oracle")
+            on, off = p["cache_on"], p["cache_off"]
+            if on["total_s"] > off["total_s"] * (1 + 1e-9):
+                errors.append(
+                    f"restore/{wl}/q{q}: cache-on restore "
+                    f"({on['total_s']:.4g}s) models SLOWER than "
+                    f"cache-off ({off['total_s']:.4g}s)")
+            if not p.get("delivery_conserved"):
+                errors.append(
+                    f"restore/{wl}/q{q}: cache-on hits+misses "
+                    f"({on['cache_hits']}+{on['cache_misses']}) != "
+                    f"cache-off misses ({off['cache_misses']}) — "
+                    "deliveries lost or duplicated")
+            if "hit_ratio" not in on:
+                errors.append(f"restore/{wl}/q{q}: no cache hit ratio")
+        lo = min(pts, key=int)
+        hi = max(pts, key=int)
+        t_lo = pts[lo]["cache_on"]["total_s"]
+        t_hi = pts[hi]["cache_on"]["total_s"]
+        if t_hi > RESTORE_FLAT_X * t_lo:
+            errors.append(
+                f"restore/{wl}: cache-on total grew {t_hi / t_lo:.3f}x "
+                f"from {lo} to {hi} replicas/node (bound "
+                f"{RESTORE_FLAT_X}x) — the node cache stopped "
+                "flattening same-node restores")
+        sess = e.get("session", {})
+        if not sess:
+            errors.append(f"restore/{wl}: no cold/warm session columns")
+        else:
+            if sess["warm_s"] > sess["cold_s"] * (1 + 1e-9):
+                errors.append(
+                    f"restore/{wl}: warm restore {sess['warm_s']:.4g}s "
+                    f"models worse than cold {sess['cold_s']:.4g}s — "
+                    "the read arbiter kept a losing plan")
+            if not sess.get("plan_reused"):
+                errors.append(
+                    f"restore/{wl}: steady-state restore did not reuse "
+                    f"a cached read plan (sources {sess.get('sources')})")
+    sub = restore.get("subset", {})
+    if not sub:
+        errors.append("restore: no subset entry in the artifact")
+    else:
+        if not sub.get("byte_identical"):
+            errors.append("restore/subset: restored leaves are NOT "
+                          "byte-identical to the saved tree")
+        if sub.get("frac", 1.0) >= 0.5:
+            errors.append(
+                f"restore/subset: half-tree restore read "
+                f"{sub.get('read_bytes')}/{sub.get('file_len')} bytes "
+                f"({sub.get('frac', 1.0):.0%}) — ranged reads must stay "
+                "under 50% of the file")
+    return errors
+
+
 KERNEL_JITTER = 0.25      # per-workload headroom; the SUM is strict
 
 
@@ -330,6 +437,10 @@ def main() -> int:
                     help="BENCH_degraded.json from the degraded suite")
     ap.add_argument("--degraded-baseline", default=None,
                     help="coverage baseline for --degraded")
+    ap.add_argument("--restore", default=None,
+                    help="BENCH_restore.json from the restore suite")
+    ap.add_argument("--restore-baseline", default=None,
+                    help="coverage baseline for --restore")
     args = ap.parse_args()
     with open(args.current) as f:
         current = json.load(f)
@@ -356,12 +467,24 @@ def main() -> int:
                 dbase = json.load(f)
         errors += check_degraded(degraded, dbase)
         dmatched = len(degraded.get("scenarios", {}))
+    rmatched = 0
+    if args.restore:
+        with open(args.restore) as f:
+            restore = json.load(f)
+        rbase = None
+        if args.restore_baseline:
+            with open(args.restore_baseline) as f:
+                rbase = json.load(f)
+        errors += check_restore(restore, rbase)
+        rmatched = sum(len(e.get("replicas", {}))
+                       for e in restore.get("workloads", {}).values())
     for e in errors:
         print(f"REGRESSION: {e}", file=sys.stderr)
     if not errors:
         print(f"benchmark gate OK ({matched} matched points"
               + (f", {kmatched} fused-drain workloads" if kmatched else "")
               + (f", {dmatched} degraded scenarios" if dmatched else "")
+              + (f", {rmatched} restore replica points" if rmatched else "")
               + f", threshold {args.threshold:.0%})")
     return 1 if errors else 0
 

@@ -1,0 +1,193 @@
+"""Restore-path sweep: replica fan-out x workload, cold vs warm cache.
+
+The serving scenario the node-level read cache exists for: q model
+replicas per node all pull the same checkpoint at startup. Without the
+cache every co-located reader pays the slow hop itself, so restore time
+scales with the replica count; with it each node's elected fetcher pays
+the slow hop ONCE per window and fans out intra-node, so the curve goes
+flat. This suite measures that curve and emits ``BENCH_restore.json``
+for the CI gate (``check_regression.py --restore``):
+
+* **replica sweep** — for each gated workload, the file is written once
+  and then read back by 2 / 4 / 8 replicas per node (every reader wants
+  the whole file), cache on and off. Gated: cache-on total stays flat
+  within ``RESTORE_FLAT_X`` (1.3x) from 2 -> 8 replicas; cache-on never
+  models slower than cache-off at any point; every read is
+  byte-identical to the single-reader ``read_file`` oracle; cache-on
+  ``hits + misses`` equals cache-off ``misses`` (same deliveries,
+  different transport).
+* **cold vs warm** — the same restore driven through an ``IOSession``
+  with every knob ``"auto"``: the first read compiles + sweeps
+  (``cold_s``), repeats hit the cached read plan (``warm_s``,
+  ``plan_source="session-hit"``). Gated: warm never models worse than
+  cold (the read arbiter keeps the best measured plan).
+* **subset** — a pytree checkpoint restored with a half-tree
+  ``subset=``: ranged segment reads must fetch only the selected
+  leaves' bytes. Gated: ``read_bytes < 50%`` of ``file_len``.
+
+Timings are MODELED seconds (deterministic), so the gate's bounds are
+stable; the committed baseline
+(``benchmarks/baselines/BENCH_restore_baseline.json``) pins workload
+COVERAGE only, never wall times, and only ever grows additively.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+import numpy as np
+
+from benchmarks.workloads import HOST_PATTERNS
+from repro.checkpoint.checkpoint import (manifest_fingerprint,
+                                         restore_checkpoint,
+                                         save_checkpoint)
+from repro.checkpoint.host_io import HostCollectiveIO
+from repro.core.cost_model import Machine
+from repro.core.plan import IOConfig
+from repro.core.session import IOSession
+
+NODES, STRIPE, STRIPE_COUNT = 2, 1024, 4
+WRITER_RANKS = 16    # btio needs a square rank count
+REPLICAS = (2, 4, 8)            # readers per node
+WORKLOADS = ("btio", "e3sm_f", "sparse_ckpt")
+CB = 4096                        # fixed cb for the replica sweep: the
+# flatness bound compares totals ACROSS reader counts, so the plan must
+# not re-pick cb per point
+AUTO = IOConfig(req_cap=0, data_cap=0, cb_buffer_size="auto",
+                pipeline=True, pipeline_depth="auto", placement="auto",
+                slow_hop_codec="auto")
+
+
+def _machine() -> Machine:
+    return Machine(io_bw=5e7)
+
+
+def _io(n_ranks, session=None) -> HostCollectiveIO:
+    return HostCollectiveIO(n_ranks=n_ranks, n_nodes=NODES,
+                            stripe_size=STRIPE, stripe_count=STRIPE_COUNT,
+                            machine=_machine(), session=session)
+
+
+def _write_file(wl: str, d: str) -> tuple[str, int]:
+    """Write the workload's pattern once; return (path, file_len)."""
+    reqs = HOST_PATTERNS[wl](WRITER_RANKS)
+    extent = max(int((o + ln).max()) for o, ln, _ in reqs if o.size)
+    path = f"{d}/{wl}"
+    _io(WRITER_RANKS).write(reqs, path, method="tam",
+                            config=IOConfig(req_cap=0, data_cap=0))
+    return path, extent
+
+
+def _read_stats(t) -> dict:
+    return {"total_s": float(t.total),
+            "hit_ratio": float(t.cache_hit_ratio),
+            "cache_hits": int(t.cache_hits),
+            "cache_misses": int(t.cache_misses),
+            "read_bytes": int(t.read_bytes),
+            "slow_bytes": int(t.slow_hop_slow_bytes)}
+
+
+def _replica_sweep(wl: str, path: str, file_len: int) -> dict:
+    oracle = _io(WRITER_RANKS).read_file(path, file_len)
+    out = {}
+    for q in REPLICAS:
+        io = _io(q * NODES)
+        reqs = [(np.asarray([0], np.int64),
+                 np.asarray([file_len], np.int64))] * io.n_ranks
+        point = {}
+        for nc in (True, False):
+            outs, t = io.read(reqs, path,
+                              config=IOConfig(req_cap=0, data_cap=0,
+                                              cb_buffer_size=CB),
+                              node_cache=nc)
+            point["cache_on" if nc else "cache_off"] = _read_stats(t)
+            point.setdefault("byte_identical", True)
+            point["byte_identical"] &= all(
+                np.array_equal(o, oracle) for o in outs)
+        point["delivery_conserved"] = (
+            point["cache_on"]["cache_hits"]
+            + point["cache_on"]["cache_misses"]
+            == point["cache_off"]["cache_misses"])
+        out[str(q)] = point
+    return out
+
+
+def _cold_warm(wl: str, path: str, file_len: int) -> dict:
+    """Session-driven restore with every knob auto: first read compiles
+    (cold), repeats hit the cached read plan (warm)."""
+    sess = IOSession(machine=_machine())
+    io = _io(REPLICAS[0] * NODES, session=sess)
+    reqs = [(np.asarray([0], np.int64),
+             np.asarray([file_len], np.int64))] * io.n_ranks
+    totals, sources = [], []
+    for _ in range(4):
+        _, t = io.read(reqs, path, config=AUTO)
+        totals.append(float(t.total))
+        sources.append(t.plan_source)
+    return {"cold_s": totals[0], "warm_s": totals[-1],
+            "sources": sources, "plan_reused": sources[-1] == "session-hit"}
+
+
+def _subset(d: str) -> dict:
+    """Half-tree partial restore: ranged reads fetch only the selected
+    leaves' bytes."""
+    rng = np.random.default_rng(0)
+    tree = {"w": rng.standard_normal((64, 64)).astype(np.float32),
+            "b": rng.standard_normal(64).astype(np.float32),
+            "opt": {"m": np.zeros((64, 64), np.float32),
+                    "v": np.zeros((64, 64), np.float32)}}
+    io = _io(WRITER_RANKS)
+    man, _ = save_checkpoint(tree, f"{d}/ck", io=io, method="twophase")
+    sub = [e["path"] for e in man["leaves"] if "opt" not in e["path"]]
+    like = {"w": np.zeros_like(tree["w"]), "b": np.zeros_like(tree["b"]),
+            "opt": {"m": np.zeros_like(tree["opt"]["m"]),
+                    "v": np.zeros_like(tree["opt"]["v"])}}
+    got, _, t = restore_checkpoint(f"{d}/ck", like, io=io, subset=sub,
+                                   with_timings=True)
+    ok = (np.array_equal(got["w"], tree["w"])
+          and np.array_equal(got["b"], tree["b"]))
+    return {"read_bytes": int(t.read_bytes),
+            "file_len": int(man["file_len"]),
+            "frac": t.read_bytes / man["file_len"],
+            "subset_leaves": sub,
+            "fingerprint": manifest_fingerprint(man),
+            "byte_identical": bool(ok)}
+
+
+def replica_cache_sweep():
+    """benchmarks.run suite: the full replica x workload restore sweep."""
+    blob = {"config": {"nodes": NODES, "writer_ranks": WRITER_RANKS,
+                       "replicas": list(REPLICAS), "cb_bytes": CB,
+                       "stripe_size": STRIPE,
+                       "stripe_count": STRIPE_COUNT, "io_bw": 5e7},
+            "workloads": {}}
+    rows = []
+    for wl in WORKLOADS:
+        with tempfile.TemporaryDirectory() as d:
+            path, file_len = _write_file(wl, d)
+            entry = {"file_len": file_len,
+                     "replicas": _replica_sweep(wl, path, file_len),
+                     "session": _cold_warm(wl, path, file_len)}
+        blob["workloads"][wl] = entry
+        for q, p in entry["replicas"].items():
+            rows.append((
+                f"restore_{wl}_q{q}", p["cache_on"]["total_s"] * 1e6,
+                f"off={p['cache_off']['total_s'] * 1e6:.1f}us "
+                f"hit_ratio={p['cache_on']['hit_ratio']:.2f} "
+                f"bytes_ok={p['byte_identical']}"))
+        rows.append((
+            f"restore_{wl}_warm", entry["session"]["warm_s"] * 1e6,
+            f"cold={entry['session']['cold_s'] * 1e6:.1f}us "
+            f"reused={entry['session']['plan_reused']}"))
+    with tempfile.TemporaryDirectory() as d:
+        blob["subset"] = _subset(d)
+    rows.append((
+        "restore_subset_half_tree", 0.0,
+        f"frac={blob['subset']['frac']:.2f} "
+        f"bytes={blob['subset']['read_bytes']}/"
+        f"{blob['subset']['file_len']}"))
+    out = os.environ.get("BENCH_RESTORE_OUT", "BENCH_restore.json")
+    with open(out, "w") as f:
+        json.dump(blob, f, indent=1, sort_keys=True)
+    return rows

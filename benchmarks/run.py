@@ -10,7 +10,7 @@ from __future__ import annotations
 import argparse
 
 from benchmarks import (degraded, kernel_bench, paper_figures, pipeline,
-                        rounds, spmd_bytes)
+                        restore, rounds, spmd_bytes)
 
 SUITES = {
     "fig2": paper_figures.fig2_congestion,
@@ -24,6 +24,7 @@ SUITES = {
     "rounds": rounds.cb_sweep,
     "pipeline": pipeline.serial_vs_pipelined,
     "degraded": degraded.scenario_matrix,
+    "restore": restore.replica_cache_sweep,
 }
 
 

@@ -8,14 +8,21 @@ leaf as (offset, length, payload) requests — exactly an MPI collective
 write with an MPI file view — and ``HostCollectiveIO`` executes it with
 the TAM or two-phase schedule.
 
-Restore reads the striped segments back, reassembles the byte space,
-and device_puts each leaf with the target sharding — which may belong
-to a DIFFERENT mesh (elastic restart; see runtime.elastic).
+Restore is the write's mirror: the reader topology's per-rank read
+requests route through the SAME planner (``compile_plan`` with
+``direction="read"``) and the host read executor — node-level window
+cache, ranged segment reads, read-side :class:`IOTimings` — then each
+leaf is device_put with the target sharding, which may belong to a
+DIFFERENT mesh (elastic restart; see runtime.elastic). ``subset=``
+restores part of the tree from exactly its byte ranges; the legacy
+single-reader reassembly (``planned=False``) remains as the
+byte-identity oracle.
 """
 from __future__ import annotations
 
 import json
 import math
+import zlib
 from dataclasses import dataclass
 from pathlib import Path
 
@@ -46,6 +53,18 @@ def build_manifest(tree, step: int = 0) -> dict:
     return {"step": step, "file_len": offset, "leaves": entries}
 
 
+def _leaf_spans(nbytes: int, n_ranks: int):
+    """Contiguous per-rank byte spans of one leaf — the SAME sharding
+    for save and restore, so a restore's read requests mirror the
+    write's exactly (yields (rank, lo, hi), empty spans skipped)."""
+    chunk = max(nbytes // n_ranks, 1)
+    for r in range(n_ranks):
+        lo = min(r * chunk, nbytes)
+        hi = nbytes if r == n_ranks - 1 else min((r + 1) * chunk, nbytes)
+        if hi > lo:
+            yield r, lo, hi
+
+
 def _rank_requests(tree, manifest, n_ranks: int):
     """Shard every leaf round-robin by rows across ranks -> per-rank
     (offsets, lengths, payload) request lists, offset-sorted."""
@@ -53,14 +72,8 @@ def _rank_requests(tree, manifest, n_ranks: int):
     for entry, (path, leaf) in zip(manifest["leaves"], _leaf_paths(tree)):
         arr = np.asarray(leaf)
         flat = arr.reshape(-1).view(np.uint8)
-        chunk = max(len(flat) // n_ranks, 1)
         # each rank owns a contiguous span of the leaf's bytes
-        for r in range(n_ranks):
-            lo = min(r * chunk, len(flat))
-            hi = len(flat) if r == n_ranks - 1 else min((r + 1) * chunk,
-                                                        len(flat))
-            if hi <= lo:
-                continue
+        for r, lo, hi in _leaf_spans(len(flat), n_ranks):
             reqs[r][0].append(entry["offset"] + lo)
             reqs[r][1].append(hi - lo)
             reqs[r][2].append(flat[lo:hi])
@@ -126,27 +139,130 @@ def save_checkpoint(tree, path: str | Path, *, step: int = 0,
     return manifest, timings
 
 
-def restore_checkpoint(path: str | Path, like_tree,
-                       shardings=None):
+def manifest_fingerprint(manifest: dict) -> int:
+    """Deterministic content key of a manifest (CRC of its canonical
+    JSON) — what keys a read session entry to THIS checkpoint's layout,
+    so a re-striped or re-written file never reuses a stale plan.
+    (Not Python ``hash()``: that is salted per process, and a session
+    may outlive several manifests.)"""
+    return zlib.crc32(json.dumps(manifest, sort_keys=True).encode())
+
+
+def _select_leaves(manifest: dict, subset):
+    """Indices of the manifest leaves a ``subset`` keeps: ``None`` =
+    all, an iterable of leaf-path strings, or a predicate on the path.
+    Unknown paths in an iterable subset are an error (a silent miss
+    would restore garbage-by-omission)."""
+    if subset is None:
+        return list(range(len(manifest["leaves"])))
+    if callable(subset):
+        return [i for i, e in enumerate(manifest["leaves"])
+                if subset(e["path"])]
+    want = set(subset)
+    known = {e["path"] for e in manifest["leaves"]}
+    missing = want - known
+    if missing:
+        raise KeyError(f"subset names unknown leaves: {sorted(missing)}; "
+                       f"manifest has {sorted(known)}")
+    return [i for i, e in enumerate(manifest["leaves"])
+            if e["path"] in want]
+
+
+def restore_checkpoint(path: str | Path, like_tree, shardings=None, *,
+                       subset=None, io: HostCollectiveIO | None = None,
+                       method: str = "twophase",
+                       cb_bytes: int | str | None = _UNSET,
+                       pipeline: bool = _UNSET,
+                       pipeline_depth: int | str | None = _UNSET,
+                       slow_hop_codec: str | None = _UNSET,
+                       placement=_UNSET,
+                       kernel_fusion: str | None = _UNSET,
+                       session=None, config: IOConfig | None = None,
+                       node_cache: bool = True, planned: bool | None = None,
+                       with_timings: bool = False):
     """Rebuild the pytree (optionally device_put with ``shardings`` —
-    which may target a different mesh than the one that saved it)."""
+    which may target a different mesh than the one that saved it).
+
+    ``subset`` slices the restore to part of the tree — an iterable of
+    leaf-path strings (``jax.tree_util.keystr`` form, as recorded in
+    the manifest) or a predicate on the path. Selected leaves are
+    restored from RANGED segment reads of exactly their byte spans;
+    every other leaf passes through from ``like_tree`` untouched. Disk
+    bytes scale with the subset, not the file
+    (``IOTimings.read_bytes``).
+
+    ``planned`` routes the read through the full planner
+    (:meth:`HostCollectiveIO.read`: ``compile_plan(direction="read")``,
+    placement/codec/cb/depth passes, the node-level window cache when
+    ``node_cache``, session reuse under the manifest's fingerprint) —
+    the restore-side mirror of the collective write. Default: planned
+    when an ``io`` is supplied (its ranks/nodes are the reader
+    topology), legacy single-reader reassembly otherwise — the
+    byte-identity oracle the planned path is fuzzed against. Returns
+    ``(tree, step)``, or ``(tree, step, timings)`` with
+    ``with_timings=True`` (timings is ``None`` on the legacy path —
+    nothing collective ran).
+    """
     path = Path(path)
     manifest = json.loads(
         (path.parent / (path.name + ".manifest.json")).read_text())
-    io = HostCollectiveIO(n_ranks=1, n_nodes=1,
-                          stripe_size=manifest["stripe_size"],
-                          stripe_count=manifest["stripe_count"])
-    blob = io.read_file(str(path), manifest["file_len"])
+    selected = set(_select_leaves(manifest, subset))
+    if planned is None:
+        planned = io is not None
     flat, treedef = jax.tree_util.tree_flatten(like_tree)
+    if len(flat) != len(manifest["leaves"]):
+        raise ValueError(
+            f"like_tree has {len(flat)} leaves but the manifest has "
+            f"{len(manifest['leaves'])} — restore needs the saved shape")
+    io = io or HostCollectiveIO(n_ranks=1, n_nodes=1,
+                                stripe_size=manifest["stripe_size"],
+                                stripe_count=manifest["stripe_count"])
+    timings = None
+    bufs: dict[int, np.ndarray] = {}
+    if planned:
+        reqs = [([], []) for _ in range(io.n_ranks)]
+        fills = []                 # (rank, pos in rank payload, leaf, lo)
+        cursor = [0] * io.n_ranks
+        for li in sorted(selected):
+            entry = manifest["leaves"][li]
+            for r, lo, hi in _leaf_spans(entry["nbytes"], io.n_ranks):
+                reqs[r][0].append(entry["offset"] + lo)
+                reqs[r][1].append(hi - lo)
+                fills.append((r, cursor[r], li, lo, hi))
+                cursor[r] += hi - lo
+        rank_requests = [(np.asarray(o, np.int64), np.asarray(ln, np.int64))
+                         for o, ln in reqs]
+        outs, timings = io.read(
+            rank_requests, str(path), method=method, config=config,
+            cb_bytes=cb_bytes, pipeline=pipeline,
+            pipeline_depth=pipeline_depth, slow_hop_codec=slow_hop_codec,
+            placement=placement, kernel_fusion=kernel_fusion,
+            session=session, node_cache=node_cache,
+            fingerprint=manifest_fingerprint(manifest))
+        for li in sorted(selected):
+            bufs[li] = np.zeros(manifest["leaves"][li]["nbytes"], np.uint8)
+        for r, pos, li, lo, hi in fills:
+            bufs[li][lo:hi] = outs[r][pos:pos + hi - lo]
+    else:
+        for li in sorted(selected):
+            entry = manifest["leaves"][li]
+            bufs[li] = io.read_file(str(path), manifest["file_len"],
+                                    offset=entry["offset"],
+                                    nbytes=entry["nbytes"])
     leaves = []
-    for entry, like in zip(manifest["leaves"], flat):
-        raw = blob[entry["offset"]:entry["offset"] + entry["nbytes"]]
-        arr = raw.view(np.dtype(entry["dtype"])).reshape(entry["shape"])
+    for li, (entry, like) in enumerate(zip(manifest["leaves"], flat)):
+        if li not in selected:
+            leaves.append(like)
+            continue
+        arr = bufs[li].view(np.dtype(entry["dtype"])) \
+            .reshape(entry["shape"])
         leaves.append(arr)
     tree = jax.tree_util.tree_unflatten(treedef, leaves)
     if shardings is not None:
         tree = jax.tree.map(
             lambda a, s: jax.device_put(a, s), tree, shardings)
+    if with_timings:
+        return tree, manifest["step"], timings
     return tree, manifest["step"]
 
 
@@ -205,13 +321,23 @@ class CheckpointManager:
                        d.glob("ckpt_*.manifest.json"))
         return steps[-1] if steps else None
 
-    def restore(self, like_tree, step: int | None = None, shardings=None):
+    def restore(self, like_tree, step: int | None = None, shardings=None,
+                *, subset=None, node_cache: bool = True,
+                planned: bool | None = None, with_timings: bool = False):
+        """Restore the latest (or a given) step through the planned
+        collective read, using the manager's io/config/session — so
+        repeated restores of the same manifest hit the read-plan cache
+        exactly like repeated saves hit the write's. ``subset`` /
+        ``node_cache`` / ``with_timings`` pass straight to
+        :func:`restore_checkpoint`."""
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.directory}")
         return restore_checkpoint(
             Path(self.directory) / f"ckpt_{step:08d}", like_tree,
-            shardings)
+            shardings, subset=subset, io=self.io, config=self.config,
+            session=self.session, node_cache=node_cache, planned=planned,
+            with_timings=with_timings)
 
     def _gc(self):
         d = Path(self.directory)

@@ -507,3 +507,287 @@ def execute_write(plan: IOPlan, machine: Machine, per_la, path: str, t,
         t.overlap_fraction = (min(t.overlap_saved / hideable, 1.0)
                               if hideable > 0 else 0.0)
     return t
+
+
+def execute_read(plan: IOPlan, machine: Machine, rank_requests, path: str,
+                 t, *, n_nodes: int, ranks_per_node: int,
+                 depth_request=None, node_cache: bool = True,
+                 serve_map=None, faults=None):
+    """Run the I/O + fan-out step of a read plan (the write's mirror).
+
+    rank_requests: per READER rank ``(offsets, lengths)`` in byte
+    units, already split at stripe boundaries (each request lives in
+    one stripe, hence one file domain). Rank i lives on node
+    ``i // ranks_per_node``. Returns the per-rank payloads (one uint8
+    array per rank, request order) with ``t`` (:class:`IOTimings`)
+    filled; bytes are REAL — every window any rank needs is read from
+    its segment file with a RANGED read (``t.read_bytes`` counts disk
+    bytes once per window, the subset-restore economy), zeros past the
+    segment's written extent — and TIME is modeled, same split as
+    :func:`execute_write`.
+
+    The round partition is the plan's: window ``(g, r)`` is domain g's
+    bytes ``[r*cb, (r+1)*cb)``, served by slot ``serve[g]`` (the
+    plan's placement, or an execution-level ``serve_map`` override with
+    the same serialization semantics as the write path). Only windows
+    somebody asked for are read, shipped, or charged.
+
+    ``node_cache=True`` is the intra-node request aggregation of the
+    paper, read direction: per (window, needing node) the node's
+    ELECTED fetcher (its lowest needing rank) pulls the window over
+    the slow hop ONCE — ``t.cache_misses`` — and every co-located
+    reader after it is served from the node's window cache at the fast
+    intra rates (``t.cache_hits``; alpha_intra per delivery,
+    beta_intra on the reader's requested bytes, the staging copy at
+    ``memcpy_bw``). The slow-hop bytes per (window, node) are ONE
+    window regardless of how many ranks on the node want it — the
+    flat-replica-curve acceptance of BENCH_restore. A fetcher on the
+    serving slot's own node pulls intra (no slow hop at all), same
+    placement affinity as the write's fast senders.
+
+    ``node_cache=False`` is the pre-cache baseline: every needing RANK
+    pulls the whole window itself (window-granular transfer, so q
+    co-located readers pay the slow hop q times — exactly the
+    duplicated broadcast traffic the cache deletes). All fetches count
+    as misses; no intra fan-out, no staging.
+
+    With ``plan.slow_hop_codec`` set, each window crossing the slow
+    hop passes a REAL ``encode_bytes``/``decode_bytes`` round trip —
+    encoded once at the serving aggregator, wire bytes charged per
+    slow transmission, the decoded bytes being what readers consume —
+    and intra-node deliveries move raw bytes (the codec is the slow
+    hop's, not the cache's).
+
+    depth_request: as in :func:`execute_write` — ``"auto"``
+    re-resolves the ring depth against the measured per-round arrays.
+    A read round is disk-then-wire, the write's phases reversed; the
+    bounded-buffer makespan is symmetric under phase reversal, so the
+    same ``pipeline_span(comm, io, depth)`` recurrence applies and the
+    session feedback keeps the write's ``(comm, io)`` convention.
+
+    faults: node slowdowns scale what the node serves, as in the write
+    path. A ``<seg>.partial`` marker on ANY needed segment raises
+    :class:`TornWriteError` — a torn write must be repaired (rewritten
+    or restored from an older step) before a restore may consume it.
+    """
+    m = machine
+    stripe_count, cb = plan.n_aggregators, plan.cb
+    stripe_size = plan.layout.stripe_size
+    n_rounds = plan.n_rounds
+    codec = get_codec(plan.slow_hop_codec) if plan.slow_hop_codec else None
+    perm = (plan.placement if plan.placement is not None
+            else tuple(range(stripe_count)))
+    if serve_map is not None:
+        serve = tuple(int(s) for s in serve_map)
+        if len(serve) != stripe_count or not all(
+                0 <= s < stripe_count for s in serve):
+            raise ValueError(f"serve_map {serve!r} must map each of "
+                             f"{stripe_count} domains to a valid slot")
+    else:
+        serve = tuple(perm)
+    serve_nodes = [placement_mod.node_of_slot(serve[g], stripe_count,
+                                              n_nodes)
+                   for g in range(stripe_count)]
+    slow_of = (lambda node: faults.slowdown(node)) if faults is not None \
+        else (lambda node: 1.0)
+
+    # ---- demand map: which (domain, window) does each rank/node need --
+    # win_need[(g, r)] = {node: {rank: requested bytes}}
+    win_need: dict = {}
+    win_spans: dict = {}       # (g, r) -> [(win_off, len)] requested
+    rank_spans = []            # per rank: ([(g, r, win_off, len, out_pos)],
+    #                             total_out_bytes)
+    node_bytes = np.zeros((stripe_count, n_nodes), np.int64)
+    for rank, (offs, lens) in enumerate(rank_requests):
+        nd = rank // ranks_per_node
+        spans = []
+        out_pos = 0
+        for o, ln in zip(np.asarray(offs, np.int64),
+                         np.asarray(lens, np.int64)):
+            g = int((o // stripe_size) % stripe_count)
+            dl = int(to_domain_local(o, stripe_size, stripe_count))
+            node_bytes[g, nd] += int(ln)
+            pos = 0
+            while pos < ln:
+                r = (dl + pos) // cb
+                take = int(min(ln - pos, (r + 1) * cb - (dl + pos)))
+                wo = int(dl + pos - r * cb)
+                spans.append((g, int(r), wo, take, out_pos + pos))
+                win_spans.setdefault((g, int(r)), []).append((wo, take))
+                per_rank = (win_need.setdefault((g, int(r)), {})
+                            .setdefault(nd, {}))
+                per_rank[rank] = per_rank.get(rank, 0) + take
+                pos += take
+            out_pos += int(ln)
+        rank_spans.append((spans, out_pos))
+
+    # ---- ranged segment reads: within each needed window, only the
+    # REQUESTED byte runs hit disk (coalesced — overlapping readers
+    # share one run), once per window whatever the reader count. This
+    # is the subset-restore economy: a half-tree subset's windows read
+    # roughly half the file's bytes (t.read_bytes), never whole
+    # segments. ----------------------------------------------------------
+    needed_gs = sorted({g for g, _ in win_need})
+    for g in needed_gs:
+        if os.path.exists(partial_marker(f"{path}.seg{g}")):
+            raise TornWriteError(f"{path}.seg{g}", -1, -1)
+    seg_len = {g: (os.path.getsize(f"{path}.seg{g}")
+                   if os.path.exists(f"{path}.seg{g}") else 0)
+               for g in needed_gs}
+    windows: dict = {}
+    raw_total = wire_total = 0
+    io_share = np.zeros((stripe_count, n_rounds))
+    handles = {g: (open(f"{path}.seg{g}", "rb") if seg_len[g] else None)
+               for g in needed_gs}
+    try:
+        for (g, r) in sorted(win_need):
+            base = r * cb
+            buf = np.zeros(cb, np.uint8)
+            # coalesce the requested runs inside this window
+            runs = []
+            for wo, take in sorted(win_spans[(g, r)]):
+                if runs and wo <= runs[-1][1]:
+                    runs[-1][1] = max(runs[-1][1], wo + take)
+                else:
+                    runs.append([wo, wo + take])
+            got = 0
+            for lo, hi in runs:
+                hi_f = min(base + hi, seg_len[g])
+                take = hi_f - (base + lo)
+                if take > 0:
+                    handles[g].seek(base + lo)
+                    buf[lo:lo + take] = np.frombuffer(
+                        handles[g].read(take), np.uint8)
+                    got += take
+            t.read_bytes += int(got)
+            io_share[g, r] = got / m.io_bw * slow_of(serve_nodes[g])
+            windows[(g, r)] = buf
+    finally:
+        for f in handles.values():
+            if f is not None:
+                f.close()
+
+    # ---- slow-hop fetches + intra fan-out -----------------------------
+    ga_msgs = np.zeros((stripe_count, n_rounds), np.int64)
+    ga_bytes = np.zeros((stripe_count, n_rounds), np.int64)
+    ga_msgs_fast = np.zeros((stripe_count, n_rounds), np.int64)
+    ga_bytes_fast = np.zeros((stripe_count, n_rounds), np.int64)
+    fan_msgs = np.zeros((n_nodes, n_rounds), np.int64)
+    fan_bytes = np.zeros((n_nodes, n_rounds), np.int64)
+    stage_bytes = np.zeros(n_nodes, np.int64)
+    for (g, r), per_node in sorted(win_need.items()):
+        raw_b = cb + PAIR_BYTES
+        wire_b = raw_b
+        if codec is not None and any(serve_nodes[g] != nd
+                                     for nd in per_node):
+            # encoded ONCE at the serving aggregator; every slow
+            # receiver decodes the same wire bytes — and consumes the
+            # round-tripped payload (byte-identical: lossless only)
+            wire = codec.encode_bytes(windows[(g, r)])
+            dec = codec.decode_bytes(wire)
+            windows[(g, r)] = np.asarray(dec, np.uint8)
+            raw_total += int(windows[(g, r)].size)
+            wire_total += int(wire.size)
+            wire_b = int(wire.size) + PAIR_BYTES
+        for nd, readers in sorted(per_node.items()):
+            fast = nd == serve_nodes[g]
+            if node_cache:
+                # one fetch per (window, node) by the elected fetcher;
+                # the rest of the node reads from the cache
+                if fast:
+                    ga_msgs_fast[g, r] += 1
+                    ga_bytes_fast[g, r] += raw_b
+                else:
+                    ga_msgs[g, r] += 1
+                    ga_bytes[g, r] += wire_b
+                t.cache_misses += 1
+                t.cache_hits += len(readers) - 1
+                stage_bytes[nd] += cb
+                fetcher = min(readers)
+                fan_msgs[nd, r] += len(readers) - 1
+                fan_bytes[nd, r] += sum(b for rk, b in readers.items()
+                                        if rk != fetcher)
+            else:
+                # every rank pulls the whole window itself
+                n_read = len(readers)
+                if fast:
+                    ga_msgs_fast[g, r] += n_read
+                    ga_bytes_fast[g, r] += raw_b * n_read
+                else:
+                    ga_msgs[g, r] += n_read
+                    ga_bytes[g, r] += wire_b * n_read
+                t.cache_misses += n_read
+
+    t.rounds_executed = n_rounds
+    if codec is not None:
+        t.slow_hop_codec = codec.name
+        t.slow_hop_raw_bytes = int(raw_total)
+        t.slow_hop_wire_bytes = int(wire_total)
+        t.codec = float(raw_total + wire_total) / m.codec_bw
+    t.messages_at_ga = int((ga_msgs + ga_msgs_fast).max(initial=0))
+    t.placement = plan.placement
+    t.slow_hop_fast_bytes = int(ga_bytes_fast.sum())
+    t.slow_hop_slow_bytes = int(ga_bytes.sum())
+    t.node_bytes = tuple(tuple(int(b) for b in row) for row in node_bytes)
+
+    # per-round outcast at the serving aggregator: S concurrent slow
+    # receivers pay alpha_eff(S) each (the incast knee is symmetric —
+    # it models NIC/agent saturation, not direction); same-node
+    # deliveries move at intra rates. Domains sharing a serving slot
+    # serialize exactly as in the write path.
+    alpha = np.vectorize(m.alpha_eff)(ga_msgs) * ga_msgs \
+        + m.alpha_intra * ga_msgs_fast
+    t_dom = (alpha + m.beta_inter * ga_bytes
+             + m.beta_intra * ga_bytes_fast)
+    dom_factor = np.asarray([slow_of(n) for n in serve_nodes])
+    t_dom_served = t_dom * dom_factor[:, None]
+    slot_rounds = np.zeros((stripe_count, n_rounds))
+    for g in range(stripe_count):
+        slot_rounds[serve[g]] += t_dom_served[g]
+    fetch_rounds = slot_rounds.max(axis=0, initial=0)
+    # the fan-out runs per node in parallel; round r's comm closes when
+    # the slowest node has delivered its cached windows
+    fan_rounds = (m.alpha_intra * fan_msgs
+                  + m.beta_intra * fan_bytes).max(axis=0, initial=0)
+    comm_rounds = fetch_rounds + fan_rounds
+    t.inter_comm = float(fetch_rounds.sum())
+    t.intra_comm = float(fan_rounds.sum())
+    t.intra_memcpy = float(stage_bytes.max(initial=0)) / m.memcpy_bw
+    io_rounds = io_share.sum(axis=0)
+    t.io = float(io_share.sum())
+
+    depth = plan.pipeline_depth
+    multi_window = n_rounds > 1
+    if depth_request == "auto" and multi_window:
+        depth, _ = optimal_depth(round_times=(comm_rounds, io_rounds))
+    t.pipeline_depth = max(1, min(depth, n_rounds))
+    t.comm_rounds = tuple(float(c) for c in comm_rounds)
+    t.io_rounds = tuple(float(i) for i in io_rounds)
+
+    served_t = [0.0] * n_nodes
+    served_b = [0.0] * n_nodes
+    for g in range(stripe_count):
+        node = serve_nodes[g]
+        served_t[node] += float(t_dom_served[g].sum() + io_share[g].sum())
+        served_b[node] += float((ga_bytes[g] + ga_bytes_fast[g]).sum())
+    t.node_slowdown = measure_node_slowdown(served_t, served_b)
+    t.serve_map = serve if serve_map is not None else None
+
+    if depth > 1 and n_rounds > 0:
+        serial = float(comm_rounds.sum() + io_rounds.sum())
+        span = pipeline_span(comm_rounds, io_rounds, depth)
+        t.overlap_saved = max(serial - span, 0.0)
+        hideable = (float(min(comm_rounds[1:].sum(),
+                              io_rounds[:-1].sum()))
+                    if n_rounds > 1 else 0.0)
+        t.overlap_fraction = (min(t.overlap_saved / hideable, 1.0)
+                              if hideable > 0 else 0.0)
+
+    # ---- assemble per-rank payloads from the fetched windows ----------
+    outs = []
+    for spans, total in rank_spans:
+        buf = np.zeros(total, np.uint8)
+        for g, r, wo, ln, op in spans:
+            buf[op:op + ln] = windows[(g, r)][wo:wo + ln]
+        outs.append(buf)
+    return outs

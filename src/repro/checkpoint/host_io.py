@@ -40,7 +40,8 @@ import numpy as np
 from repro.checkpoint import host_exec
 from repro.checkpoint.host_exec import PAIR_BYTES  # noqa: F401 (compat)
 from repro.core import codec as codec_mod
-from repro.core.cost_model import Machine, Workload, optimal_cb, with_codec
+from repro.core.cost_model import (Machine, Workload, optimal_cb,
+                                   optimal_read_cb, with_codec)
 from repro.core.domains import FileLayout
 from repro.core.faults import TornWriteError, partial_marker
 from repro.core.plan import (IOConfig, IOPlan, compile_plan,
@@ -155,6 +156,23 @@ class IOTimings:
     # dead aggregator (None = no repair happened)
     torn_writes_detected: int = 0  # partial-write markers detected and
     # repaired by rewrite (drain faults + dead-aggregator tears)
+    direction: str = "write"       # which executor filled this
+    node_cache: bool | None = None  # read path: node-level window cache
+    # on/off (None = a write; the knob does not exist there)
+    cache_hits: int = 0            # read deliveries served from a node's
+    # window cache (co-located readers after the elected fetch)
+    cache_misses: int = 0          # window fetches that left the serving
+    # aggregator: one per (window, node) with the cache on, one per
+    # (window, rank) without — the q-fold duplication the cache deletes
+    read_bytes: int = 0            # bytes read from disk, once per
+    # needed window (the subset-restore economy measure)
+
+    @property
+    def cache_hit_ratio(self) -> float:
+        """Fraction of read deliveries served intra-node from a window
+        cache (0.0 = every delivery paid a fetch; a write reports 0)."""
+        return self.cache_hits / max(self.cache_hits
+                                     + self.cache_misses, 1)
 
     @property
     def comm(self) -> float:
@@ -307,7 +325,8 @@ class HostCollectiveIO:
                  slow_hop_codec: str | None = _UNSET,
                  placement=_UNSET, workload: Workload | None = None,
                  config: IOConfig | None = None,
-                 kernel_fusion: str | None = _UNSET) -> IOPlan:
+                 kernel_fusion: str | None = _UNSET,
+                 direction: str = "write") -> IOPlan:
         """Compile this writer's schedule — the host side of the
         plan-identity contract: given the same layout/config, this and
         the SPMD ``twophase.plan_for`` produce the SAME
@@ -331,6 +350,15 @@ class HostCollectiveIO:
         acting as a sparse override. Given equivalent knobs, the config
         and legacy spellings compile the IDENTICAL plan (asserted by
         tests/test_plan.py).
+
+        ``direction="read"`` compiles a restore schedule through the
+        same passes: ``cb_bytes="auto"`` sweeps
+        ``cost_model.optimal_read_cb`` (fan-out, not incast) and the
+        depth resolves against the read round shape
+        (``resolve_cb_and_depth``'s read branch). rank_requests may
+        carry EMPTY payloads here — a read has none to fingerprint, so
+        ``slow_hop_codec="auto"`` resolves off (ratio 1.0); named
+        codecs still execute on the wire.
         """
         k = resolve_knobs(config, cb_bytes=cb_bytes, pipeline=pipeline,
                           pipeline_depth=pipeline_depth,
@@ -375,7 +403,7 @@ class HostCollectiveIO:
             cb_bytes = self.auto_cb_bytes(
                 rank_requests, method=method,
                 local_aggregators=local_aggregators, pipeline=pipe,
-                workload=workload)
+                workload=workload, direction=direction)
         if cb_bytes is not None and cb_bytes % self.stripe_size \
                 and self.stripe_size % cb_bytes:
             # RoundScheduler's alignment rule: whole-stripe multiples
@@ -405,7 +433,7 @@ class HostCollectiveIO:
             FileLayout(stripe_size=self.stripe_size,
                        stripe_count=self.stripe_count, file_len=file_len),
             cfg, n_aggregators=self.stripe_count, n_nodes=self.n_nodes,
-            n_ranks=self.n_ranks, method=method, direction="write",
+            n_ranks=self.n_ranks, method=method, direction=direction,
             machine=self.machine, workload=workload, unit_bytes=1)
 
     # ------------------------------------------------------------------
@@ -685,45 +713,214 @@ class HostCollectiveIO:
     # ------------------------------------------------------------------
     def auto_cb_bytes(self, rank_requests, method: str = "tam",
                       local_aggregators: int | None = None,
-                      pipeline: bool = True, workload=None) -> int:
+                      pipeline: bool = True, workload=None,
+                      direction: str = "write") -> int:
         """Autotuned collective-buffer size for THIS request set: the
         stripe-aligned cb minimizing ``cost_model.optimal_cb``'s modeled
         total (pipelined when ``pipeline``) for the measured workload
         shape (P, nodes, P_G = stripe_count, request count, bytes).
-        Pass ``workload`` to reuse an already-measured one."""
+        Pass ``workload`` to reuse an already-measured one.
+        ``direction="read"`` sweeps the read model instead
+        (``cost_model.optimal_read_cb`` — aggregator fan-out, no
+        incast knee, node-cache intra fan-out)."""
         cands = self._cb_candidates(rank_requests)
         w = workload if workload is not None else \
             self._measured_workload(rank_requests, pipeline)
+        if direction == "read":
+            cb, _ = optimal_read_cb(w, self.machine, candidates=cands)
+            return cb
         P_L = ((local_aggregators or self.n_nodes * 4)
                if method == "tam" else None)
         cb, _ = optimal_cb(w, self.machine, P_L=P_L, candidates=cands)
         return cb
 
     # ------------------------------------------------------------------
-    def read_file(self, path: str, file_len: int) -> np.ndarray:
-        """Reassemble the full byte-space from the striped segments.
+    def read_file(self, path: str, file_len: int, *, offset: int = 0,
+                  nbytes: int | None = None) -> np.ndarray:
+        """Reassemble bytes ``[offset, offset + nbytes)`` of the file
+        byte-space from the striped segments (defaults: the whole
+        file). The range maps to RANGED per-segment reads — only the
+        stripes it touches are seeked and read, never whole segments —
+        which is what a partial restore rides: a subset of the manifest
+        reads a subset of the disk bytes.
 
-        A segment carrying a ``.partial`` marker is a TORN write (the
-        drain died mid-segment and nothing repaired it) — refuse to
-        reassemble a silently short file and raise
+        A touched segment carrying a ``.partial`` marker is a TORN
+        write (the drain died mid-segment and nothing repaired it) —
+        refuse to reassemble a silently short file and raise
         :class:`~repro.core.faults.TornWriteError` instead."""
-        out = np.zeros(file_len, np.uint8)
-        for g in range(self.stripe_count):
-            marker = partial_marker(f"{path}.seg{g}")
-            if os.path.exists(marker):
-                raise TornWriteError(f"{path}.seg{g}", -1, -1)
-            with open(f"{path}.seg{g}", "rb") as f:
-                seg = np.frombuffer(f.read(), np.uint8)
-            # segment g holds stripes g, g+SC, g+2SC, ... concatenated
-            n_str = seg.size // self.stripe_size
-            for r in range(n_str):
-                fo = (r * self.stripe_count + g) * self.stripe_size
-                if fo >= file_len:
-                    break
-                take = min(self.stripe_size, file_len - fo)
-                out[fo:fo + take] = seg[r * self.stripe_size:
-                                        r * self.stripe_size + take]
+        nbytes = file_len - offset if nbytes is None else nbytes
+        end = min(offset + nbytes, file_len)
+        out = np.zeros(max(end - offset, 0), np.uint8)
+        if out.size == 0:
+            return out
+        handles: dict = {}
+        sizes: dict = {}
+        try:
+            # file stripe s lives at seg (s % SC), stripe (s // SC)
+            for s in range(offset // self.stripe_size,
+                           (end - 1) // self.stripe_size + 1):
+                g, r = s % self.stripe_count, s // self.stripe_count
+                if g not in handles:
+                    seg_path = f"{path}.seg{g}"
+                    if os.path.exists(partial_marker(seg_path)):
+                        raise TornWriteError(seg_path, -1, -1)
+                    sizes[g] = os.path.getsize(seg_path)
+                    handles[g] = open(seg_path, "rb")
+                fo = s * self.stripe_size
+                lo, hi = max(offset, fo), min(end, fo + self.stripe_size)
+                seg_off = r * self.stripe_size + (lo - fo)
+                take = min(hi - lo, max(sizes[g] - seg_off, 0))
+                if take > 0:
+                    handles[g].seek(seg_off)
+                    out[lo - offset:lo - offset + take] = np.frombuffer(
+                        handles[g].read(take), np.uint8)
+        finally:
+            for f in handles.values():
+                f.close()
         return out
+
+    # ------------------------------------------------------------------
+    def read(self, rank_requests, path: str, method: str = "twophase",
+             cb_bytes: int | str | None = _UNSET,
+             pipeline: bool = _UNSET,
+             pipeline_depth: int | str | None = _UNSET,
+             slow_hop_codec: str | None = _UNSET,
+             placement=_UNSET,
+             session: "IOSession | None" = None,
+             config: IOConfig | None = None,
+             kernel_fusion: str | None = _UNSET,
+             node_cache: bool = True, fingerprint=None,
+             faults=None) -> tuple[list[np.ndarray], IOTimings]:
+        """Collective READ through the full planner — the write's
+        mirror and the paper's intra-node aggregation applied to
+        restore. rank_requests: list of ``(offsets, lengths)`` per
+        READER rank (byte units; no payload — that is what comes
+        back). Returns ``(payloads, timings)``: one uint8 array per
+        rank in request order, and an :class:`IOTimings` with
+        ``direction="read"`` and the cache accounting filled.
+
+        The schedule comes from :meth:`plan_for` with
+        ``direction="read"`` — the SAME pass pipeline as a write
+        (placement, codec, the read branch of cb/depth resolution), so
+        every knob above means what it means on the write side.
+        ``node_cache=True`` (default) is the tentpole: each node's
+        elected aggregator fetches every window its node needs over
+        the slow hop exactly ONCE and fans out intra-node
+        (``host_exec.execute_read``; ``timings.cache_hit_ratio``).
+        ``node_cache=False`` is the per-rank broadcast baseline the
+        benchmark compares against.
+
+        session: the same cross-call protocol as :meth:`write`
+        (:meth:`IOSession.begin_read`): repeated restores of the same
+        (reader shape, ``fingerprint``, knobs) reuse the compiled plan
+        and re-resolve ``"auto"`` knobs against the measured feedback
+        once, best-measured-total thereafter. ``fingerprint`` is the
+        caller's content key — ``restore_checkpoint`` passes a CRC of
+        the manifest, so a re-striped or re-written checkpoint never
+        reuses a stale entry. ``node_cache`` is key material too: the
+        two settings are different timing regimes, never one entry.
+        """
+        knobs = resolve_knobs(config, warn=True, cb_bytes=cb_bytes,
+                              pipeline=pipeline,
+                              pipeline_depth=pipeline_depth,
+                              slow_hop_codec=slow_hop_codec,
+                              placement=placement,
+                              kernel_fusion=kernel_fusion)
+        cb_bytes, pipeline = knobs["cb_bytes"], knobs["pipeline"]
+        pipeline_depth = knobs["pipeline_depth"]
+        slow_hop_codec = knobs["slow_hop_codec"]
+        placement = knobs["placement"]
+        kernel_fusion = knobs["kernel_fusion"]
+        # reads carry no payload; the planner-facing triples get empty
+        # ones (extent/workload measurement are offset/length-only)
+        triples = [(np.asarray(o, np.int64), np.asarray(ln, np.int64),
+                    np.zeros(0, np.uint8)) for o, ln in rank_requests]
+        plan_t0 = time.perf_counter()
+        session = session if session is not None else self.session
+        plan, source, skey, serve_map = None, "compiled", None, None
+        if session is not None:
+            extent = self._extent(triples)
+            total = sum(int(ln.sum()) for _, ln, _ in triples)
+            n_req = sum(int(o.size) for o, _, _ in triples)
+            skey = ("read", node_cache, fingerprint, self.n_ranks,
+                    self.n_nodes, self.stripe_size, self.stripe_count,
+                    self.machine, extent, total, n_req, method,
+                    cb_bytes, pipeline, pipeline_depth, slow_hop_codec,
+                    tuple(placement) if isinstance(placement,
+                                                   (list, tuple))
+                    else placement, kernel_fusion)
+            kind, payload = session.begin_read(skey,
+                                               machine=self.machine)
+            if kind == "hit":
+                plan, serve_map = payload
+                source = "session-hit"
+            elif kind == "trial":
+                plan = self.plan_for(
+                    method=payload["method"], cb_bytes=payload["cb_bytes"],
+                    pipeline=pipeline or payload["pipeline_depth"] > 1,
+                    pipeline_depth=payload["pipeline_depth"],
+                    rank_requests=triples,
+                    slow_hop_codec=payload["slow_hop_codec"],
+                    placement=payload["placement"],
+                    kernel_fusion=kernel_fusion, direction="read")
+                serve_map = payload.get("serve_map")
+                session.register_trial(skey, plan, serve_map)
+                source = "session-trial"
+        if plan is None:
+            workload = (self._measured_workload(
+                triples, pipeline or pipeline_depth is not None, None)
+                if session is not None else None)
+            plan = self.plan_for(
+                method=method, cb_bytes=cb_bytes, pipeline=pipeline,
+                pipeline_depth=(2 if pipeline_depth == "auto"
+                                else pipeline_depth),
+                rank_requests=triples, slow_hop_codec=slow_hop_codec,
+                placement=placement, kernel_fusion=kernel_fusion,
+                workload=workload, direction="read")
+            if session is not None:
+                session.register(
+                    skey, plan,
+                    requested={"method": method, "cb_bytes": cb_bytes,
+                               "pipeline_depth": pipeline_depth,
+                               "slow_hop_codec": slow_hop_codec,
+                               "placement": placement},
+                    workload=workload,
+                    cb_candidates=(self._cb_candidates(triples)
+                                   if cb_bytes == "auto" else ()),
+                    P_L=None, n_nodes=self.n_nodes,
+                    n_aggregators=self.stripe_count)
+        if plan.slow_hop_codec is not None and \
+                not codec_mod.get_codec(plan.slow_hop_codec).lossless:
+            raise ValueError(
+                f"slow_hop_codec={plan.slow_hop_codec!r} is lossy; the "
+                "host read path moves raw bytes — use a lossless codec "
+                f"({codec_mod.lossless_codecs()})")
+        t = IOTimings()
+        t.direction = "read"
+        t.node_cache = node_cache
+        t.plan_seconds = time.perf_counter() - plan_t0
+        t.plan_source = source
+        split = [self._split_stripes(o, ln, None)[:2]
+                 for o, ln in rank_requests]
+        t.requests_before = sum(np.asarray(o).size
+                                for o, _ in rank_requests)
+        t.requests_after = sum(o.size for o, _ in split)
+        try:
+            outs = host_exec.execute_read(
+                plan, self.machine, split, path, t,
+                n_nodes=self.n_nodes,
+                ranks_per_node=self.n_ranks // self.n_nodes,
+                depth_request=("auto" if pipeline_depth == "auto"
+                               else None),
+                node_cache=node_cache, serve_map=serve_map,
+                faults=faults)
+        except BaseException:
+            if session is not None:
+                session.abort(skey, plan)
+            raise
+        if session is not None:
+            session.observe(skey, plan, t, serve_map=serve_map)
+        return outs, t
 
 
 # Backwards-compatible aliases: the executor bodies moved to host_exec.

@@ -583,6 +583,132 @@ def optimal_cb_and_depth(w: Workload, m: Machine = Machine(),
     return best[1], best[2], best[0]
 
 
+def read_cost(w: Workload, m: Machine = Machine(), *,
+              node_cache: bool = True,
+              replicas: float = 1.0) -> CostBreakdown:
+    """Modeled cost of a planned collective read (a restore).
+
+    The write model run in reverse: global aggregators read the file
+    (``io``), ship each file-domain window over the slow hop, and the
+    window fans out to the reader ranks that requested it.
+
+    ``node_cache=True`` models the host executor's node-level read
+    cache: one elected fetcher per node pulls each window over the slow
+    hop exactly once and co-located readers are served at the intra
+    rates, so the slow-hop endpoint count is ``min(nodes, P)`` and the
+    slow-hop byte volume is independent of ``replicas`` (co-located
+    readers requesting the same bytes — the restore fan-out case).
+    ``node_cache=False`` is the PR-3 broadcast: every reader rank
+    fetches directly, paying the incast knee at P endpoints and
+    re-shipping overlapping bytes ``min(replicas, q)`` times.
+    """
+    ratio = max(w.slow_hop_ratio, 1e-9)
+    bytes_per_ga = w.total_bytes / w.P_G
+    io = w.total_bytes / m.io_bw
+    codec = (bytes_per_ga * (1.0 + 1.0 / ratio) / m.codec_bw
+             if ratio != 1.0 else 0.0)
+    if node_cache:
+        fetchers = float(max(min(w.nodes, w.P), 1))
+        inter = (w.rounds * m.alpha_eff(fetchers) * fetchers
+                 + m.beta_inter * bytes_per_ga / ratio)
+        q = max(w.q, 1)
+        node_share = w.total_bytes / max(w.nodes, 1)
+        intra = w.rounds * m.alpha_intra * q + m.beta_intra * node_share
+        memcpy = node_share / m.memcpy_bw
+        return CostBreakdown(intra_comm=intra, intra_memcpy=memcpy,
+                             inter_comm=inter, io=io, codec=codec,
+                             overlap_saved=_overlap_saved(w, inter, io))
+    dup = max(min(float(replicas), float(max(w.q, 1))), 1.0)
+    senders = w.senders_per_stripe(w.P, w.P * max(w.k, 1.0))
+    inter = (w.rounds * m.alpha_eff(senders) * senders
+             + m.beta_inter * bytes_per_ga * dup / ratio)
+    return CostBreakdown(inter_comm=inter, io=io, codec=codec,
+                         overlap_saved=_overlap_saved(w, inter, io))
+
+
+def optimal_read_cb(w: Workload, m: Machine = Machine(),
+                    candidates: tuple[int, ...] | None = None, *,
+                    node_cache: bool = True,
+                    min_cb_bytes: int = 1,
+                    max_cb_bytes: int | None = None
+                    ) -> tuple[int, CostBreakdown]:
+    """Read-direction :func:`optimal_cb`: pick the collective-buffer
+    size minimizing the modeled :func:`read_cost` total. The trade-off
+    mirrors the write side — small cb = many rounds, each re-paying the
+    per-round fetch latency; large cb = O(cb) node-cache memory."""
+    if candidates is None:
+        candidates = cb_candidates(w.total_bytes / w.P_G, w.stripe_size,
+                                   min_cb_bytes=min_cb_bytes,
+                                   max_cb_bytes=max_cb_bytes)
+
+    def cost(cb: int) -> CostBreakdown:
+        wc = with_measured_rounds(w, rounds_for_cb(w, cb))
+        return read_cost(wc, m, node_cache=node_cache)
+
+    best = min(candidates, key=lambda cb: cost(cb).total)
+    return best, cost(best)
+
+
+def optimal_read_depth(w: Workload | None = None,
+                       m: Machine = Machine(), *,
+                       cb_bytes: float | None = None,
+                       node_cache: bool = True,
+                       depths: tuple[int, ...] = (1, 2, 3, 4),
+                       round_times=None) -> tuple[int, float]:
+    """Read-direction :func:`optimal_depth`. Measured mode (per-round
+    ``(comm_rounds, io_rounds)`` from an executed read) delegates to
+    the exact :func:`pipeline_span`; modeled mode uses
+    :func:`read_cost`'s uniform per-round phases (every depth >= 2
+    ties, smallest wins)."""
+    if round_times is not None:
+        return optimal_depth(m=m, depths=depths, round_times=round_times)
+    if w is None:
+        raise ValueError("need a Workload or measured round_times")
+    wc = w if cb_bytes is None else \
+        with_measured_rounds(w, rounds_for_cb(w, cb_bytes))
+    cost = read_cost(wc, m, node_cache=node_cache)
+    n = max(float(wc.rounds), 1.0)
+    c_r, i_r = cost.inter_comm / n, cost.io / n
+    spans = {d: (n * (c_r + i_r) if min(d, n) <= 1
+                 else c_r + (n - 1.0) * max(c_r, i_r) + i_r)
+             for d in depths}
+    best_d, best_s = None, None
+    for d in depths:
+        if best_s is None or spans[d] < best_s - 1e-15:
+            best_d, best_s = d, spans[d]
+    return best_d, best_s
+
+
+def optimal_read_cb_and_depth(w: Workload, m: Machine = Machine(),
+                              candidates: tuple[int, ...] | None = None,
+                              depths: tuple[int, ...] = (1, 2, 3, 4), *,
+                              node_cache: bool = True,
+                              min_cb_bytes: int = 1,
+                              max_cb_bytes: int | None = None
+                              ) -> tuple[int, int, float]:
+    """Jointly pick (cb_bytes, pipeline depth) for a read, the way
+    :func:`optimal_cb_and_depth` does for writes: per candidate cb the
+    best ring depth's span replaces the serial fetch + fan-out round
+    phases. This is what read-direction ``pipeline_depth="auto"``
+    resolves through. Returns ``(cb_bytes, depth, total_seconds)``."""
+    if candidates is None:
+        candidates = cb_candidates(w.total_bytes / w.P_G, w.stripe_size,
+                                   min_cb_bytes=min_cb_bytes,
+                                   max_cb_bytes=max_cb_bytes)
+    best: tuple[float, int, int] | None = None
+    for cb in candidates:
+        wc = with_measured_rounds(w, rounds_for_cb(w, cb))
+        cost = read_cost(wc, m, node_cache=node_cache)
+        fixed = (cost.intra_comm + cost.intra_sort + cost.intra_memcpy
+                 + cost.inter_req_proc + cost.inter_sort + cost.codec)
+        d, span = optimal_read_depth(wc, m, node_cache=node_cache,
+                                     depths=depths)
+        total = fixed + span
+        if best is None or total < best[0] - 1e-15:
+            best = (total, cb, d)
+    return best[1], best[2], best[0]
+
+
 def receives_per_global_aggregator(w: Workload, P_L: int | None) -> float:
     """The paper's congestion metric (Fig. 2), per round."""
     return (w.P if P_L is None or P_L >= w.P else P_L) / w.P_G

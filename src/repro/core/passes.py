@@ -174,7 +174,9 @@ def resolve_cb_and_depth(plan, ctx):
     """Joint cb x depth resolution over the RoundScheduler-legal cb
     candidates (``optimal_cb_and_depth`` when both are "auto";
     ``optimal_cb`` / ``optimal_depth`` when only one is). A TAM plan
-    autotunes at its optimal P_L. Leaves ``cb=None`` (single shot) for
+    autotunes at its optimal P_L. Read plans resolve against the read
+    cost model (``read_cost`` — fetch + node-cache fan-out phases)
+    instead of the write exchange. Leaves ``cb=None`` (single shot) for
     ``coalesce_windows`` to materialize."""
     from repro.core import cost_model as cm
     from repro.core.plan import _legal_cb_candidates
@@ -188,7 +190,21 @@ def resolve_cb_and_depth(plan, ctx):
         cands = _legal_cb_candidates(plan.domain_len,
                                      plan.layout.stripe_size,
                                      ctx.unit_bytes)
-        if cb == "auto" and depth == "auto":
+        if plan.direction == "read":
+            if cb == "auto" and depth == "auto":
+                cb_bytes, depth, _ = cm.optimal_read_cb_and_depth(
+                    w, ctx.machine, candidates=cands)
+                cb = cb_bytes // ctx.unit_bytes
+            elif cb == "auto":
+                cb_bytes, _ = cm.optimal_read_cb(w, ctx.machine,
+                                                 candidates=cands)
+                cb = cb_bytes // ctx.unit_bytes
+            else:  # depth == "auto" at a fixed cb
+                cb_bytes = (cb if cb is not None
+                            else plan.domain_len) * ctx.unit_bytes
+                depth, _ = cm.optimal_read_depth(w, ctx.machine,
+                                                 cb_bytes=cb_bytes)
+        elif cb == "auto" and depth == "auto":
             cb_bytes, depth, _ = cm.optimal_cb_and_depth(
                 w, ctx.machine, P_L=P_L_arg, candidates=cands)
             cb = cb_bytes // ctx.unit_bytes
@@ -235,12 +251,12 @@ def lower_kernels(plan, ctx):
     selects the single Pallas kernel fusing window sort + coalesce +
     pack + codec zero-skip encode (``kernels.fused_round``) for the
     write drain — one HBM round-trip where the unfused path pays three.
-    Reads have no sort/pack drain, so fusion lowers to ``None`` there."""
+    On reads the same lowering swaps the rle ``jax_decode`` scatter for
+    the ``zero_skip_decode`` kernel in the per-round fetch (and has no
+    effect without a codec — execution strategy, never routing)."""
     fusion = getattr(ctx.cfg, "kernel_fusion", None)
     if fusion not in (None, "fused_round"):
         raise ValueError(f"unknown kernel_fusion {fusion!r}")
-    if plan.direction != "write":
-        fusion = None
     return replace(plan, kernel_fusion=fusion)
 
 

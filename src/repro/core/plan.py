@@ -195,9 +195,10 @@ class IOPlan:
         lands everywhere (ARCHITECTURE.md § sessions and placement).
     kernel_fusion: resolved per-round kernel lowering (the
         ``lower_kernels`` pass): ``"fused_round"`` = the single Pallas
-        drain kernel of ``kernels.fused_round``; ``None`` = the unfused
-        jnp path. Only the SPMD write drain consumes it (reads have no
-        sort/pack drain; the host executor is numpy).
+        drain kernel of ``kernels.fused_round`` on the write drain, and
+        the ``zero_skip_decode`` kernel replacing the rle decode
+        scatter on the read fetch; ``None`` = the unfused jnp path.
+        Only the SPMD backend consumes it (the host executor is numpy).
     """
 
     layout: FileLayout

@@ -147,8 +147,11 @@ def _codec_hooks(slow_hop_codec: str | None, dtype, state_shape,
 
     ``fused`` (``IOPlan.kernel_fusion == "fused_round"``) swaps the rle
     codec's stable-argsort compaction for the Pallas zero-skip kernel
-    (``kernels.fused_round.zero_skip_encode``) — byte-identical wire,
-    one VMEM block per bucket instead of an argsort through HBM.
+    (``kernels.fused_round.zero_skip_encode``) and its staged decode
+    scatter for ``zero_skip_decode`` — byte-identical wire and window,
+    one VMEM block per bucket instead of an argsort (resp. an HBM
+    staging buffer) per round. The decode half serves both directions:
+    the write drain and the read fetch.
     """
     if slow_hop_codec is None:
         return (lambda data, st: ((data,), st),
@@ -165,7 +168,10 @@ def _codec_hooks(slow_hop_codec: str | None, dtype, state_shape,
         def enc(data, st):
             return kops.rle_zero_skip_encode(data), st
 
-        return enc, c.jax_decode, state0
+        def dec(parts):
+            return kops.rle_zero_skip_decode(parts)
+
+        return enc, dec, state0
     return c.jax_encode, c.jax_decode, state0
 
 
@@ -533,7 +539,8 @@ def exchange_rounds_read(sched: RoundScheduler, node_axis: str,
                          pipeline: bool = False,
                          depth: int | None = None,
                          slow_hop_codec: str | None = None,
-                         placement=None) -> jax.Array:
+                         placement=None,
+                         kernel_fusion: str | None = None) -> jax.Array:
     """Round loop of the collective read: per round, aggregators
     broadcast one ``cb``-sized window over the slow axis and every rank
     gathers the elements of its requests falling in that window. Peak
@@ -548,6 +555,9 @@ def exchange_rounds_read(sched: RoundScheduler, node_axis: str,
     the file shards ppermute to their serving slots up front and ranks
     index the gathered windows through the permutation — the returned
     payloads are byte-identical for every placement.
+    ``kernel_fusion="fused_round"`` swaps the rle decode scatter for
+    the Pallas ``zero_skip_decode`` kernel (byte-identical; execution
+    strategy only, never routing).
     """
     n_dest, cb, dl = sched.n_aggregators, sched.cb, sched.domain_len
     cap = r.capacity
@@ -567,7 +577,8 @@ def exchange_rounds_read(sched: RoundScheduler, node_axis: str,
     fpos = jnp.where(live, fpos, 0)
     dest, wloc = fpos // dl, fpos % dl
 
-    enc, dec, _ = _codec_hooks(slow_hop_codec, file_shard.dtype, (cb,))
+    enc, dec, _ = _codec_hooks(slow_hop_codec, file_shard.dtype, (cb,),
+                               fused=kernel_fusion == "fused_round")
 
     def fetch(t):
         win = lax.dynamic_slice_in_dim(file_shard, t * cb, cb)

@@ -41,6 +41,14 @@ amortizes it:
 ``HostCollectiveIO(session=...)`` / ``write(session=...)`` and
 ``CheckpointManager(session=...)`` consume this; the SPMD side can use
 :meth:`IOSession.compile` as a caching front-end to ``compile_plan``.
+
+Reads drive the same protocol (:meth:`IOSession.begin_read`, an alias
+— the state machine is key-generic): ``HostCollectiveIO.read`` keys
+its entries on the READER's shape, the manifest fingerprint, the
+node-cache flag, and the requested knobs, and feeds the read
+executor's measured totals back through the same arbiter. The
+steady-state guarantee carries over verbatim: a repeated restore never
+executes a plan that measured worse than its first restore's.
 """
 from __future__ import annotations
 
@@ -181,6 +189,14 @@ class IOSession:
                     self.replans += 1
                     return "trial", knobs
         return "hit", (entry.best_plan(), entry.best_serve_map())
+
+    # The protocol is key-generic: nothing in begin/register/observe is
+    # write-specific, so the read path (HostCollectiveIO.read) drives
+    # the SAME state machine under read-marked keys — reads lead their
+    # key with a "read" tag plus the node-cache flag, so a read entry
+    # never collides with a write of the same shape. ``begin_read`` is
+    # the read-path spelling of that reuse.
+    begin_read = begin_write
 
     def register(self, key, plan: IOPlan, *, requested: dict,
                  workload=None, cb_candidates=(), P_L=None,

@@ -111,7 +111,8 @@ def _read_shard_fn(plan: IOPlan, offsets, lengths, count, file_shard):
         plan.scheduler(), node, r, starts, file_shard.reshape(-1),
         plan.data_cap, depth=plan.pipeline_depth,
         slow_hop_codec=plan.slow_hop_codec,
-        placement=plan.placement)
+        placement=plan.placement,
+        kernel_fusion=plan.kernel_fusion)
     return out[None]
 
 

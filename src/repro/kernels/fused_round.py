@@ -30,6 +30,15 @@ scatter compacts them — byte-identical to the argsort form (asserted
 by the rounds_checks fuzz), without materializing the argsort
 permutation through HBM.
 
+``zero_skip_decode`` is the read-direction half (the PR 6 "fuse merge
++ codec decode" leftover): the rle ``jax_decode`` expands the
+compacted ``(values, positions)`` wire form back into the window by a
+row-wise scatter through an HBM-materialized (rows, cap+1) staging
+buffer. Here the scatter runs in VMEM, one block per gathered window —
+the merge of the fetched window into the reader's shard consumes the
+kernel's output directly, so the staging buffer never touches HBM.
+Byte-identical to ``jax_decode`` (rounds_checks read fuzz).
+
 Both kernels are selected by the planner's ``lower_kernels`` pass
 (``IOPlan.kernel_fusion == "fused_round"``) and consumed by
 ``core.rounds`` — byte-identity with the unfused jnp path under every
@@ -157,3 +166,38 @@ def zero_skip_encode(data: jax.Array, *, interpret: bool = True):
                    jax.ShapeDtypeStruct((rows, n), jnp.int32)],
         interpret=interpret,
     )(data)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def zero_skip_decode(vals: jax.Array, pos: jax.Array, *,
+                     interpret: bool = True):
+    """Expand zero-skip compacted rows back into dense windows — the
+    rle codec's decode scatter, fused into one VMEM block per row.
+
+    vals/pos: [rows, n] with n a power of two, ``pos == -1`` in the
+    padding (``zero_skip_encode``'s wire layout). Returns [rows, n] in
+    ``vals.dtype``, zeros where no position lands — byte-identical to
+    ``RleCodec.jax_decode``'s staged-scatter formulation, minus its
+    HBM (rows, cap+1) staging buffer.
+    """
+    rows, n = vals.shape
+    if n & (n - 1):
+        raise ValueError(f"row length {n} must be a power of two")
+    if pos.shape != vals.shape:
+        raise ValueError(f"vals {vals.shape} / pos {pos.shape} mismatch")
+    block = pl.BlockSpec((1, n), lambda i: (i, 0))
+
+    def kernel(v, p, out):
+        vv = v[0, :]
+        pp = p[0, :]
+        idx = jnp.where(pp >= 0, pp, n)          # padding -> drop sentinel
+        out[0, :] = jnp.zeros((n,), vv.dtype).at[idx].set(vv, mode="drop")
+
+    return pl.pallas_call(
+        kernel,
+        grid=(rows,),
+        in_specs=[block, block],
+        out_specs=block,
+        out_shape=jax.ShapeDtypeStruct((rows, n), vals.dtype),
+        interpret=interpret,
+    )(vals, pos)

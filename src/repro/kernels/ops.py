@@ -132,6 +132,23 @@ def rle_zero_skip_encode(data: jax.Array, interpret: bool | None = None):
             pos[:, :cap].reshape(*lead, cap))
 
 
+def rle_zero_skip_decode(parts, interpret: bool | None = None):
+    """Kernel-backed equivalent of ``RleCodec.jax_decode``
+    (``kernels.fused_round.zero_skip_decode``): pads the compacted
+    ``(vals, pos)`` rows to a power of two (pos padding = -1, the drop
+    sentinel), scatters in VMEM, slices back to the window shape."""
+    from repro.kernels import fused_round
+
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    vals, pos = parts
+    lead, cap = vals.shape[:-1], vals.shape[-1]
+    n = _next_pow2(cap)
+    v = _pad_block(vals.reshape(-1, cap), n, 0)
+    p = _pad_block(pos.reshape(-1, cap), n, -1)
+    out = fused_round.zero_skip_decode(v, p, interpret=interpret)
+    return out[:, :cap].reshape(*lead, cap)
+
+
 def fused_attention(q, k, v, *, causal: bool = True,
                     window: int | None = None,
                     logit_cap: float | None = None, q_offset: int = 0,

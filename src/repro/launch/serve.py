@@ -3,11 +3,20 @@
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2_9b \
       --batch 4 --prompt-len 32 --gen 16
+
+``--restore-dir`` loads the weights from the latest checkpoint in a
+directory before serving, through the PLANNED collective read
+(``checkpoint.restore_checkpoint``: ``compile_plan(direction="read")``,
+node-level window cache, ranged segment reads) — the serving-side
+consumer of the read path, with the restore's modeled time and cache
+hit ratio printed next to the generation stats.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +26,31 @@ from repro import configs
 from repro.models import transformer as T
 from repro.models.config import reduced
 from repro.models.sharding import unsharded
+
+
+def restore_params(restore_dir: str, like_params, *,
+                   node_cache: bool = True, n_ranks: int = 8,
+                   n_nodes: int = 2):
+    """Replace ``like_params`` with the latest checkpoint under
+    ``restore_dir`` via the planned collective read. The reader
+    topology is the serving host layout (``n_ranks`` readers on
+    ``n_nodes`` nodes); the striping comes from the manifest. Returns
+    ``(params, step, timings)``."""
+    from repro.checkpoint.checkpoint import restore_checkpoint
+    from repro.checkpoint.host_io import HostCollectiveIO
+
+    d = Path(restore_dir)
+    steps = sorted(int(p.name[5:13])
+                   for p in d.glob("ckpt_*.manifest.json"))
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints in {restore_dir}")
+    path = d / f"ckpt_{steps[-1]:08d}"
+    man = json.loads((d / (path.name + ".manifest.json")).read_text())
+    io = HostCollectiveIO(n_ranks=n_ranks, n_nodes=n_nodes,
+                          stripe_size=man["stripe_size"],
+                          stripe_count=man["stripe_count"])
+    return restore_checkpoint(path, like_params, io=io,
+                              node_cache=node_cache, with_timings=True)
 
 
 def generate(params, cfg, prompts, gen_len: int, plan):
@@ -61,10 +95,24 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--restore-dir", default=None,
+                    help="restore weights from the latest checkpoint in "
+                         "this directory through the planned collective "
+                         "read before serving")
+    ap.add_argument("--no-node-cache", action="store_true",
+                    help="disable the node-level read cache on restore "
+                         "(per-rank fetch baseline)")
     args = ap.parse_args()
 
     cfg = reduced(configs.get(args.arch))
     params = T.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    if args.restore_dir:
+        params, step, rt = restore_params(
+            args.restore_dir, params,
+            node_cache=not args.no_node_cache)
+        print(f"restored step {step}: modeled {rt.total * 1e3:.3f}ms, "
+              f"cache hit ratio {rt.cache_hit_ratio:.2f}, "
+              f"{rt.read_bytes} bytes read")
     plan = unsharded()
     prompts = jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab)

@@ -44,6 +44,18 @@ codec {None, rle} x depth {1, 2} — and every single run must
 reproduce the ``write_reference`` oracle bytes exactly, so the two
 backends are compared on inputs nobody hand-picked.
 
+Read direction (PR 8): the planner no longer nulls ``kernel_fusion``
+for reads, so every (codec x depth) reader also runs FUSED
+(``zero_skip_decode`` replacing the rle decode scatter inside the read
+ring) against its unfused twin — byte-identical, and identical to the
+requested payloads. On the host side, every fuzz pattern's files are
+read BACK through the planned collective read
+(``HostCollectiveIO.read``: ``compile_plan(direction="read")``, the
+node-level window cache) across placement x codec x depth x cache
+on/off — per-rank payloads must equal the write oracle's byte spans,
+the cache must never model slower than the per-rank fetch baseline,
+and both modes must account the same delivery count.
+
 Kernel fusion: every SPMD fuzz configuration runs a second time with
 ``IOConfig.kernel_fusion="fused_round"`` (the planner's
 ``lower_kernels`` pass selects the single-``pallas_call`` sort +
@@ -290,6 +302,23 @@ def main():
     }
     reader_placed = jax.jit(make_twophase_read(mesh, layout, replace(
         base, cb_buffer_size=32, placement=SWAP)))
+    # fused READ rows (PR 8): since lower_kernels stopped nulling the
+    # fusion for reads, kernel_fusion="fused_round" swaps the rle
+    # decode scatter for kernels/fused_round.zero_skip_decode inside
+    # the read ring — every (codec x depth) pair runs fused and
+    # unfused under the swapped placement and must agree byte-for-byte
+    # with each other and with the requested payloads
+    read_pairs = {}
+    for codec in (None, "rle"):
+        for k in (1, 2):
+            for fused in (False, True):
+                cfgr = replace(base, cb_buffer_size=32, pipeline=k > 1,
+                               pipeline_depth=k, slow_hop_codec=codec,
+                               placement=SWAP,
+                               kernel_fusion=("fused_round" if fused
+                                              else None))
+                read_pairs[(codec, k, fused)] = jax.jit(
+                    make_twophase_read(mesh, layout, cfgr))
     # cross-executor fuzz writers: placement x codec x depth (two-phase
     # full cross, TAM corners to bound compile time)
     fuzz_fns = {}
@@ -411,6 +440,21 @@ def main():
                                     D[p][:L[p].sum()])
                      for p in range(P_RANKS))
             check(f"{pname}/twophase/read_placement_swap_rounds5", ok)
+            for codec in (None, "rle"):
+                for k in (1, 2):
+                    outs = {}
+                    for fused in (False, True):
+                        rd = read_pairs[(codec, k, fused)]
+                        outs[fused] = np.asarray(
+                            rd(O, L, C, jnp.asarray(ref).reshape(2, -1)))
+                    tag = (f"{pname}/twophase/read_"
+                           f"{codec or 'raw'}_k{k}")
+                    check(f"{tag}_fused_vs_unfused",
+                          np.array_equal(outs[True], outs[False]))
+                    ok = all(np.array_equal(outs[True][p][:L[p].sum()],
+                                            D[p][:L[p].sum()])
+                             for p in range(P_RANKS))
+                    check(f"{tag}_fused_vs_payload", ok)
 
     # ---- cross-executor fuzz: seeded random patterns through BOTH
     # backends, every run against the oracle (so SPMD == host too) ----
@@ -475,6 +519,40 @@ def main():
         check(f"fuzz{seed}/host/config_fused_vs_spmd",
               np.array_equal(hio.read_file(path, FILE_LEN * 4),
                              ref_bytes))
+        # planned collective reads back through the same striping
+        # (PR 8): read x placement x codec x depth x cache on/off,
+        # every row's per-rank payloads byte-identical to the write
+        # oracle's spans; the node cache must never model slower than
+        # the per-rank baseline it replaces, and the two modes must
+        # account for the SAME delivery count (hits+misses on == the
+        # per-rank misses off)
+        rreqs = [(o, ln) for o, ln, _ in breqs]
+        exp = [(np.concatenate([ref_bytes[o:o + l]
+                                for o, l in zip(oo, ll)])
+                if oo.size else np.zeros(0, np.uint8))
+               for oo, ll in rreqs]
+        for ptag, pl in (("off", None), ("spread", "spread")):
+            for codec in (None, "rle"):
+                for k in (1, 2):
+                    src = f"{hd}/{ptag}_{codec or 'raw'}_{k}"
+                    tr = {}
+                    for nc in (True, False):
+                        outs, tr[nc] = hio.read(
+                            rreqs, src, cb_bytes=128, pipeline_depth=k,
+                            slow_hop_codec=codec, placement=pl,
+                            node_cache=nc)
+                        ok = all(np.array_equal(a, b)
+                                 for a, b in zip(outs, exp))
+                        check(f"fuzz{seed}/host_read/{ptag}_"
+                              f"{codec or 'raw'}_k{k}_cache{int(nc)}"
+                              f"_vs_oracle", ok)
+                    check(f"fuzz{seed}/host_read/{ptag}_"
+                          f"{codec or 'raw'}_k{k}_cache_not_slower",
+                          tr[True].total <= tr[False].total + 1e-12)
+                    check(f"fuzz{seed}/host_read/{ptag}_"
+                          f"{codec or 'raw'}_k{k}_delivery_conserved",
+                          tr[True].cache_hits + tr[True].cache_misses
+                          == tr[False].cache_misses)
 
     # overflow observability: one rank pushes 2x identical 32-element
     # requests into one 32-element window -> 64 elems > the round

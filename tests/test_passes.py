@@ -123,9 +123,10 @@ def test_lower_kernels_rules():
     fused = IOConfig(req_cap=8, data_cap=64, cb_buffer_size=32,
                      kernel_fusion="fused_round")
     assert compile_plan(layout, fused, **kw).kernel_fusion == "fused_round"
-    # reads have no sort/pack drain: fusion lowers to None
+    # reads keep the lowering: it swaps the rle decode scatter for the
+    # zero_skip_decode kernel in the per-round fetch (PR 8)
     assert compile_plan(layout, fused, direction="read",
-                        **kw).kernel_fusion is None
+                        **kw).kernel_fusion == "fused_round"
     # the default stays unfused
     plain = IOConfig(req_cap=8, data_cap=64, cb_buffer_size=32)
     assert compile_plan(layout, plain, **kw).kernel_fusion is None

@@ -1,0 +1,323 @@
+"""The planned read path (PR 8): restore through the full planner.
+
+Contracts under test:
+
+* **Byte identity** — a restore routed through ``compile_plan``
+  (``direction="read"``) + ``host_exec.execute_read`` returns exactly
+  the bytes the legacy single-reader broadcast reassembly returns, for
+  every placement x codec x depth x node-cache setting (the
+  ISSUE acceptance cross).
+* **Node-level read cache** — per (window, node) the slow hop is paid
+  ONCE whatever the co-located reader count (the flat-replica-curve
+  property), cache-on never models slower than cache-off, and the two
+  modes account the same delivery count.
+* **Partial restore** — ``subset=`` reads only the selected leaves'
+  byte ranges (``IOTimings.read_bytes`` < 50% of the file for a
+  half-tree subset) and passes the other leaves through from
+  ``like_tree`` untouched.
+* **Read sessions** — repeated restores of one manifest go
+  compiled -> trial -> hit, the measured steady state is never worse
+  than the first restore, and the manifest fingerprint keys entries
+  (a different checkpoint never reuses a stale plan).
+* **Torn segments** — a ``.partial`` marker on a needed segment
+  refuses the restore (TornWriteError), ranged or planned.
+"""
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import (CheckpointManager,
+                                         manifest_fingerprint,
+                                         restore_checkpoint,
+                                         save_checkpoint)
+from repro.checkpoint.host_io import HostCollectiveIO
+from repro.core.faults import partial_marker
+from repro.core.session import IOSession
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    dense = rng.integers(0, 256, (40, 64), np.uint8).view(np.float32)
+    return {"w": np.asarray(dense, np.float32),
+            "b": rng.standard_normal(33).astype(np.float32),
+            "opt": {"m": np.zeros((40, 16), np.float32),
+                    "v": rng.standard_normal((40, 16)).astype(np.float32)}}
+
+
+def _like(tree):
+    return jax.tree.map(lambda a: np.zeros_like(a), tree)
+
+
+def _io(session=None, n_ranks=8, n_nodes=2):
+    return HostCollectiveIO(n_ranks=n_ranks, n_nodes=n_nodes,
+                            stripe_size=1024, stripe_count=4,
+                            session=session)
+
+
+def _save(tmp_path, tree, io):
+    man, _ = save_checkpoint(tree, tmp_path / "ck", io=io,
+                             method="twophase")
+    return man
+
+
+def _assert_tree_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------
+# byte identity: planned == broadcast across the knob cross
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("placement", [None, "spread", "auto"])
+@pytest.mark.parametrize("codec", [None, "rle"])
+@pytest.mark.parametrize("depth", [None, 1, 2])
+@pytest.mark.parametrize("node_cache", [True, False])
+def test_planned_restore_byte_identical_to_broadcast(
+        tmp_path, placement, codec, depth, node_cache):
+    tree = _tree()
+    io = _io()
+    _save(tmp_path, tree, io)
+    like = _like(tree)
+    oracle, step0 = restore_checkpoint(tmp_path / "ck", like,
+                                       planned=False)
+    got, step = restore_checkpoint(
+        tmp_path / "ck", like, io=io, cb_bytes=1024,
+        pipeline_depth=depth, slow_hop_codec=codec, placement=placement,
+        node_cache=node_cache)
+    assert step == step0
+    _assert_tree_equal(oracle, got)
+    _assert_tree_equal(tree, got)
+
+
+def test_planned_restore_defaults_and_timings(tmp_path):
+    tree = _tree()
+    io = _io()
+    man = _save(tmp_path, tree, io)
+    got, _, t = restore_checkpoint(tmp_path / "ck", _like(tree), io=io,
+                                   with_timings=True)
+    _assert_tree_equal(tree, got)
+    assert t.direction == "read" and t.node_cache is True
+    # every leaf byte hit disk exactly once (no window re-reads)
+    payload = sum(e["nbytes"] for e in man["leaves"])
+    assert t.read_bytes == payload
+    # 8 ranks on 2 nodes share windows: the cache must have served
+    # some co-located readers
+    assert t.cache_hits > 0
+    assert 0.0 < t.cache_hit_ratio < 1.0
+    assert t.total > 0.0
+
+
+def test_legacy_path_returns_none_timings(tmp_path):
+    tree = _tree()
+    _save(tmp_path, tree, _io())
+    got, _, t = restore_checkpoint(tmp_path / "ck", _like(tree),
+                                   planned=False, with_timings=True)
+    _assert_tree_equal(tree, got)
+    assert t is None
+
+
+# ---------------------------------------------------------------------
+# the node cache: slow hop paid once per (window, node)
+# ---------------------------------------------------------------------
+def test_slow_hop_bytes_flat_in_colocated_reader_count(tmp_path):
+    """The acceptance property: per-node slow-hop bytes are charged
+    once per window regardless of how many co-located ranks read it —
+    doubling the ranks per node must not move the cache-on slow bytes,
+    while cache-off doubles with them."""
+    tree = _tree()
+    _save(tmp_path, tree, _io())
+    man = json.loads((tmp_path / "ck.manifest.json").read_text())
+    offs = np.asarray([e["offset"] for e in man["leaves"]], np.int64)
+    lens = np.asarray([e["nbytes"] for e in man["leaves"]], np.int64)
+    slow_on, slow_off = {}, {}
+    for n_ranks in (4, 8, 16):
+        io = _io(n_ranks=n_ranks)         # 2 nodes, q = n_ranks / 2
+        # replicated read: EVERY rank reads the whole tree (the
+        # same-node replica scenario of BENCH_restore)
+        reqs = [(offs, lens)] * n_ranks
+        for nc in (True, False):
+            outs, t = io.read(reqs, str(tmp_path / "ck"), cb_bytes=1024,
+                              node_cache=nc)
+            (slow_on if nc else slow_off)[n_ranks] = t.slow_hop_slow_bytes
+            for o in outs[1:]:
+                np.testing.assert_array_equal(o, outs[0])
+    assert slow_on[4] == slow_on[8] == slow_on[16]
+    assert slow_off[8] == 2 * slow_off[4]
+    assert slow_off[16] == 4 * slow_off[4]
+    assert slow_on[16] < slow_off[16]
+
+
+def test_cache_delivery_conservation_and_ratio(tmp_path):
+    tree = _tree()
+    io = _io()
+    _save(tmp_path, tree, io)
+    man = json.loads((tmp_path / "ck.manifest.json").read_text())
+    offs = np.asarray([e["offset"] for e in man["leaves"]], np.int64)
+    lens = np.asarray([e["nbytes"] for e in man["leaves"]], np.int64)
+    reqs = [(offs, lens)] * io.n_ranks
+    _, t_on = io.read(reqs, str(tmp_path / "ck"), cb_bytes=1024,
+                      node_cache=True)
+    _, t_off = io.read(reqs, str(tmp_path / "ck"), cb_bytes=1024,
+                       node_cache=False)
+    assert t_on.cache_hits + t_on.cache_misses == t_off.cache_misses
+    assert t_off.cache_hits == 0 and t_off.cache_hit_ratio == 0.0
+    # 2 nodes, 4 ranks each: 1 miss + 3 hits per (window, node)
+    assert t_on.cache_hit_ratio == pytest.approx(0.75)
+    assert t_on.total <= t_off.total
+
+
+# ---------------------------------------------------------------------
+# partial restore
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("planned", [True, False])
+def test_subset_restore_values_and_passthrough(tmp_path, planned):
+    tree = _tree()
+    io = _io()
+    man = _save(tmp_path, tree, io)
+    like = _like(tree)
+    sub = [e["path"] for e in man["leaves"] if "opt" not in e["path"]]
+    got, _ = restore_checkpoint(tmp_path / "ck", like,
+                                io=io if planned else None,
+                                subset=sub, planned=planned)
+    np.testing.assert_array_equal(got["w"], tree["w"])
+    np.testing.assert_array_equal(got["b"], tree["b"])
+    # unselected leaves pass through from like_tree untouched
+    assert (np.asarray(got["opt"]["m"]) == 0).all()
+    assert (np.asarray(got["opt"]["v"]) == 0).all()
+
+
+def test_subset_restore_reads_under_half_the_file(tmp_path):
+    tree = _tree()
+    io = _io()
+    man = _save(tmp_path, tree, io)
+    sub = [e["path"] for e in man["leaves"] if "opt" not in e["path"]]
+    sub_bytes = sum(e["nbytes"] for e in man["leaves"]
+                    if e["path"] in set(sub))
+    assert sub_bytes < 0.5 * man["file_len"]  # the subset IS small
+    _, _, t = restore_checkpoint(tmp_path / "ck", _like(tree), io=io,
+                                 subset=sub, with_timings=True)
+    assert t.read_bytes == sub_bytes
+    assert t.read_bytes < 0.5 * man["file_len"]
+
+
+def test_subset_predicate_and_unknown_leaf(tmp_path):
+    tree = _tree()
+    io = _io()
+    _save(tmp_path, tree, io)
+    got, _ = restore_checkpoint(tmp_path / "ck", _like(tree), io=io,
+                                subset=lambda p: "'b'" in p)
+    np.testing.assert_array_equal(got["b"], tree["b"])
+    assert (np.asarray(got["w"]) == 0).all()
+    with pytest.raises(KeyError, match="unknown leaves"):
+        restore_checkpoint(tmp_path / "ck", _like(tree), io=io,
+                           subset=["nope"])
+
+
+# ---------------------------------------------------------------------
+# read sessions
+# ---------------------------------------------------------------------
+def test_read_session_steady_state(tmp_path):
+    tree = _tree()
+    sess = IOSession()
+    io = _io(session=sess)
+    _save(tmp_path, tree, io)
+    like = _like(tree)
+    autos = dict(cb_bytes="auto", pipeline_depth="auto",
+                 placement="auto", slow_hop_codec="auto")
+    totals, sources = [], []
+    for _ in range(4):
+        got, _, t = restore_checkpoint(tmp_path / "ck", like, io=io,
+                                       with_timings=True, **autos)
+        _assert_tree_equal(tree, got)
+        totals.append(t.total)
+        sources.append(t.plan_source)
+    assert sources[0] == "compiled"
+    assert sources[-1] == "session-hit"
+    # the arbiter guarantee, read side: steady state never worse than
+    # the first restore's measured total
+    assert totals[-1] <= totals[0] + 1e-15
+    assert sess.hits >= 2
+
+
+def test_read_entries_keyed_by_fingerprint_and_cache_flag(tmp_path):
+    tree = _tree()
+    sess = IOSession()
+    io = _io(session=sess)
+    man1 = _save(tmp_path, tree, io)
+    like = _like(tree)
+    restore_checkpoint(tmp_path / "ck", like, io=io)
+    misses_one = sess.misses
+    # same manifest, same knobs -> same entry
+    restore_checkpoint(tmp_path / "ck", like, io=io)
+    assert sess.misses == misses_one
+    # the cache flag is key material: node_cache=False is a distinct
+    # timing regime, never the same entry
+    restore_checkpoint(tmp_path / "ck", like, io=io, node_cache=False)
+    assert sess.misses == misses_one + 1
+    # a different checkpoint content -> different fingerprint -> a
+    # fresh entry, not a stale-plan reuse
+    tree2 = _tree(seed=1)
+    d2 = tmp_path / "other"
+    d2.mkdir()
+    man2, _ = save_checkpoint(tree2, d2 / "ck", io=io,
+                              method="twophase", step=7)
+    assert manifest_fingerprint(man1) != manifest_fingerprint(man2)
+    got2, _ = restore_checkpoint(d2 / "ck", _like(tree2), io=io)
+    _assert_tree_equal(tree2, got2)
+
+
+def test_manager_restore_subset_and_session(tmp_path):
+    tree = _tree()
+    sess = IOSession()
+    io = _io(session=sess)
+    mgr = CheckpointManager(directory=tmp_path / "mgr", io=io,
+                            method="twophase", session=sess)
+    for s in range(2):
+        mgr.save(tree, s)
+    got, step, t = mgr.restore(_like(tree), with_timings=True)
+    assert step == 1
+    _assert_tree_equal(tree, got)
+    assert t.direction == "read"
+    got, step, t = mgr.restore(_like(tree), with_timings=True)
+    assert t.plan_source in ("session-hit", "session-trial")
+    sub, _ = mgr.restore(_like(tree),
+                         subset=lambda p: "'w'" in p)
+    np.testing.assert_array_equal(sub["w"], tree["w"])
+    assert (np.asarray(sub["b"]) == 0).all()
+
+
+# ---------------------------------------------------------------------
+# torn segments + ranged read_file
+# ---------------------------------------------------------------------
+def test_restore_refuses_torn_segment(tmp_path):
+    from repro.core.faults import TornWriteError
+    tree = _tree()
+    io = _io()
+    _save(tmp_path, tree, io)
+    marker = Path(partial_marker(str(tmp_path / "ck.seg1")))
+    marker.write_text("windows_written=0\n")
+    with pytest.raises(TornWriteError):
+        restore_checkpoint(tmp_path / "ck", _like(tree), io=io)
+    with pytest.raises(TornWriteError):
+        restore_checkpoint(tmp_path / "ck", _like(tree), planned=False)
+
+
+def test_ranged_read_file_matches_full(tmp_path):
+    tree = _tree()
+    io = _io()
+    man = _save(tmp_path, tree, io)
+    full = io.read_file(str(tmp_path / "ck"), man["file_len"])
+    rng = np.random.default_rng(3)
+    for _ in range(16):
+        off = int(rng.integers(0, man["file_len"]))
+        n = int(rng.integers(1, man["file_len"] - off + 1))
+        got = io.read_file(str(tmp_path / "ck"), man["file_len"],
+                           offset=off, nbytes=n)
+        np.testing.assert_array_equal(got, full[off:off + n])
+    # clamped past EOF
+    got = io.read_file(str(tmp_path / "ck"), man["file_len"],
+                       offset=man["file_len"] - 10, nbytes=100)
+    np.testing.assert_array_equal(got, full[-10:])
