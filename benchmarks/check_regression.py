@@ -75,6 +75,18 @@ restores never worse than cold, half-tree subset restores reading
 (``benchmarks/baselines/BENCH_restore_baseline.json``) pins workload
 coverage only.
 
+With ``--async`` (the ``BENCH_async.json`` artifact from the
+``async_ckpt`` suite) the gate also enforces the async checkpoint
+contract — checkpoint-every-N step-time overhead vs no-checkpoint
+under ``ASYNC_OVERHEAD_X`` (5%), the final async checkpoint
+byte-identical to the synchronous one, and a positive hidden fraction
+(some of the drain genuinely ran behind compute) — see
+:func:`check_async`; its baseline
+(``benchmarks/baselines/BENCH_async_baseline.json``) pins variant
+coverage only (the artifact's times are REAL wall clock, the one suite
+where they have to be — threads cannot be modeled — so every bound is
+a within-artifact ratio).
+
 Usage: python benchmarks/check_regression.py CURRENT BASELINE
            [--threshold 0.2] [--kernels BENCH_kernels.json]
            [--kernels-baseline benchmarks/baselines/BENCH_kernels_baseline.json]
@@ -82,6 +94,8 @@ Usage: python benchmarks/check_regression.py CURRENT BASELINE
            [--degraded-baseline benchmarks/baselines/BENCH_degraded_baseline.json]
            [--restore BENCH_restore.json]
            [--restore-baseline benchmarks/baselines/BENCH_restore_baseline.json]
+           [--async BENCH_async.json]
+           [--async-baseline benchmarks/baselines/BENCH_async_baseline.json]
 """
 from __future__ import annotations
 
@@ -385,6 +399,55 @@ def check_restore(restore: dict, baseline: dict | None) -> list[str]:
     return errors
 
 
+ASYNC_OVERHEAD_X = 0.05   # checkpoint-every-N step-time overhead bound
+
+
+def check_async(blob: dict, baseline: dict | None) -> list[str]:
+    """Gate on the ``async_ckpt`` suite's artifact (``BENCH_async.json``,
+    benchmarks/async_ckpt.py). Times are real wall clock (the suite
+    measures thread overlap), so every bound is a within-artifact
+    ratio — the suite runs its variants in paired rounds and keeps the
+    round with the cleanest paired ratio to absorb runner jitter; the
+    baseline pins variant coverage only:
+
+    * async checkpoint-every-N overhead vs the no-checkpoint floor
+      stays under ``ASYNC_OVERHEAD_X`` — the loop pays the snapshot,
+      not the collective write;
+    * the final async checkpoint is byte-identical to the synchronous
+      variant's (snapshot isolation costs no correctness);
+    * the max hidden fraction across the async saves is > 0 — part of
+      the drain demonstrably ran before the caller blocked on it.
+    """
+    errors = []
+    variants = blob.get("variants", {})
+    for v in (baseline or {}).get("variants", ("none", "sync", "async")):
+        if v not in variants:
+            errors.append(
+                f"async/{v}: variant in the baseline but missing from "
+                "the artifact — coverage shrank")
+    if not all(v in variants for v in ("none", "sync", "async")):
+        return errors or ["async: artifact missing variants"]
+    overhead = variants["async"].get("overhead_frac", 1.0)
+    if overhead >= ASYNC_OVERHEAD_X:
+        errors.append(
+            f"async: checkpoint-every-N step-time overhead "
+            f"{overhead:.1%} >= the {ASYNC_OVERHEAD_X:.0%} bound "
+            "(the loop is paying for the collective write again)")
+    if not blob.get("byte_identical"):
+        errors.append(
+            "async: final async checkpoint is NOT byte-identical to "
+            "the synchronous write")
+    hidden = variants["async"].get("hidden_fraction_max", 0.0)
+    if not hidden > 0.0:
+        errors.append(
+            f"async: max hidden fraction {hidden} — none of the drain "
+            "overlapped the compute steps")
+    if not blob.get("saves"):
+        errors.append("async: no per-save drain accounting in the "
+                      "artifact")
+    return errors
+
+
 KERNEL_JITTER = 0.25      # per-workload headroom; the SUM is strict
 
 
@@ -441,6 +504,10 @@ def main() -> int:
                     help="BENCH_restore.json from the restore suite")
     ap.add_argument("--restore-baseline", default=None,
                     help="coverage baseline for --restore")
+    ap.add_argument("--async", dest="async_bench", default=None,
+                    help="BENCH_async.json from the async_ckpt suite")
+    ap.add_argument("--async-baseline", dest="async_baseline",
+                    default=None, help="coverage baseline for --async")
     args = ap.parse_args()
     with open(args.current) as f:
         current = json.load(f)
@@ -478,6 +545,16 @@ def main() -> int:
         errors += check_restore(restore, rbase)
         rmatched = sum(len(e.get("replicas", {}))
                        for e in restore.get("workloads", {}).values())
+    amatched = 0
+    if args.async_bench:
+        with open(args.async_bench) as f:
+            async_blob = json.load(f)
+        abase = None
+        if args.async_baseline:
+            with open(args.async_baseline) as f:
+                abase = json.load(f)
+        errors += check_async(async_blob, abase)
+        amatched = len(async_blob.get("variants", {}))
     for e in errors:
         print(f"REGRESSION: {e}", file=sys.stderr)
     if not errors:
@@ -485,6 +562,7 @@ def main() -> int:
               + (f", {kmatched} fused-drain workloads" if kmatched else "")
               + (f", {dmatched} degraded scenarios" if dmatched else "")
               + (f", {rmatched} restore replica points" if rmatched else "")
+              + (f", {amatched} async variants" if amatched else "")
               + f", threshold {args.threshold:.0%})")
     return 1 if errors else 0
 

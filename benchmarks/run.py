@@ -9,8 +9,8 @@ from __future__ import annotations
 
 import argparse
 
-from benchmarks import (degraded, kernel_bench, paper_figures, pipeline,
-                        restore, rounds, spmd_bytes)
+from benchmarks import (async_ckpt, degraded, kernel_bench, paper_figures,
+                        pipeline, restore, rounds, spmd_bytes)
 
 SUITES = {
     "fig2": paper_figures.fig2_congestion,
@@ -25,6 +25,7 @@ SUITES = {
     "pipeline": pipeline.serial_vs_pipelined,
     "degraded": degraded.scenario_matrix,
     "restore": restore.replica_cache_sweep,
+    "async_ckpt": async_ckpt.overlap_bench,
 }
 
 

@@ -1,0 +1,85 @@
+"""Markdown link checker for the repo's doc set.
+
+Verifies every RELATIVE link target in the given markdown files
+exists, and that fragment links (``#section`` / ``file.md#section``)
+point at a real heading (GitHub slugification: lowercase, spaces to
+``-``, punctuation stripped). External links (http/https/mailto) are
+skipped — CI must not flake on the network.
+
+Usage:
+    python scripts/check_links.py README.md ARCHITECTURE.md ROADMAP.md
+    python scripts/check_links.py            # the default doc set
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DEFAULT = ("README.md", "ARCHITECTURE.md", "ROADMAP.md",
+           "docs/knobs.md", "PAPER.md")
+
+LINK = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#{1,6}\s+(.*?)\s*$", re.M)
+
+
+def slugify(heading: str) -> str:
+    """GitHub's anchor slug: strip markup, lowercase, spaces -> '-',
+    drop everything that isn't a word character or hyphen."""
+    h = re.sub(r"[`*_]|\[([^\]]*)\]\([^)]*\)", r"\1", heading)
+    h = h.strip().lower().replace(" ", "-")
+    return re.sub(r"[^\w\-]", "", h)
+
+
+def anchors_of(path: Path) -> set[str]:
+    slugs: set[str] = set()
+    counts: dict[str, int] = {}
+    for m in HEADING.finditer(path.read_text()):
+        s = slugify(m.group(1))
+        n = counts.get(s, 0)
+        counts[s] = n + 1
+        slugs.add(s if n == 0 else f"{s}-{n}")
+    return slugs
+
+
+def check_file(md: Path) -> list[str]:
+    errors = []
+    for m in LINK.finditer(md.read_text()):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        base, _, frag = target.partition("#")
+        dest = (md.parent / base).resolve() if base else md.resolve()
+        if not dest.exists():
+            errors.append(f"{md}: broken link -> {target} "
+                          f"({dest} does not exist)")
+            continue
+        if frag and dest.suffix == ".md":
+            if frag not in anchors_of(dest):
+                errors.append(f"{md}: broken anchor -> {target} "
+                              f"(no heading slugs to '#{frag}' "
+                              f"in {dest.name})")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files = [Path(a) for a in argv] if argv else \
+        [REPO / f for f in DEFAULT if (REPO / f).exists()]
+    errors = []
+    checked = 0
+    for md in files:
+        if not md.exists():
+            errors.append(f"{md}: file does not exist")
+            continue
+        checked += 1
+        errors.extend(check_file(md))
+    for e in errors:
+        print(f"LINK: {e}", file=sys.stderr)
+    if not errors:
+        print(f"link check OK ({checked} files)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

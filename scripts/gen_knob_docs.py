@@ -1,0 +1,190 @@
+"""Generate docs/knobs.md from the IOConfig dataclass.
+
+The knob reference is INTROSPECTED, never hand-written: field names,
+types and defaults come from ``dataclasses.fields(IOConfig)``, the
+per-knob prose from the class docstring, and the auto-resolution /
+consumer columns from a script-local table that is checked for STRICT
+key equality with the field set — adding, removing or renaming an
+IOConfig field without updating this script (and regenerating the doc)
+fails loudly instead of silently drifting.
+
+Usage:
+    PYTHONPATH=src python scripts/gen_knob_docs.py          # rewrite
+    PYTHONPATH=src python scripts/gen_knob_docs.py --check  # CI drift gate
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.core.plan import IOConfig  # noqa: E402
+
+OUT = REPO / "docs" / "knobs.md"
+
+# Which pass resolves "auto" and which layer consumes the knob — the
+# two columns introspection cannot see. Keys MUST equal the IOConfig
+# field set (enforced below).
+KNOB_META = {
+    "req_cap": {
+        "auto": "— (capacity; no auto form)",
+        "consumer": "both executors (per-rank request-list sizing)",
+    },
+    "data_cap": {
+        "auto": "— (capacity; no auto form)",
+        "consumer": "both executors (per-rank payload sizing)",
+    },
+    "coalesce_cap": {
+        "auto": "`None` → `lmem * req_cap` at plan build",
+        "consumer": "TAM stage 2 (inter-node metadata forward)",
+    },
+    "cb_buffer_size": {
+        "auto": "`cost_model.optimal_cb` / `optimal_cb_and_depth` at "
+                "compile; `rounds_override` refinement on session "
+                "feedback",
+        "consumer": "`RoundScheduler` (round partition), both executors",
+    },
+    "pipeline": {
+        "auto": "— (boolean; on/off only)",
+        "consumer": "round engine (`core.rounds`, host round loop)",
+    },
+    "pipeline_depth": {
+        "auto": "`cost_model.optimal_cb_and_depth` at compile; "
+                "`optimal_depth` over measured round times on session "
+                "feedback",
+        "consumer": "round engine (depth-k window ring)",
+    },
+    "axis_names": {
+        "auto": "— (topology naming; no auto form)",
+        "consumer": "SPMD executor (`shard_map` mesh axes)",
+    },
+    "slow_hop_codec": {
+        "auto": "`plan.resolve_slow_hop_codec` "
+                "(`cost_model.slow_hop_codec_gain`); measured wire "
+                "ratio on session feedback",
+        "consumer": "both executors (LA → GA slow-hop payload)",
+    },
+    "placement": {
+        "auto": "`placement.resolve_placement` "
+                "(`cost_model.placement_cost`); measured node-byte "
+                "matrix / slowdowns on session feedback",
+        "consumer": "plan slot→domain map, both executors",
+    },
+    "kernel_fusion": {
+        "auto": "— (explicit lowering choice)",
+        "consumer": "`passes.lower_kernels` → SPMD fused-round Pallas "
+                    "drain (host path ignores it)",
+    },
+}
+
+HEADER = """\
+# IOConfig knob reference
+
+<!-- GENERATED FILE — do not edit by hand.
+     Regenerate with: PYTHONPATH=src python scripts/gen_knob_docs.py
+     CI fails on drift via: scripts/gen_knob_docs.py --check -->
+
+One `IOConfig` (`repro.core.plan`) is the whole knob surface of the
+collective-I/O paths — `save_checkpoint` / `restore_checkpoint` /
+`HostCollectiveIO.write/read` / the SPMD executor all take `config=`.
+Bare per-knob kwargs without a config are a deprecated shim (one
+`DeprecationWarning`, identical plan). Byte units vs element units:
+the checkpoint layer speaks BYTES (`cb_bytes`, `cb_buffer_size` in an
+`IOConfig` handed to it), the plan layer speaks ELEMENTS; the
+checkpoint front-end converts.
+
+Every `"auto"` resolves at compile time against the modeled workload,
+and — when the write runs under an `IOSession` — re-resolves against
+MEASURED feedback on later writes of the same key (see
+`ARCHITECTURE.md`, "The session feedback loop").
+
+| Knob | Type | Default | `"auto"` resolution | Consumed by |
+|---|---|---|---|---|
+"""
+
+
+def _field_docs() -> dict[str, str]:
+    """Per-field prose parsed from the IOConfig class docstring
+    (``name:  text`` entries with indented continuations)."""
+    docs: dict[str, str] = {}
+    current = None
+    for line in (IOConfig.__doc__ or "").splitlines():
+        m = re.match(r"^\s{4}(\w+):\s+(.*\S)\s*$", line)
+        if m and not line.startswith("     "):
+            current = m.group(1)
+            docs[current] = m.group(2)
+        elif current and line.strip():
+            docs[current] += " " + line.strip()
+        elif not line.strip():
+            current = None
+    return docs
+
+
+def _fmt_type(tp) -> str:
+    return str(tp).replace("|", r"\|")
+
+
+def render() -> str:
+    names = [f.name for f in dataclasses.fields(IOConfig)]
+    if set(names) != set(KNOB_META):
+        missing = set(names) - set(KNOB_META)
+        extra = set(KNOB_META) - set(names)
+        raise SystemExit(
+            f"gen_knob_docs: KNOB_META out of sync with IOConfig — "
+            f"missing {sorted(missing)}, stale {sorted(extra)}; update "
+            "scripts/gen_knob_docs.py and regenerate docs/knobs.md")
+    docs = _field_docs()
+    undocumented = [n for n in names if n not in docs]
+    if undocumented:
+        raise SystemExit(
+            f"gen_knob_docs: IOConfig docstring has no entry for "
+            f"{undocumented} — document the field(s) in the class "
+            "docstring")
+    lines = [HEADER]
+    for f in dataclasses.fields(IOConfig):
+        default = ("— (required)"
+                   if f.default is dataclasses.MISSING else
+                   f"`{f.default!r}`")
+        lines.append(
+            f"| `{f.name}` | `{_fmt_type(f.type)}` | {default} | "
+            f"{KNOB_META[f.name]['auto']} | "
+            f"{KNOB_META[f.name]['consumer']} |\n")
+    lines.append("\n## Per-knob notes (from the class docstring)\n\n")
+    for f in dataclasses.fields(IOConfig):
+        lines.append(f"- **`{f.name}`** — {docs[f.name]}\n")
+    lines.append(
+        "\n---\n*Generated by `scripts/gen_knob_docs.py` from "
+        "`repro.core.plan.IOConfig`.*\n")
+    return "".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="fail (exit 1) if docs/knobs.md is stale "
+                         "instead of rewriting it")
+    args = ap.parse_args()
+    want = render()
+    if args.check:
+        have = OUT.read_text() if OUT.exists() else ""
+        if have != want:
+            print("docs/knobs.md is stale — regenerate with:\n"
+                  "  PYTHONPATH=src python scripts/gen_knob_docs.py",
+                  file=sys.stderr)
+            return 1
+        print(f"docs/knobs.md is up to date "
+              f"({len(dataclasses.fields(IOConfig))} knobs)")
+        return 0
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(want)
+    print(f"wrote {OUT} ({len(dataclasses.fields(IOConfig))} knobs)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -2,5 +2,6 @@ from repro.checkpoint.host_io import (  # noqa: F401
     HostCollectiveIO, IOTimings,
 )
 from repro.checkpoint.checkpoint import (  # noqa: F401
-    CheckpointManager, restore_checkpoint, save_checkpoint,
+    CheckpointManager, PendingCheckpoint, restore_checkpoint,
+    save_checkpoint, snapshot_tree,
 )

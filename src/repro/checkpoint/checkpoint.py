@@ -17,13 +17,30 @@ DIFFERENT mesh (elastic restart; see runtime.elastic). ``subset=``
 restores part of the tree from exactly its byte ranges; the legacy
 single-reader reassembly (``planned=False``) remains as the
 byte-identity oracle.
+
+Async saves (``save_checkpoint(..., async_=True)`` /
+:meth:`CheckpointManager.save_async`) decouple the application from
+the collective write: the tree is SNAPSHOT to host buffers
+synchronously (so a training step mutating the params afterwards can
+never change the written bytes), a :class:`PendingCheckpoint` future
+returns immediately, and a daemon thread drains the write through the
+same :class:`HostCollectiveIO` / ``IOSession`` path as a sync save.
+Crash consistency is commit-last: any stale manifest for the target
+path is unlinked BEFORE the segments are touched and the new manifest
+is written only after every segment landed, so a torn async write is
+never restorable — restart discovery (``CheckpointManager.latest_step``,
+``runtime.elastic.find_restart_step``) sees committed manifests only,
+and a mid-drain death leaves ``.partial`` markers (core.faults) on the
+torn segments exactly like a sync write's.
 """
 from __future__ import annotations
 
 import json
 import math
+import threading
+import time
 import zlib
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from pathlib import Path
 
 import jax
@@ -94,6 +111,125 @@ def _rank_requests(tree, manifest, n_ranks: int):
     return out
 
 
+def snapshot_tree(tree):
+    """Copy every leaf of ``tree`` into fresh host (numpy) buffers —
+    the snapshot an async save isolates itself with. The copy is what
+    guarantees snapshot isolation: a training step mutating (or
+    donating) the live buffers after ``save_checkpoint(async_=True)``
+    returns can never change the bytes the background drain writes
+    (asserted by tests/test_async_ckpt.py)."""
+    return jax.tree_util.tree_map(
+        lambda leaf: np.array(np.asarray(leaf), copy=True), tree)
+
+
+class PendingCheckpoint:
+    """Future for an in-flight async checkpoint write.
+
+    Returned immediately by ``save_checkpoint(..., async_=True)`` /
+    :meth:`CheckpointManager.save_async` after the tree snapshot; the
+    collective write drains on a daemon thread. At most one checkpoint
+    is in flight per :class:`CheckpointManager` (``save_async`` blocks
+    on the previous future first — a bounded queue of depth one, so a
+    slow filesystem backpressures the training loop instead of
+    accumulating unbounded host copies).
+
+    * :meth:`wait` / :meth:`result` block until the drain finishes and
+      return ``(manifest, timings)``; a failed drain re-raises the
+      background exception (every call — like ``concurrent.futures``).
+    * :meth:`block_until_done` is :meth:`wait` for callers that only
+      need the barrier (returns ``None``).
+    * :meth:`done` polls without blocking.
+
+    The returned ``timings`` carry the async accounting on top of the
+    modeled write fields: ``snapshot_seconds`` (real wall time of the
+    host copy — the only part the caller's step blocked on),
+    ``drain_wall_seconds`` (real wall time of the background write) and
+    ``overlap_hidden_seconds`` / ``hidden_fraction`` (the part of the
+    drain that ran before the caller first blocked on this future —
+    what checkpoint-every-N overlap actually hid behind compute).
+    """
+
+    def __init__(self, path: Path, step: int, snapshot_seconds: float):
+        self.path = Path(path)
+        self.step = step
+        self.snapshot_seconds = snapshot_seconds
+        self._started = time.perf_counter()
+        self._finished = None          # perf_counter at drain completion
+        self._event = threading.Event()
+        self._result = None            # (manifest, timings) on success
+        self._exc = None
+        self.exception_observed = False  # a wait() already re-raised it
+
+    # -- worker side ---------------------------------------------------
+    def _finish(self, manifest: dict, timings: IOTimings) -> None:
+        self._finished = time.perf_counter()
+        timings.snapshot_seconds = self.snapshot_seconds
+        timings.drain_wall_seconds = self._finished - self._started
+        self._result = (manifest, timings)
+        self._event.set()
+
+    def _fail(self, exc: BaseException) -> None:
+        self._finished = time.perf_counter()
+        self._exc = exc
+        self._event.set()
+
+    # -- caller side ---------------------------------------------------
+    def done(self) -> bool:
+        """True once the background drain finished (committed OR
+        failed) — never blocks."""
+        return self._event.is_set()
+
+    def wait(self, timeout: float | None = None):
+        """Block until the drain finishes; return ``(manifest,
+        timings)``. Raises the background exception if the write
+        failed (the checkpoint was NOT committed — no manifest exists)
+        and :class:`TimeoutError` if ``timeout`` expires first.
+
+        The FIRST wait fixes the overlap accounting: everything the
+        drain did before this call ran concurrently with the caller
+        (``timings.overlap_hidden_seconds``)."""
+        blocked_at = time.perf_counter()
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"checkpoint {self.path} still draining after {timeout}s")
+        if self._exc is not None:
+            self.exception_observed = True
+            raise self._exc
+        manifest, timings = self._result
+        if timings.overlap_hidden_seconds == 0.0:
+            hidden = min(self._finished, blocked_at) - self._started
+            timings.overlap_hidden_seconds = max(
+                min(hidden, timings.drain_wall_seconds), 0.0)
+        return manifest, timings
+
+    def result(self, timeout: float | None = None):
+        """Alias of :meth:`wait` (``concurrent.futures`` spelling)."""
+        return self.wait(timeout)
+
+    def block_until_done(self, timeout: float | None = None) -> None:
+        """:meth:`wait`, discarding the result — the bare barrier."""
+        self.wait(timeout)
+
+
+def _commit_write(tree, path: Path, io: HostCollectiveIO, step: int,
+                  write_kwargs: dict) -> tuple[dict, IOTimings]:
+    """The commit-last write body shared by the sync and async paths:
+    un-commit first (a stale manifest for this path is unlinked before
+    any segment byte moves, so a torn write is never restorable under
+    the OLD layout), drain the segments, then write the manifest as
+    the atomic commit point."""
+    manifest = build_manifest(tree, step)
+    mpath = path.parent / (path.name + ".manifest.json")
+    if mpath.exists():
+        mpath.unlink()
+    reqs = _rank_requests(tree, manifest, io.n_ranks)
+    timings = io.write(reqs, str(path), **write_kwargs)
+    manifest["stripe_size"] = io.stripe_size
+    manifest["stripe_count"] = io.stripe_count
+    mpath.write_text(json.dumps(manifest))
+    return manifest, timings
+
+
 def save_checkpoint(tree, path: str | Path, *, step: int = 0,
                     io: HostCollectiveIO | None = None,
                     method: str = "tam",
@@ -106,37 +242,94 @@ def save_checkpoint(tree, path: str | Path, *, step: int = 0,
                     session=None,
                     config: IOConfig | None = None,
                     kernel_fusion: str | None = _UNSET,
-                    faults=None, heartbeat=None
-                    ) -> tuple[dict, IOTimings]:
+                    faults=None, heartbeat=None,
+                    async_: bool = False, on_commit=None):
     """Serialize ``tree`` to ``<path>.seg*`` through the collective
-    writer. Knobs: pass ONE ``config=IOConfig(...)`` (the unified
-    surface — ``cb_buffer_size`` is byte units here; explicit per-knob
-    kwargs are sparse overrides); the bare per-knob kwargs remain as a
-    deprecated shim (one ``DeprecationWarning``, identical plan —
-    asserted by tests/test_plan.py). ``faults`` / ``heartbeat`` pass
-    straight to :meth:`HostCollectiveIO.write` — fault injection and
-    failure detection for the degraded-mode scenarios (core.faults);
-    recovered saves stay byte-identical to healthy ones."""
+    writer, manifest committed LAST.
+
+    Args:
+        tree: the pytree to serialize (leaves: array-likes).
+        path: checkpoint stem; segments land at ``<path>.seg<g>`` and
+            the manifest at ``<path>.manifest.json``.
+        step: recorded in the manifest (returned by restore).
+        io: the :class:`HostCollectiveIO` writer topology (a default
+            8-rank / 2-node writer is built when omitted).
+        method: ``"tam"`` | ``"twophase"`` | ``"auto"``.
+        local_aggregators: TAM stage-1 P_L (default ``4 * n_nodes``).
+        config: ONE :class:`IOConfig` — the unified knob surface
+            (``cb_buffer_size`` is byte units here). Explicit per-knob
+            kwargs on top of a config are sparse overrides; the bare
+            per-knob kwargs (``cb_bytes`` / ``pipeline`` /
+            ``pipeline_depth`` / ``slow_hop_codec`` / ``placement`` /
+            ``kernel_fusion``) WITHOUT a config are a deprecated shim
+            (one ``DeprecationWarning``, identical plan — asserted by
+            tests/test_plan.py).
+        session: an :class:`~repro.core.session.IOSession` — repeated
+            saves reuse the compiled plan and feed measured timings
+            back into every ``"auto"`` knob. Async drains feed the
+            same session (it is thread-safe; the manager serializes
+            writes so a background drain never races a foreground
+            trial).
+        faults / heartbeat: fault injection + failure detection,
+            passed straight to :meth:`HostCollectiveIO.write`
+            (core.faults); recovered saves stay byte-identical to
+            healthy ones.
+        async_: snapshot the tree to host buffers NOW (snapshot
+            isolation — later mutation of the live tree cannot change
+            the written bytes), return a :class:`PendingCheckpoint`
+            immediately, and drain the collective write on a daemon
+            thread. Commit stays last: a drain that dies leaves NO
+            manifest (plus ``.partial`` markers on torn segments), so
+            restart lands on the previous committed step.
+        on_commit: optional zero-arg callable run right after the
+            manifest commit (the manager's rolling GC hook); on the
+            async path it runs on the drain thread.
+
+    Returns:
+        ``(manifest, timings)`` — or a :class:`PendingCheckpoint` when
+        ``async_=True`` (its :meth:`~PendingCheckpoint.result` yields
+        the same pair).
+
+    Raises:
+        Whatever the collective write raises (e.g.
+        :class:`~repro.core.faults.UnrecoverableFaultError` under
+        injected faults) — from this call when sync, from the future's
+        ``wait()``/``result()`` when async.
+    """
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     io = io or HostCollectiveIO(n_ranks=8, n_nodes=2, stripe_size=1 << 20,
                                 stripe_count=4)
-    manifest = build_manifest(tree, step)
-    reqs = _rank_requests(tree, manifest, io.n_ranks)
-    timings = io.write(reqs, str(path), method=method,
-                       local_aggregators=local_aggregators,
-                       config=config, cb_bytes=cb_bytes,
-                       pipeline=pipeline,
-                       pipeline_depth=pipeline_depth,
-                       slow_hop_codec=slow_hop_codec,
-                       placement=placement,
-                       kernel_fusion=kernel_fusion, session=session,
-                       faults=faults, heartbeat=heartbeat)
-    manifest["stripe_size"] = io.stripe_size
-    manifest["stripe_count"] = io.stripe_count
-    (path.parent / (path.name + ".manifest.json")).write_text(
-        json.dumps(manifest))
-    return manifest, timings
+    write_kwargs = dict(
+        method=method, local_aggregators=local_aggregators,
+        config=config, cb_bytes=cb_bytes, pipeline=pipeline,
+        pipeline_depth=pipeline_depth, slow_hop_codec=slow_hop_codec,
+        placement=placement, kernel_fusion=kernel_fusion,
+        session=session, faults=faults, heartbeat=heartbeat)
+    if not async_:
+        manifest, timings = _commit_write(tree, path, io, step,
+                                          write_kwargs)
+        if on_commit is not None:
+            on_commit()
+        return manifest, timings
+    t0 = time.perf_counter()
+    snap = snapshot_tree(tree)
+    pending = PendingCheckpoint(path, step,
+                                snapshot_seconds=time.perf_counter() - t0)
+
+    def _drain():
+        try:
+            manifest, timings = _commit_write(snap, path, io, step,
+                                              write_kwargs)
+            if on_commit is not None:
+                on_commit()
+            pending._finish(manifest, timings)
+        except BaseException as exc:  # surfaced via wait()/result()
+            pending._fail(exc)
+
+    threading.Thread(target=_drain, daemon=True,
+                     name=f"ckpt-drain-{step}").start()
+    return pending
 
 
 def manifest_fingerprint(manifest: dict) -> int:
@@ -268,7 +461,21 @@ def restore_checkpoint(path: str | Path, like_tree, shardings=None, *,
 
 @dataclass
 class CheckpointManager:
-    """Rolling checkpoints + restart discovery."""
+    """Rolling checkpoints + restart discovery.
+
+    Holds the cross-save state a production checkpoint loop needs: the
+    writer topology (``io``), the unified knob surface (``config``),
+    the persistent ``session`` (plan reuse + measured feedback), the
+    ``heartbeat`` failure detector, and the rolling-GC window
+    (``keep``). :meth:`save` blocks the caller on the collective
+    write; :meth:`save_async` snapshots and returns a
+    :class:`PendingCheckpoint` immediately, with at most ONE write in
+    flight (the next ``save_async``/``save`` first drains the previous
+    future — backpressure, and it also means the shared session never
+    sees two concurrent writes, so background feedback cannot race a
+    foreground trial). :meth:`latest_step` sees committed manifests
+    only, so a killed async drain is invisible to restart discovery.
+    """
 
     directory: str | Path
     io: HostCollectiveIO
@@ -297,23 +504,68 @@ class CheckpointManager:
     # when a fault spec injects a dead aggregator — the manager holds
     # it so detection latches across saves (kill-and-resume scenarios)
     keep: int = 3
+    #: the in-flight async save (at most one; see :meth:`save_async`)
+    pending: PendingCheckpoint | None = field(default=None, repr=False)
 
-    def save(self, tree, step: int, faults=None) -> IOTimings:
-        """One rolling save; ``faults`` (core.faults.FaultSpec) injects
-        this save's degraded scenario through the write path."""
-        d = Path(self.directory)
-        d.mkdir(parents=True, exist_ok=True)
-        _, t = save_checkpoint(
-            tree, d / f"ckpt_{step:08d}", step=step, io=self.io,
-            method=self.method, local_aggregators=self.local_aggregators,
+    def _save_kwargs(self, faults) -> dict:
+        return dict(
+            io=self.io, method=self.method,
+            local_aggregators=self.local_aggregators,
             config=self.config, cb_bytes=self.cb_bytes,
             pipeline=self.pipeline, pipeline_depth=self.pipeline_depth,
             slow_hop_codec=self.slow_hop_codec,
             placement=self.placement, kernel_fusion=self.kernel_fusion,
             session=self.session, faults=faults,
             heartbeat=self.heartbeat)
+
+    def save(self, tree, step: int, faults=None) -> IOTimings:
+        """One rolling save, blocking until committed; ``faults``
+        (core.faults.FaultSpec) injects this save's degraded scenario
+        through the write path. Any in-flight async save drains first
+        (write ordering: steps commit in save order)."""
+        self.block_until_done()
+        d = Path(self.directory)
+        d.mkdir(parents=True, exist_ok=True)
+        _, t = save_checkpoint(
+            tree, d / f"ckpt_{step:08d}", step=step,
+            **self._save_kwargs(faults))
         self._gc()
         return t
+
+    def save_async(self, tree, step: int, faults=None
+                   ) -> PendingCheckpoint:
+        """Start an async rolling save and return its
+        :class:`PendingCheckpoint` without blocking on the collective
+        write (only on the tree snapshot). At most one checkpoint is
+        in flight: if a previous async save is still draining, this
+        call blocks until it commits — a bounded queue of depth one —
+        and re-raises its failure if it died unobserved (a silently
+        lost checkpoint would defeat the crash-consistency story).
+        Rolling GC runs on the drain thread after the manifest
+        commits."""
+        self.block_until_done()
+        d = Path(self.directory)
+        d.mkdir(parents=True, exist_ok=True)
+        self.pending = save_checkpoint(
+            tree, d / f"ckpt_{step:08d}", step=step, async_=True,
+            on_commit=self._gc, **self._save_kwargs(faults))
+        return self.pending
+
+    def block_until_done(self) -> None:
+        """Barrier on the in-flight async save (no-op when none). A
+        drain that failed re-raises here UNLESS the caller already
+        observed the exception through the future itself — the error
+        surfaces exactly once, and the manager stays usable for the
+        next save either way."""
+        p, self.pending = self.pending, None
+        if p is None:
+            return
+        observed_before = p.exception_observed
+        try:
+            p.wait()
+        except BaseException:
+            if not observed_before:
+                raise
 
     def latest_step(self) -> int | None:
         d = Path(self.directory)

@@ -166,6 +166,24 @@ class IOTimings:
     # (window, rank) without — the q-fold duplication the cache deletes
     read_bytes: int = 0            # bytes read from disk, once per
     # needed window (the subset-restore economy measure)
+    snapshot_seconds: float = 0.0  # REAL wall time an async save spent
+    # copying the tree to host buffers (checkpoint.snapshot_tree) —
+    # the only part of an async checkpoint the caller's step blocks on
+    drain_wall_seconds: float = 0.0  # REAL wall time of the async
+    # background drain (snapshot -> manifest commit); 0 on sync writes
+    overlap_hidden_seconds: float = 0.0  # the part of the async drain
+    # that ran before the caller first blocked on the future — real
+    # write time hidden behind the application's compute
+    # (checkpoint.PendingCheckpoint fixes it at the first wait())
+
+    @property
+    def hidden_fraction(self) -> float:
+        """Fraction of the async drain's wall time hidden behind the
+        caller's compute (0.0 = sync write, or the caller blocked
+        immediately; 1.0 = the drain finished before anyone waited)."""
+        if self.drain_wall_seconds <= 0.0:
+            return 0.0
+        return self.overlap_hidden_seconds / self.drain_wall_seconds
 
     @property
     def cache_hit_ratio(self) -> float:

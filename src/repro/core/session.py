@@ -52,6 +52,8 @@ executes a plan that measured worse than its first restore's.
 """
 from __future__ import annotations
 
+import functools
+import threading
 from dataclasses import dataclass, field
 
 from repro.core import cost_model as cm
@@ -75,6 +77,17 @@ def _arb_key(plan: IOPlan, serve_map) -> tuple:
     the compiled plan is unchanged — core.faults.evacuation_map)."""
     return _knobs_of(plan) + (tuple(serve_map) if serve_map is not None
                               else None,)
+
+
+def _locked(fn):
+    """Serialize a session method on the instance's re-entrant lock —
+    the async checkpoint drain thread and the foreground caller share
+    one session (see the class docstring's thread-safety note)."""
+    @functools.wraps(fn)
+    def wrapper(self, *args, **kwargs):
+        with self._lock:
+            return fn(self, *args, **kwargs)
+    return wrapper
 
 
 @dataclass
@@ -109,12 +122,23 @@ class IOSession:
     """Cross-write plan cache + measured-feedback tuner (see module
     docstring). One session serves any number of distinct workloads —
     each (layout, config) key gets its own entry — so a single session
-    can back a whole checkpoint manager."""
+    can back a whole checkpoint manager.
+
+    Thread safety: every protocol step (begin/register/observe/abort/
+    compile) takes the session's re-entrant lock, so an ASYNC
+    checkpoint drain (checkpoint.PendingCheckpoint's daemon thread)
+    can feed measured timings back through :meth:`observe` without
+    corrupting an entry a foreground caller is reading. Trial
+    ORDERING is the caller's contract: ``CheckpointManager`` keeps at
+    most one write in flight, so a background drain's feedback never
+    interleaves with a foreground trial of the same key mid-protocol.
+    """
 
     def __init__(self, machine=None):
         self.machine = machine or cm.Machine()
         self._entries: dict = {}
         self._compiled: dict = {}     # compile() front-end cache
+        self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
         self.replans = 0
@@ -122,6 +146,7 @@ class IOSession:
     # ------------------------------------------------------------------
     # generic plan-compile cache (the SPMD-side entry point)
     # ------------------------------------------------------------------
+    @_locked
     def compile(self, layout, cfg, **kwargs) -> IOPlan:
         """Caching front-end to :func:`repro.core.plan.compile_plan`:
         identical (layout, cfg, kwargs) return the SAME plan object
@@ -146,6 +171,7 @@ class IOSession:
     # ------------------------------------------------------------------
     # the write-path protocol (HostCollectiveIO.write drives this)
     # ------------------------------------------------------------------
+    @_locked
     def begin_write(self, key, machine=None) -> tuple[str, object]:
         """Start a write under ``key``. Returns one of:
 
@@ -198,6 +224,7 @@ class IOSession:
     # the read-path spelling of that reuse.
     begin_read = begin_write
 
+    @_locked
     def register(self, key, plan: IOPlan, *, requested: dict,
                  workload=None, cb_candidates=(), P_L=None,
                  n_nodes: int = 1, n_aggregators: int = 1) -> None:
@@ -211,6 +238,7 @@ class IOSession:
             n_nodes=n_nodes, n_aggregators=n_aggregators)
         self._entries[key].plans[_arb_key(plan, None)] = plan
 
+    @_locked
     def register_trial(self, key, plan: IOPlan, serve_map=None) -> None:
         entry = self._entries[key]
         ak = _arb_key(plan, serve_map)
@@ -218,6 +246,7 @@ class IOSession:
         if serve_map is not None:
             entry.serve_maps[ak] = tuple(serve_map)
 
+    @_locked
     def abort(self, key, plan: IOPlan | None = None) -> None:
         """A write under ``key`` raised before :meth:`observe` ran.
         Revert the trial bookkeeping so the entry is not poisoned: every
@@ -240,6 +269,7 @@ class IOSession:
             entry.serve_maps.pop(ak, None)
         entry.refined = False
 
+    @_locked
     def observe(self, key, plan: IOPlan, timings, serve_map=None) -> None:
         """Feed one write's measurements back: the executed total
         decides the incumbent (strictly-better wins, ties keep), and
@@ -292,6 +322,7 @@ class IOSession:
             if changed:
                 entry.refined = False   # re-arm: the machine moved
 
+    @_locked
     def entry(self, key) -> _Entry | None:
         return self._entries.get(key)
 

@@ -6,13 +6,24 @@ size the surviving hosts support; the global batch is preserved by
 raising per-replica accumulation. Restoring onto the shrunken mesh is
 just ``restore_checkpoint(..., shardings=new)`` — the checkpoint byte
 space is mesh-agnostic by construction (checkpoint.py).
+
+Restart discovery (:func:`find_restart_step`) is the other half of a
+kill-and-resume: it trusts only COMMITTED checkpoints. The async save
+path writes the manifest last (checkpoint._commit_write), so a process
+killed mid-drain leaves segment files with no manifest — invisible
+here — and a drain torn mid-segment leaves ``.partial`` markers
+(core.faults.partial_marker) that disqualify the step.
 """
 from __future__ import annotations
 
+import json
 import warnings
 from dataclasses import dataclass
+from pathlib import Path
 
 import jax
+
+from repro.core.faults import partial_marker
 
 
 @dataclass(frozen=True)
@@ -60,3 +71,38 @@ def plan_remesh(total_devices: int, model_parallel: int,
                            ("pod", "data", "model"), accum, unused)
     return ElasticPlan((data, model_parallel), ("data", "model"), accum,
                        unused)
+
+
+def find_restart_step(directory: str | Path) -> int | None:
+    """The newest step a restart may restore: the highest committed
+    manifest whose segments are intact. Skips (never raises on):
+
+    * orphan ``.seg*`` files with no manifest — an async drain killed
+      before its commit point (commit-last: manifest written only
+      after every segment landed);
+    * a step with a ``.partial`` marker on any segment — a drain torn
+      mid-segment (core.faults);
+    * a non-empty checkpoint with no segment files at all — a manifest
+      that outlived its segments (e.g. manual deletion).
+
+    Returns ``None`` when no restorable checkpoint exists. This is the
+    restart-side counterpart of ``CheckpointManager.latest_step`` with
+    the integrity checks a post-crash directory needs.
+    """
+    d = Path(directory)
+    for mpath in sorted(d.glob("ckpt_*.manifest.json"), reverse=True):
+        stem = mpath.name.replace(".manifest.json", "")
+        segs = [p for p in d.glob(stem + ".seg*")
+                if not p.name.endswith(".partial")]
+        if any(Path(partial_marker(str(p))).exists() for p in segs):
+            continue
+        if any(p.name.endswith(".partial") for p in d.glob(stem + ".seg*")):
+            continue
+        try:
+            manifest = json.loads(mpath.read_text())
+        except (ValueError, OSError):
+            continue
+        if manifest.get("file_len", 0) > 0 and not segs:
+            continue
+        return int(manifest["step"])
+    return None

@@ -24,6 +24,12 @@ class TrainLoopConfig:
     total_steps: int
     checkpoint_every: int = 50
     log_every: int = 10
+    # Overlap the collective write with subsequent train steps: the
+    # checkpoint boundary snapshots + returns immediately and the drain
+    # runs behind compute (CheckpointManager.save_async). The manager's
+    # one-in-flight backpressure means a too-slow drain degrades to the
+    # sync cadence rather than queueing unboundedly.
+    async_checkpoint: bool = False
 
 
 class TrainLoop:
@@ -45,7 +51,17 @@ class TrainLoop:
         Raises ``RuntimeError("host failure")`` when the monitor reports
         dead hosts — the caller (see examples/checkpoint_restart.py)
         restores from the last checkpoint and calls ``run`` again,
-        possibly with re-sharded state on a smaller mesh.
+        possibly with re-sharded state on a smaller mesh. A host
+        failure deliberately does NOT drain an in-flight async write:
+        the restart discovers the latest COMMITTED manifest
+        (elastic.find_restart_step), and an abandoned half-drained
+        write is invisible to it by the commit-last layout.
+
+        With ``cfg.async_checkpoint`` the checkpoint boundary calls
+        :meth:`CheckpointManager.save_async` — the write drains behind
+        the following steps — and normal completion blocks on the last
+        pending write so a finished ``run`` never leaves a checkpoint
+        in flight.
         """
         step = start_step
         while step < self.cfg.total_steps:
@@ -61,7 +77,13 @@ class TrainLoop:
             if step % self.cfg.log_every == 0:
                 self.losses.append(float(loss))
             if step % self.cfg.checkpoint_every == 0:
-                self.ckpt.save({"params": params, "opt": opt_state}, step)
+                state = {"params": params, "opt": opt_state}
+                if self.cfg.async_checkpoint:
+                    self.ckpt.save_async(state, step)
+                else:
+                    self.ckpt.save(state, step)
             if on_step is not None:
                 on_step(step, float(loss))
+        if self.cfg.async_checkpoint:
+            self.ckpt.block_until_done()
         return params, opt_state, step
