@@ -448,6 +448,83 @@ def check_async(blob: dict, baseline: dict | None) -> list[str]:
     return errors
 
 
+TRANSPORT_CONCORDANCE = 0.6   # modeled-vs-measured ordering agreement
+
+
+def check_transport(blob: dict, baseline: dict | None) -> list[str]:
+    """Gate on the ``transport`` suite's artifact
+    (``BENCH_transport.json``, benchmarks/transport.py). Wire bytes
+    are counted at the receiving socket and wall times are real, so
+    every bound is within-artifact; the baseline pins point coverage
+    only:
+
+    * every point byte-identical to the in-process host oracle;
+    * aggregated (TAM, one LA per node) slow-hop wire bytes STRICTLY
+      below flat two-phase at >= 4 ranks per node, and never above it
+      at 2 — the paper's intra-node-aggregation claim on a real wire;
+    * the cost model's ranking of points agrees with the measured
+      wall-clock ranking on >= ``TRANSPORT_CONCORDANCE`` of the pairs
+      whose modeled totals differ by more than 10% — the planner's
+      auto-resolution still steers the real backend.
+    """
+    errors = []
+    points = blob.get("points", [])
+    have = {(p["rpn"], p["variant"]) for p in points}
+    for bp in (baseline or {}).get("points", []):
+        if (bp["rpn"], bp["variant"]) not in have:
+            errors.append(
+                f"transport/rpn{bp['rpn']}/{bp['variant']}: point in "
+                "the baseline but missing from the artifact — coverage "
+                "shrank")
+    if not points:
+        return errors or ["transport: artifact has no points"]
+    for p in points:
+        if not p.get("byte_identical"):
+            errors.append(
+                f"transport/rpn{p['rpn']}/{p['variant']}: mp executor "
+                "output is NOT byte-identical to the host oracle")
+    by_rpn = {}
+    for p in points:
+        by_rpn.setdefault(p["rpn"], {})[p["variant"]] = p
+    for rpn, d in sorted(by_rpn.items()):
+        if not {"flat", "aggregated"} <= set(d):
+            errors.append(f"transport/rpn{rpn}: missing a variant — "
+                          "cannot compare aggregated vs flat")
+            continue
+        agg = d["aggregated"]["wire_slow_bytes"]
+        flat = d["flat"]["wire_slow_bytes"]
+        if rpn >= 4 and not agg < flat:
+            errors.append(
+                f"transport/rpn{rpn}: aggregated slow-hop wire "
+                f"{agg}B is not strictly below flat two-phase "
+                f"{flat}B — intra-node aggregation stopped paying on "
+                "the real wire")
+        elif agg > flat:
+            errors.append(
+                f"transport/rpn{rpn}: aggregated slow-hop wire {agg}B "
+                f"exceeds flat two-phase {flat}B")
+    agree = eligible = 0
+    for i, a in enumerate(points):
+        for b in points[i + 1:]:
+            hi = max(a["modeled_s"], b["modeled_s"])
+            if hi <= 0 or abs(a["modeled_s"] - b["modeled_s"]) <= 0.1 * hi:
+                continue
+            eligible += 1
+            if ((a["modeled_s"] - b["modeled_s"])
+                    * (a["wall_s"] - b["wall_s"]) > 0):
+                agree += 1
+    if eligible == 0:
+        errors.append("transport: no point pair has modeled totals "
+                      "differing by >10% — concordance is unmeasurable")
+    elif agree / eligible < TRANSPORT_CONCORDANCE:
+        errors.append(
+            f"transport: modeled-vs-measured ordering agreement "
+            f"{agree}/{eligible} below the "
+            f"{TRANSPORT_CONCORDANCE:.0%} concordance bound — the "
+            "cost model no longer predicts the real backend")
+    return errors
+
+
 KERNEL_JITTER = 0.25      # per-workload headroom; the SUM is strict
 
 
@@ -508,6 +585,10 @@ def main() -> int:
                     help="BENCH_async.json from the async_ckpt suite")
     ap.add_argument("--async-baseline", dest="async_baseline",
                     default=None, help="coverage baseline for --async")
+    ap.add_argument("--transport", default=None,
+                    help="BENCH_transport.json from the transport suite")
+    ap.add_argument("--transport-baseline", default=None,
+                    help="coverage baseline for --transport")
     args = ap.parse_args()
     with open(args.current) as f:
         current = json.load(f)
@@ -555,6 +636,16 @@ def main() -> int:
                 abase = json.load(f)
         errors += check_async(async_blob, abase)
         amatched = len(async_blob.get("variants", {}))
+    tmatched = 0
+    if args.transport:
+        with open(args.transport) as f:
+            transport_blob = json.load(f)
+        tbase = None
+        if args.transport_baseline:
+            with open(args.transport_baseline) as f:
+                tbase = json.load(f)
+        errors += check_transport(transport_blob, tbase)
+        tmatched = len(transport_blob.get("points", []))
     for e in errors:
         print(f"REGRESSION: {e}", file=sys.stderr)
     if not errors:
@@ -563,6 +654,7 @@ def main() -> int:
               + (f", {dmatched} degraded scenarios" if dmatched else "")
               + (f", {rmatched} restore replica points" if rmatched else "")
               + (f", {amatched} async variants" if amatched else "")
+              + (f", {tmatched} transport points" if tmatched else "")
               + f", threshold {args.threshold:.0%})")
     return 1 if errors else 0
 

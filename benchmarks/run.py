@@ -10,7 +10,7 @@ from __future__ import annotations
 import argparse
 
 from benchmarks import (async_ckpt, degraded, kernel_bench, paper_figures,
-                        pipeline, restore, rounds, spmd_bytes)
+                        pipeline, restore, rounds, spmd_bytes, transport)
 
 SUITES = {
     "fig2": paper_figures.fig2_congestion,
@@ -26,6 +26,7 @@ SUITES = {
     "degraded": degraded.scenario_matrix,
     "restore": restore.replica_cache_sweep,
     "async_ckpt": async_ckpt.overlap_bench,
+    "transport": transport.wire_sweep,
 }
 
 

@@ -1,0 +1,140 @@
+"""Transport benchmark: real wire bytes, aggregated vs flat.
+
+The paper's claim, measured on real processes instead of the
+alpha-beta model: intra-node request aggregation (TAM with one local
+aggregator per node) puts strictly fewer bytes on the inter-node wire
+than flat two-phase, and the gap widens with ranks per node. Both
+variants run on the mp transport backend (``checkpoint/mp_exec.py``)
+— forked workers, shared-memory fast hop, localhost-socket slow hop —
+so ``slow_hop_slow_bytes`` is counted at the RECEIVING socket, not
+modeled.
+
+The workload is the checkpoint-shard shape: every rank owns an
+interleaved stride of fixed-size chunks, so each cb window holds data
+from all co-located ranks — exactly what stage-1 aggregation combines
+(coalesced pair metadata + one combined frame per node instead of one
+frame per sender). Sweeps ranks-per-node in {2, 4, 8} on 2 nodes.
+
+Each point also compiles and runs the SAME config on the in-process
+host executor, giving (a) the byte-identity oracle and (b) the
+MODELED total the cost model predicts; the gate checks that the
+model's ranking of points agrees with the measured wall-clock ranking
+(concordance), so the planner's auto-resolution keeps steering the
+real backend correctly.
+
+Emits ``BENCH_transport.json`` for ``check_regression.py
+--transport``, which enforces:
+
+* every point byte-identical to the host oracle;
+* aggregated slow-hop wire bytes STRICTLY below flat two-phase at
+  >= 4 ranks per node (and never above it at 2);
+* modeled-vs-measured ordering concordance >= 0.6 over point pairs
+  whose modeled totals differ by more than 10%.
+
+Wall times are real (min over ``REPEATS``), so the committed baseline
+(``benchmarks/baselines/BENCH_transport_baseline.json``) pins point
+coverage only; every timing bound is a within-artifact comparison.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from pathlib import Path
+
+import numpy as np
+
+from repro.checkpoint.host_io import HostCollectiveIO
+from repro.core.plan import IOConfig
+
+NODES = 2
+RPNS = (2, 4, 8)
+REPEATS = 3
+CHUNK = 64                 # bytes per request chunk
+CHUNKS_PER_RANK = 64       # 4 KiB per rank -> 64 KiB file at rpn=8
+CB = 2048                  # window bytes: 32 chunks, all ranks present
+VARIANTS = ("flat", "aggregated")
+
+
+def _reqs(n_ranks: int):
+    """Interleaved per-rank chunks: rank r owns chunks r, r+P, ..."""
+    out = []
+    for r in range(n_ranks):
+        offs = (np.arange(CHUNKS_PER_RANK, dtype=np.int64) * n_ranks
+                + r) * CHUNK
+        lens = np.full(CHUNKS_PER_RANK, CHUNK, np.int64)
+        pay = ((offs[:, None] + np.arange(CHUNK)) % 251) \
+            .astype(np.uint8).ravel()
+        out.append((offs, lens, pay))
+    return out
+
+
+def _cfg(transport=None):
+    return IOConfig(req_cap=0, data_cap=0, cb_buffer_size=CB,
+                    transport=transport)
+
+
+def _write_kw(variant: str):
+    if variant == "aggregated":
+        return dict(method="tam", local_aggregators=NODES)
+    return dict(method="twophase")
+
+
+def _segs(path: str) -> list[bytes]:
+    return [p.read_bytes() for p in sorted(Path(path).parent.glob(
+        Path(path).name + ".seg*"))]
+
+
+def _point(rpn: int, variant: str, d: str) -> dict:
+    io = HostCollectiveIO(n_ranks=NODES * rpn, n_nodes=NODES,
+                          stripe_size=4096, stripe_count=2)
+    rr = _reqs(io.n_ranks)
+    kw = _write_kw(variant)
+    th = io.write(rr, f"{d}/host", config=_cfg(), **kw)
+    walls, tm = [], None
+    for rep in range(REPEATS):
+        t = io.write(rr, f"{d}/mp{rep}", config=_cfg("mp"), **kw)
+        walls.append(t.total)          # measured wall-clock rounds
+        if tm is None or t.total == min(walls):
+            tm = t
+    return {
+        "rpn": rpn, "variant": variant, "ranks": io.n_ranks,
+        "wall_s": min(walls), "walls_s": sorted(walls),
+        "modeled_s": th.total,
+        "wire_slow_bytes": tm.slow_hop_slow_bytes,
+        "wire_fast_bytes": tm.slow_hop_fast_bytes,
+        "messages_at_ga": tm.messages_at_ga,
+        "byte_identical": all(
+            _segs(f"{d}/host") == _segs(f"{d}/mp{rep}")
+            for rep in range(REPEATS)) and len(_segs(f"{d}/host")) > 0,
+    }
+
+
+def wire_sweep():
+    """benchmarks.run suite: rpn x {flat, aggregated} on the mp
+    backend, plus the host oracle per point."""
+    blob = {"config": {"nodes": NODES, "rpns": list(RPNS),
+                       "repeats": REPEATS, "chunk": CHUNK,
+                       "chunks_per_rank": CHUNKS_PER_RANK,
+                       "cb_bytes": CB},
+            "points": []}
+    d = tempfile.mkdtemp(prefix="bench_transport_")
+    try:
+        for rpn in RPNS:
+            for variant in VARIANTS:
+                blob["points"].append(_point(rpn, variant, d))
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    out = os.environ.get("BENCH_TRANSPORT_OUT", "BENCH_transport.json")
+    with open(out, "w") as f:
+        json.dump(blob, f, indent=1, sort_keys=True)
+    rows = []
+    for p in blob["points"]:
+        rows.append((
+            f"transport_rpn{p['rpn']}_{p['variant']}",
+            p["wall_s"] * 1e6,
+            f"slow_wire={p['wire_slow_bytes']}"
+            f" msgs_at_ga={p['messages_at_ga']}"
+            f" bytes_ok={p['byte_identical']}"))
+    return rows

@@ -80,6 +80,13 @@ KNOB_META = {
         "consumer": "`passes.lower_kernels` → SPMD fused-round Pallas "
                     "drain (host path ignores it)",
     },
+    "transport": {
+        "auto": "— (explicit executor choice; validated by "
+                "`passes.resolve_transport`)",
+        "consumer": "`host_io` dispatch → `checkpoint/mp_exec` "
+                    "(real processes: shared-memory fast hop + socket "
+                    "slow hop; wall-clock timings)",
+    },
 }
 
 HEADER = """\

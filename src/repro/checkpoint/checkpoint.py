@@ -556,16 +556,32 @@ class CheckpointManager:
         drain that failed re-raises here UNLESS the caller already
         observed the exception through the future itself — the error
         surfaces exactly once, and the manager stays usable for the
-        next save either way."""
-        p, self.pending = self.pending, None
+        next save either way.
+
+        The slot clears exactly when the future is FINISHED (committed
+        or failed): clearing it eagerly before the wait meant an
+        interrupt mid-drain (timeout, KeyboardInterrupt) silently
+        orphaned a still-running write, and the next ``save_async``
+        would start a second concurrent drain against the shared
+        session — the one-in-flight invariant this method exists to
+        hold. A dead future never wedges the slot either: once
+        ``done()``, it is dropped even on the re-raise path."""
+        p = self.pending
         if p is None:
             return
         observed_before = p.exception_observed
         try:
             p.wait()
         except BaseException:
+            if not p.done():
+                raise      # interrupted mid-drain: keep the live future
+            if self.pending is p:
+                self.pending = None
             if not observed_before:
                 raise
+        else:
+            if self.pending is p:
+                self.pending = None
 
     def latest_step(self) -> int | None:
         d = Path(self.directory)

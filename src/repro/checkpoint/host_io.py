@@ -37,7 +37,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.checkpoint import host_exec
+from repro.checkpoint import host_exec, mp_exec
 from repro.checkpoint.host_exec import PAIR_BYTES  # noqa: F401 (compat)
 from repro.core import codec as codec_mod
 from repro.core.cost_model import (Machine, Workload, optimal_cb,
@@ -54,7 +54,8 @@ from repro.core.session import IOSession  # noqa: F401 (re-export)
 _UNSET: object = object()
 
 _KNOB_FIELDS = ("cb_bytes", "pipeline", "pipeline_depth",
-                "slow_hop_codec", "placement", "kernel_fusion")
+                "slow_hop_codec", "placement", "kernel_fusion",
+                "transport")
 
 
 def resolve_knobs(config: IOConfig | None, *, warn: bool = False,
@@ -83,12 +84,14 @@ def resolve_knobs(config: IOConfig | None, *, warn: bool = False,
         if legacy and warn:
             warnings.warn(
                 "per-knob kwargs (cb_bytes / pipeline / pipeline_depth /"
-                " slow_hop_codec / placement / kernel_fusion) are"
-                " deprecated; pass config=IOConfig(...) — legacy kwargs"
-                " on top of a config act as sparse overrides",
+                " slow_hop_codec / placement / kernel_fusion /"
+                " transport) are deprecated; pass config=IOConfig(...) —"
+                " legacy kwargs on top of a config act as sparse"
+                " overrides",
                 DeprecationWarning, stacklevel=stacklevel)
         out = dict(cb_bytes=None, pipeline=False, pipeline_depth=None,
-                   slow_hop_codec=None, placement=None, kernel_fusion=None)
+                   slow_hop_codec=None, placement=None,
+                   kernel_fusion=None, transport=None)
     else:
         out = dict(
             cb_bytes=config.cb_buffer_size,
@@ -97,7 +100,8 @@ def resolve_knobs(config: IOConfig | None, *, warn: bool = False,
                             else None),
             slow_hop_codec=config.slow_hop_codec,
             placement=config.placement,
-            kernel_fusion=config.kernel_fusion)
+            kernel_fusion=config.kernel_fusion,
+            transport=getattr(config, "transport", None))
     out.update(legacy)
     return out
 
@@ -156,6 +160,10 @@ class IOTimings:
     # dead aggregator (None = no repair happened)
     torn_writes_detected: int = 0  # partial-write markers detected and
     # repaired by rewrite (drain faults + dead-aggregator tears)
+    transport: str | None = None   # which byte-moving backend produced
+    # this measurement ("mp" = real processes + wall-clock rounds;
+    # None = in-process executor, modeled time) — sessions key on it so
+    # feedback never crosses executors
     direction: str = "write"       # which executor filled this
     node_cache: bool | None = None  # read path: node-level window cache
     # on/off (None = a write; the knob does not exist there)
@@ -344,6 +352,7 @@ class HostCollectiveIO:
                  placement=_UNSET, workload: Workload | None = None,
                  config: IOConfig | None = None,
                  kernel_fusion: str | None = _UNSET,
+                 transport: str | None = _UNSET,
                  direction: str = "write") -> IOPlan:
         """Compile this writer's schedule — the host side of the
         plan-identity contract: given the same layout/config, this and
@@ -381,11 +390,13 @@ class HostCollectiveIO:
         k = resolve_knobs(config, cb_bytes=cb_bytes, pipeline=pipeline,
                           pipeline_depth=pipeline_depth,
                           slow_hop_codec=slow_hop_codec,
-                          placement=placement, kernel_fusion=kernel_fusion)
+                          placement=placement, kernel_fusion=kernel_fusion,
+                          transport=transport)
         cb_bytes, pipeline = k["cb_bytes"], k["pipeline"]
         pipeline_depth = k["pipeline_depth"]
         slow_hop_codec, placement = k["slow_hop_codec"], k["placement"]
         kernel_fusion = k["kernel_fusion"]
+        transport = k["transport"]
         if config is not None:
             caps = (config.req_cap, config.data_cap, config.coalesce_cap)
         else:
@@ -446,7 +457,7 @@ class HostCollectiveIO:
             placement=(tuple(placement)
                        if isinstance(placement, (list, tuple))
                        else placement),
-            kernel_fusion=kernel_fusion)
+            kernel_fusion=kernel_fusion, transport=transport)
         return compile_plan(
             FileLayout(stripe_size=self.stripe_size,
                        stripe_count=self.stripe_count, file_len=file_len),
@@ -466,6 +477,7 @@ class HostCollectiveIO:
               session: "IOSession | None" = None,
               config: IOConfig | None = None,
               kernel_fusion: str | None = _UNSET,
+              transport: str | None = _UNSET,
               faults=None, heartbeat=None) -> IOTimings:
         """rank_requests: list of (offsets[int64], lengths[int64],
         payload[uint8]) per rank, offsets element=byte units here.
@@ -544,18 +556,28 @@ class HostCollectiveIO:
         is visible end to end. A write that raises mid-trial reverts
         its session trial (``IOSession.abort``) instead of poisoning
         the entry.
+
+        transport: the byte-moving backend (``core.transport``).
+        ``None`` runs the in-process host executor (modeled time);
+        ``"mp"`` runs the same plan on real worker processes
+        (``checkpoint.mp_exec``) — byte-identical segments, but the
+        round timings a session observes are measured wall-clock. Part
+        of the plan/session key: switching transports never reuses the
+        other executor's measured totals.
         """
         knobs = resolve_knobs(config, warn=True, cb_bytes=cb_bytes,
                               pipeline=pipeline,
                               pipeline_depth=pipeline_depth,
                               slow_hop_codec=slow_hop_codec,
                               placement=placement,
-                              kernel_fusion=kernel_fusion)
+                              kernel_fusion=kernel_fusion,
+                              transport=transport)
         cb_bytes, pipeline = knobs["cb_bytes"], knobs["pipeline"]
         pipeline_depth = knobs["pipeline_depth"]
         slow_hop_codec = knobs["slow_hop_codec"]
         placement = knobs["placement"]
         kernel_fusion = knobs["kernel_fusion"]
+        transport = knobs["transport"]
         failed_aggregators = failed_aggregators or set()
         plan_t0 = time.perf_counter()
         session = session if session is not None else self.session
@@ -586,7 +608,8 @@ class HostCollectiveIO:
                     cb_bytes, pipeline, pipeline_depth, slow_hop_codec,
                     tuple(placement) if isinstance(placement,
                                                    (list, tuple))
-                    else placement, local_aggregators, kernel_fusion)
+                    else placement, local_aggregators, kernel_fusion,
+                    transport)
             kind, payload = session.begin_write(skey,
                                                 machine=self.machine)
             if kind == "hit":
@@ -601,7 +624,7 @@ class HostCollectiveIO:
                     local_aggregators=local_aggregators,
                     slow_hop_codec=payload["slow_hop_codec"],
                     placement=payload["placement"],
-                    kernel_fusion=kernel_fusion)
+                    kernel_fusion=kernel_fusion, transport=transport)
                 serve_map = payload.get("serve_map")
                 session.register_trial(skey, plan, serve_map)
                 source = "session-trial"
@@ -618,7 +641,8 @@ class HostCollectiveIO:
                 rank_requests=rank_requests,
                 local_aggregators=local_aggregators,
                 slow_hop_codec=slow_hop_codec, placement=placement,
-                kernel_fusion=kernel_fusion, workload=workload)
+                kernel_fusion=kernel_fusion, transport=transport,
+                workload=workload)
             if session is not None:
                 session.register(
                     skey, plan,
@@ -651,8 +675,10 @@ class HostCollectiveIO:
         # node-level faults and degraded serve maps need the sender->
         # node map even with placement off (the evacuation feedback
         # loop runs on the measured node matrix)
+        # the mp transport always needs it: arenas group senders by node
         want_nodes = (placement_on or faults is not None
-                      or serve_map is not None)
+                      or serve_map is not None
+                      or plan.transport is not None)
         sender_nodes = None
 
         # ---- stage 1: intra-node aggregation (plan.method) -----------
@@ -710,9 +736,11 @@ class HostCollectiveIO:
                                          nf * bytes_in / m.memcpy_bw)
         t.requests_after = sum(la[0].size for la in per_la)
 
-        # ---- inter-node exchange + I/O: the host executor ------------
+        # ---- inter-node exchange + I/O: the chosen executor ----------
+        exec_write = (mp_exec.execute_write if plan.transport == "mp"
+                      else host_exec.execute_write)
         try:
-            t = host_exec.execute_write(
+            t = exec_write(
                 plan, m, per_la, path, t,
                 depth_request="auto" if pipeline_depth == "auto" else None,
                 sender_nodes=sender_nodes, n_nodes=nodes,
@@ -807,6 +835,7 @@ class HostCollectiveIO:
              session: "IOSession | None" = None,
              config: IOConfig | None = None,
              kernel_fusion: str | None = _UNSET,
+             transport: str | None = _UNSET,
              node_cache: bool = True, fingerprint=None,
              faults=None) -> tuple[list[np.ndarray], IOTimings]:
         """Collective READ through the full planner — the write's
@@ -843,12 +872,14 @@ class HostCollectiveIO:
                               pipeline_depth=pipeline_depth,
                               slow_hop_codec=slow_hop_codec,
                               placement=placement,
-                              kernel_fusion=kernel_fusion)
+                              kernel_fusion=kernel_fusion,
+                              transport=transport)
         cb_bytes, pipeline = knobs["cb_bytes"], knobs["pipeline"]
         pipeline_depth = knobs["pipeline_depth"]
         slow_hop_codec = knobs["slow_hop_codec"]
         placement = knobs["placement"]
         kernel_fusion = knobs["kernel_fusion"]
+        transport = knobs["transport"]
         # reads carry no payload; the planner-facing triples get empty
         # ones (extent/workload measurement are offset/length-only)
         triples = [(np.asarray(o, np.int64), np.asarray(ln, np.int64),
@@ -866,7 +897,7 @@ class HostCollectiveIO:
                     cb_bytes, pipeline, pipeline_depth, slow_hop_codec,
                     tuple(placement) if isinstance(placement,
                                                    (list, tuple))
-                    else placement, kernel_fusion)
+                    else placement, kernel_fusion, transport)
             kind, payload = session.begin_read(skey,
                                                machine=self.machine)
             if kind == "hit":
@@ -880,7 +911,8 @@ class HostCollectiveIO:
                     rank_requests=triples,
                     slow_hop_codec=payload["slow_hop_codec"],
                     placement=payload["placement"],
-                    kernel_fusion=kernel_fusion, direction="read")
+                    kernel_fusion=kernel_fusion, transport=transport,
+                    direction="read")
                 serve_map = payload.get("serve_map")
                 session.register_trial(skey, plan, serve_map)
                 source = "session-trial"
@@ -894,7 +926,8 @@ class HostCollectiveIO:
                                 else pipeline_depth),
                 rank_requests=triples, slow_hop_codec=slow_hop_codec,
                 placement=placement, kernel_fusion=kernel_fusion,
-                workload=workload, direction="read")
+                transport=transport, workload=workload,
+                direction="read")
             if session is not None:
                 session.register(
                     skey, plan,
@@ -923,8 +956,10 @@ class HostCollectiveIO:
         t.requests_before = sum(np.asarray(o).size
                                 for o, _ in rank_requests)
         t.requests_after = sum(o.size for o, _ in split)
+        exec_read = (mp_exec.execute_read if plan.transport == "mp"
+                     else host_exec.execute_read)
         try:
-            outs = host_exec.execute_read(
+            outs = exec_read(
                 plan, self.machine, split, path, t,
                 n_nodes=self.n_nodes,
                 ranks_per_node=self.n_ranks // self.n_nodes,

@@ -22,6 +22,7 @@ discount feeds every later auto through the effective workload):
     coalesce_windows     materialize cb (None -> domain) + n_rounds
     validate             RoundScheduler invariants; no "auto" survives
     lower_kernels        pick the fused Pallas round kernel (or none)
+    resolve_transport    pick the byte-moving backend (mp or in-proc)
 
 Purity contract: a pass reads ``(plan, ctx)`` and returns a NEW plan —
 no hidden state, no mutation of ``ctx``. The workload adjustment the
@@ -260,6 +261,23 @@ def lower_kernels(plan, ctx):
     return replace(plan, kernel_fusion=fusion)
 
 
+@register_pass("resolve_transport")
+def resolve_transport(plan, ctx):
+    """Pick the byte-moving backend. ``transport="mp"`` routes the
+    executor dispatch in ``checkpoint.host_io`` to the multi-process
+    backend (``checkpoint.mp_exec`` — forked workers, shared-memory
+    intra-node fast hop, localhost-socket inter-node slow hop, measured
+    wall-clock rounds); ``None`` keeps the in-process executors with
+    modeled time. Validation lives in the one transport registry
+    (``core.transport.resolve_transport``) — an unregistered name dies
+    here, at plan time, not mid-write. Execution strategy, never
+    routing: the schedule, placement, and bytes are transport-
+    invariant (the rounds_checks cross-executor contract)."""
+    from repro.core.transport import resolve_transport as _resolve
+    return replace(
+        plan, transport=_resolve(getattr(ctx.cfg, "transport", None)))
+
+
 PASSES: tuple[Pass, ...] = tuple(_ORDER)
 
 
@@ -279,7 +297,8 @@ def initial_plan(layout: FileLayout, cfg, *, n_aggregators: int,
         coalesce_cap=cfg.coalesce_cap, axis_names=cfg.axis_names,
         tam_read_fallback=False, slow_hop_codec=cfg.slow_hop_codec,
         placement=cfg.placement,
-        kernel_fusion=getattr(cfg, "kernel_fusion", None))
+        kernel_fusion=getattr(cfg, "kernel_fusion", None),
+        transport=getattr(cfg, "transport", None))
 
 
 def run_passes(plan, ctx: PlanContext, passes: tuple = None,

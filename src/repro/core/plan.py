@@ -94,6 +94,16 @@ class IOConfig:
                     of three separate kernel launches / HBM round
                     trips; ``None`` = the unfused jnp path. Byte
                     -identical by contract (rounds_checks fuzz).
+    transport:      which executor ships the exchange's bytes
+                    (``core.transport`` registry, validated by
+                    ``passes.resolve_transport``): ``"mp"`` = the real
+                    multi-process backend (``checkpoint.mp_exec``) —
+                    forked worker processes, shared-memory arenas for
+                    the intra-node fast hop, localhost sockets for the
+                    inter-node slow hop, wall-clock round timings;
+                    ``None`` = the in-process executors with modeled
+                    time. Byte-identical by contract (rounds_checks
+                    fuzz vs the host oracle).
     """
 
     req_cap: int
@@ -106,6 +116,7 @@ class IOConfig:
     slow_hop_codec: str | None = None
     placement: str | tuple[int, ...] | None = None
     kernel_fusion: str | None = None
+    transport: str | None = None
 
 
 @dataclass(frozen=True)
@@ -199,6 +210,14 @@ class IOPlan:
         the ``zero_skip_decode`` kernel replacing the rle decode
         scatter on the read fetch; ``None`` = the unfused jnp path.
         Only the SPMD backend consumes it (the host executor is numpy).
+    transport: resolved byte-moving backend (the ``resolve_transport``
+        pass; never an unregistered name here): ``"mp"`` dispatches
+        ``checkpoint.host_io`` writes/reads to the multi-process
+        executor (``checkpoint.mp_exec`` — real processes, shm fast
+        hop, socket slow hop, measured wall-clock rounds); ``None`` =
+        the in-process executors. Part of the session plan-cache key,
+        and ``IOTimings.transport`` records which backend produced a
+        measurement so feedback never crosses executors.
     """
 
     layout: FileLayout
@@ -216,6 +235,7 @@ class IOPlan:
     slow_hop_codec: str | None = None
     placement: tuple[int, ...] | None = None
     kernel_fusion: str | None = None
+    transport: str | None = None
 
     @property
     def domain_len(self) -> int:

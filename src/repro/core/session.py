@@ -90,6 +90,11 @@ def _locked(fn):
     return wrapper
 
 
+#: "no measurement ingested yet" sentinel for _Entry.executor — None is
+#: a real identity (the in-process executors), so it cannot serve
+_UNOBSERVED: object = object()
+
+
 @dataclass
 class _Entry:
     plan: IOPlan                      # first-compiled plan
@@ -104,6 +109,7 @@ class _Entry:
     totals: dict = field(default_factory=dict)   # arb key -> measured total
     best_knobs: tuple | None = None
     feedback: dict = field(default_factory=dict)
+    executor: object = _UNOBSERVED    # IOTimings.transport of the totals
     writes: int = 0
     refined: bool = False
 
@@ -281,6 +287,18 @@ class IOSession:
         if entry is None:
             return
         entry.writes += 1
+        # measured totals are executor-relative: the in-process
+        # executors report MODELED time, the mp transport reports
+        # wall-clock. If the backend that produced this measurement
+        # differs from the one whose totals the entry holds, the stored
+        # numbers are incomparable with the new one — arbitrating
+        # across them would crown a plan on the wrong clock. Drop them
+        # and start the arbiter fresh on the new executor's scale.
+        ident = getattr(timings, "transport", None)
+        if entry.executor is not _UNOBSERVED and entry.executor != ident:
+            entry.totals.clear()
+            entry.best_knobs = None
+        entry.executor = ident
         ak = _arb_key(plan, serve_map)
         entry.plans.setdefault(ak, plan)
         if serve_map is not None:

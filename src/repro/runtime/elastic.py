@@ -83,7 +83,11 @@ def find_restart_step(directory: str | Path) -> int | None:
     * a step with a ``.partial`` marker on any segment — a drain torn
       mid-segment (core.faults);
     * a non-empty checkpoint with no segment files at all — a manifest
-      that outlived its segments (e.g. manual deletion).
+      that outlived its segments (e.g. manual deletion);
+    * a non-empty checkpoint whose segment files are ALL zero-length —
+      created-but-never-written segments (a drain killed between
+      ``open()`` and the first write, or a truncation) hold none of the
+      manifest's bytes, exactly like the no-segments case above.
 
     Returns ``None`` when no restorable checkpoint exists. This is the
     restart-side counterpart of ``CheckpointManager.latest_step`` with
@@ -102,7 +106,12 @@ def find_restart_step(directory: str | Path) -> int | None:
             manifest = json.loads(mpath.read_text())
         except (ValueError, OSError):
             continue
-        if manifest.get("file_len", 0) > 0 and not segs:
-            continue
+        if manifest.get("file_len", 0) > 0:
+            try:
+                sizes = [p.stat().st_size for p in segs]
+            except OSError:
+                continue       # a segment vanished under us: not this one
+            if not segs or all(sz == 0 for sz in sizes):
+                continue
         return int(manifest["step"])
     return None

@@ -44,6 +44,14 @@ codec {None, rle} x depth {1, 2} — and every single run must
 reproduce the ``write_reference`` oracle bytes exactly, so the two
 backends are compared on inputs nobody hand-picked.
 
+Transport (PR 10): seed 0's pattern additionally runs through the MP
+transport executor (``checkpoint.mp_exec`` — real worker processes,
+shared-memory fast hop, localhost-socket slow hop) under placement
+{off, swapped} x codec {None, rle} x depth {1, 2} for two-phase
+writes, a combined-frame TAM write, and node-cache on/off reads — all
+byte-identical to the same oracle, so all THREE byte movers agree on
+inputs nobody hand-picked.
+
 Read direction (PR 8): the planner no longer nulls ``kernel_fusion``
 for reads, so every (codec x depth) reader also runs FUSED
 (``zero_skip_decode`` replacing the rle decode scatter inside the read
@@ -553,6 +561,44 @@ def main():
                           f"{codec or 'raw'}_k{k}_delivery_conserved",
                           tr[True].cache_hits + tr[True].cache_misses
                           == tr[False].cache_misses)
+        # the mp transport runs the SAME plans on real worker
+        # processes (arena fast hop, socket slow hop) — byte identity
+        # against the oracle across placement x codec x depth, both
+        # directions. One seed only: each run forks a process fleet,
+        # and the per-combination coverage above already rotates
+        # patterns across seeds.
+        if seed == 0:
+            for pi2, pl in enumerate((None, (1, 0))):
+                ptag = ("off", "swap")[pi2]
+                for codec in (None, "rle"):
+                    for k in (1, 2):
+                        path = f"{hd}/mp_{ptag}_{codec or 'raw'}_{k}"
+                        hio.write(breqs, path, method="twophase",
+                                  cb_bytes=128, pipeline_depth=k,
+                                  slow_hop_codec=codec, placement=pl,
+                                  transport="mp")
+                        check(f"fuzz{seed}/mp/{ptag}_{codec or 'raw'}"
+                              f"_k{k}_vs_oracle",
+                              np.array_equal(
+                                  hio.read_file(path, FILE_LEN * 4),
+                                  ref_bytes))
+            path = f"{hd}/mp_tam"
+            hio.write(breqs, path, method="tam", local_aggregators=2,
+                      cb_bytes=128, pipeline_depth=2,
+                      slow_hop_codec="rle", placement=(1, 0),
+                      transport="mp")
+            check(f"fuzz{seed}/mp/tam_swap_rle_k2_vs_oracle",
+                  np.array_equal(hio.read_file(path, FILE_LEN * 4),
+                                 ref_bytes))
+            for nc in (True, False):
+                outs, tmp_t = hio.read(
+                    rreqs, f"{hd}/mp_off_rle_2", cb_bytes=128,
+                    pipeline_depth=2, slow_hop_codec="rle",
+                    node_cache=nc, transport="mp")
+                check(f"fuzz{seed}/mp_read/rle_k2_cache{int(nc)}"
+                      f"_vs_oracle",
+                      all(np.array_equal(a, b)
+                          for a, b in zip(outs, exp)))
 
     # overflow observability: one rank pushes 2x identical 32-element
     # requests into one 32-element window -> 64 elems > the round

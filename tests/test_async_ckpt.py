@@ -169,6 +169,69 @@ def test_find_restart_step_skips_uncommitted_and_torn(tmp_path):
     assert find_restart_step(tmp_path) == 10
 
 
+def test_failed_drain_then_save_async_succeeds(tmp_path):
+    """The one-in-flight slot must not wedge on a dead future: a drain
+    that failed (and was observed through the future) is dropped by the
+    next save_async's barrier, which then launches normally."""
+    t = tree()
+    mgr = CheckpointManager(tmp_path, small_io(), method="twophase")
+    mgr.save(t, 10)
+    pending = mgr.save_async(t, 20, faults=FaultSpec(lost={(0, 0): 99}))
+    with pytest.raises(UnrecoverableFaultError):
+        pending.wait()
+    # observed-once: the next save_async must NOT re-raise, must clear
+    # the dead future from the slot, and must commit its own step
+    p2 = mgr.save_async(t, 30)
+    assert p2 is not pending
+    assert mgr.pending is p2
+    p2.result()
+    assert mgr.latest_step() == 30
+    # and the unobserved flavor surfaces exactly once before recovering
+    mgr.save_async(t, 40, faults=FaultSpec(lost={(0, 0): 99}))
+    with pytest.raises(UnrecoverableFaultError):
+        mgr.save_async(t, 50)
+    mgr.save_async(t, 60).result()
+    assert mgr.latest_step() == 60
+
+
+def test_interrupted_barrier_keeps_live_future(tmp_path):
+    """An interrupt while WAITING on a live drain must not clear the
+    slot: the drain is still running, and dropping the future would let
+    the next save_async start a second concurrent write."""
+    mgr = CheckpointManager(tmp_path, small_io(), method="twophase")
+    stuck = PendingCheckpoint(tmp_path / "never", 0, 0.0)
+    stuck.wait = lambda timeout=None: (_ for _ in ()).throw(
+        KeyboardInterrupt())
+    mgr.pending = stuck
+    with pytest.raises(KeyboardInterrupt):
+        mgr.block_until_done()
+    assert mgr.pending is stuck     # live drain not orphaned
+    # once the drain actually finishes, the barrier clears the slot
+    del stuck.wait                  # restore the real method
+    from repro.checkpoint.host_io import IOTimings
+    stuck._finish({"step": 0}, IOTimings())
+    mgr.block_until_done()
+    assert mgr.pending is None
+
+
+def test_find_restart_step_skips_all_zero_length_segments(tmp_path):
+    """Created-but-never-written segments hold none of the manifest's
+    bytes — a step whose segment files are all empty is as dead as one
+    with no segment files at all."""
+    t = tree()
+    mgr = CheckpointManager(tmp_path, small_io(), method="tam",
+                            local_aggregators=4)
+    mgr.save(t, 10)
+    mgr.save(t, 20)
+    for seg in tmp_path.glob("ckpt_00000020.seg*"):
+        seg.write_bytes(b"")
+    assert find_restart_step(tmp_path) == 10
+    # one segment holding bytes again re-qualifies the step (the
+    # all-zero disqualifier is all-or-nothing, like the no-segments one)
+    (tmp_path / "ckpt_00000020.seg0").write_bytes(b"\x01" * 8)
+    assert find_restart_step(tmp_path) == 20
+
+
 def test_find_restart_step_empty_dir(tmp_path):
     assert find_restart_step(tmp_path) is None
     (tmp_path / "ckpt_00000010.seg0").write_bytes(b"orphan")

@@ -16,7 +16,8 @@ from repro.core.plan import (IOConfig, _default_workload, compile_plan,
 
 EXPECTED_ORDER = ("normalize_layout", "resolve_codec", "resolve_method",
                   "resolve_placement", "resolve_cb_and_depth",
-                  "coalesce_windows", "validate", "lower_kernels")
+                  "coalesce_windows", "validate", "lower_kernels",
+                  "resolve_transport")
 
 
 def _ctx(layout, cfg, n_aggregators=2, n_nodes=2, n_ranks=8):
@@ -134,6 +135,22 @@ def test_lower_kernels_rules():
         compile_plan(layout,
                      dataclasses.replace(fused, kernel_fusion="warp"),
                      **kw)
+
+
+def test_resolve_transport_rules():
+    layout = contiguous_layout(320, 2)
+    kw = dict(n_aggregators=2, n_nodes=2, n_ranks=8)
+    mp = IOConfig(req_cap=8, data_cap=64, cb_buffer_size=32,
+                  transport="mp")
+    assert compile_plan(layout, mp, **kw).transport == "mp"
+    # the default stays in-process (no transport) in both directions
+    plain = IOConfig(req_cap=8, data_cap=64, cb_buffer_size=32)
+    assert compile_plan(layout, plain, **kw).transport is None
+    assert compile_plan(layout, mp, direction="read",
+                        **kw).transport == "mp"
+    with pytest.raises(ValueError, match="transport"):
+        compile_plan(layout,
+                     dataclasses.replace(mp, transport="rdma"), **kw)
 
 
 def test_plan_diff_and_describe():

@@ -143,6 +143,43 @@ def test_pipeline_output_feeds_cache_key_deterministically():
     assert dataclasses.replace(p3, kernel_fusion=None) == p1
 
 
+def test_executor_switch_invalidates_measured_totals(tmp_path):
+    """Regression: an entry whose measured totals came from one
+    executor must not arbitrate a measurement from another against
+    them. The in-process executors report MODELED time and the mp
+    transport reports wall-clock — incomparable scales; before the fix
+    the stale incumbent kept the crown on the wrong clock and the
+    session could pin a plan that never measured best on the executor
+    actually running."""
+    from repro.checkpoint.host_io import IOTimings
+    from repro.core.session import _arb_key
+    s = IOSession()
+    io = _io(s)
+    reqs = e3sm_g_pattern(io.n_ranks)
+    io.write(reqs, str(tmp_path / "a"), method="twophase", cb_bytes=1024)
+    (key,) = list(s._entries)
+    entry = s.entry(key)
+    assert entry.executor is None          # in-process executor identity
+    assert entry.totals                    # modeled totals ingested
+    plan = entry.plan
+    # a wall-clock measurement "from" the mp executor, numerically much
+    # larger than the modeled totals it must never be compared with
+    fake = IOTimings()
+    fake.transport = "mp"
+    fake.io = 123.0
+    s.observe(key, plan, fake)
+    assert entry.executor == "mp"
+    assert list(entry.totals.values()) == [pytest.approx(123.0)]
+    assert entry.best_knobs == _arb_key(plan, None)
+    # switching back drops the mp total symmetrically
+    back = IOTimings()
+    back.io = 1.0
+    s.observe(key, plan, back)
+    assert entry.executor is None
+    assert list(entry.totals.values()) == [pytest.approx(1.0)]
+    assert entry.best_knobs == _arb_key(plan, None)
+
+
 def test_checkpoint_manager_holds_a_session(tmp_path):
     tree = {"w": np.arange(4096, dtype=np.float32),
             "b": np.ones(1024, np.float32)}
